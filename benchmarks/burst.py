@@ -1,0 +1,42 @@
+"""Paper Figure 7: burst scenario — every request arrives at t=0.
+
+The paper's observation: TRAIL still wins (it ranks running+waiting by
+predicted remaining length) but preemption stops mattering, so C=0.8 and
+C=1 coincide."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from repro.config import get_config
+from repro.serving.engine import run_policy
+from repro.serving.workload import WorkloadConfig, generate
+
+
+def run(quick: bool = True):
+    cfg = get_config("granite-3-8b")
+    n = 150 if quick else 400
+    wc = WorkloadConfig(n_requests=n, request_rate=1.0, burst=True, seed=5,
+                        vocab=cfg.vocab_size)
+    reqs = generate(wc)
+    systems = [("vllm-fcfs", "fcfs", 0.8), ("vllm-sjf-bert", "sjf", 0.8),
+               ("trail-c0.8", "trail", 0.8), ("trail-c1.0", "trail", 1.0)]
+    results = {}
+    for name, pol, c in systems:
+        s = run_policy(cfg, pol, reqs, c_limit=c, max_batch=16,
+                       mode="sim", seed=6)
+        r = s.summary()
+        results[name] = r
+        emit(f"fig7.{name}", r["mean_latency"] * 1e6,
+             f"med_lat={r['median_latency']:.3f};"
+             f"mean_ttft={r['mean_ttft']:.3f};preempt={r['preemptions']}")
+    same = abs(results["trail-c0.8"]["mean_latency"]
+               - results["trail-c1.0"]["mean_latency"])
+    rel = same / max(results["trail-c1.0"]["mean_latency"], 1e-9)
+    emit("fig7.c08_vs_c10_gap", 0.0,
+         f"relative_gap={rel:.3f} (paper: ~0 under burst)")
+    save_json("burst", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,40 @@
+"""Paper Figure 5: mean latency and TTFT across C (0.2/0.5/0.8/1.0) at
+request rate 14, plus the memory axis that motivates limited preemption.
+
+Run under a finite KV budget so preemption cost (discard-and-recompute) is
+visible — the regime where the paper's C=0.8 beats C=1.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from repro.config import get_config
+from repro.serving.engine import run_policy
+from repro.serving.kv_cache import bytes_for_context
+from repro.serving.workload import WorkloadConfig, generate
+
+
+def run(quick: bool = True):
+    cfg = get_config("granite-3-8b")
+    n = 200 if quick else 600
+    wc = WorkloadConfig(n_requests=n, request_rate=14.0, seed=1,
+                        vocab=cfg.vocab_size)
+    reqs = generate(wc)
+    # tight budget: preemption's discard-and-recompute cost must bite for
+    # the paper's "limit preemption" effect (Fig 5) to be visible
+    budget = 10 * bytes_for_context(cfg, 320)
+    results = {}
+    for c in (0.2, 0.5, 0.8, 1.0):
+        s = run_policy(cfg, "trail", reqs, c_limit=c, max_batch=48,
+                       mem_budget=budget, mode="sim", seed=2)
+        r = s.summary()
+        results[c] = r
+        emit(f"fig5.c={c}", r["mean_latency"] * 1e6,
+             f"mean_ttft={r['mean_ttft']:.3f};preempt={r['preemptions']};"
+             f"recompute={r['recomputed_tokens']}")
+    save_json("c_sweep", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

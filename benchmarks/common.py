@@ -1,0 +1,32 @@
+"""Shared helpers for the paper-artifact benchmarks."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "results")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def save_json(name: str, payload) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 5):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt

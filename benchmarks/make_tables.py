@@ -1,0 +1,112 @@
+"""Render the §Dry-run and §Roofline markdown tables into EXPERIMENTS.md
+from experiments/dryrun/*.json. Run after both dry-run sweeps."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "experiments", "dryrun")
+
+
+def fmt(v, unit=""):
+    return f"{v:.3g}{unit}"
+
+
+def load(mesh):
+    out = []
+    for f in sorted(glob.glob(os.path.join(DRY, f"*_{mesh}.json"))):
+        out.append(json.load(open(f)))
+    return out
+
+
+def dryrun_table():
+    lines = ["| arch × shape | mesh | HBM GB/dev | lower s | compile s | status |",
+             "|---|---|---|---|---|---|"]
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(mesh):
+            tag = f"{r['arch']} × {r['shape']}"
+            if "skipped" in r:
+                lines.append(f"| {tag} | {mesh} | — | — | — | skip (long_500k "
+                             "rule) |")
+            elif "error" in r:
+                lines.append(f"| {tag} | {mesh} | — | — | — | ERROR |")
+            else:
+                lines.append(
+                    f"| {tag} | {mesh} | "
+                    f"{r['memory']['peak_per_device_gb']:.2f} | "
+                    f"{r['lower_s']} | {r['compile_s']} | ok |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    lines = ["| arch × shape | compute s | memory s | collective s | "
+             "bottleneck | MODEL_FLOPS | useful | note |",
+             "|---|---|---|---|---|---|---|---|"]
+    notes = {
+        ("qwen1.5-32b", "decode_32k"): "cache 21.5 GB/dev: > v5e HBM (§Perf C)",
+        ("arctic-480b", "train_4k"): "FSDP-bandwidth-bound (§Perf A3)",
+    }
+    for r in load("16x16"):
+        if "skipped" in r or "error" in r:
+            continue
+        rl = r["roofline"]
+        note = notes.get((r["arch"], r["shape"]), "")
+        lines.append(
+            f"| {r['arch']} × {r['shape']} | {rl['compute_s']:.2e} | "
+            f"{rl['memory_s']:.2e} | {rl['collective_s']:.2e} | "
+            f"**{rl['bottleneck']}** | {rl['model_flops']:.2e} | "
+            f"{rl['useful_flops_ratio']:.2f} | {note} |")
+    lines.append("")
+    lines.append(REMEDIES)
+    return "\n".join(lines)
+
+
+REMEDIES = """\
+**What would move each dominant term down** (per case class; `useful` > 1
+reflects the while-loop undercount in raw HLO flops — DESIGN.md §9b —
+while < 1 flags remat/dispatch overhead):
+
+* *collective-bound train/prefill (all dense + MoE archs)*: FSDP per-layer
+  weight all-gather + f32 grad all-reduce dominates — remedies in order of
+  leverage: (1) reduce-scatter grads instead of all-reduce (GSPMD emits the
+  2×-worse form here; §Perf A3), (2) larger global batch amortizes weight
+  traffic linearly, (3) overlap gathers with the previous layer's compute
+  (XLA latency-hiding scheduler on real TPU), (4) bf16 grads with f32
+  accumulation halves reduce bytes.
+* *collective-bound MoE (arctic/olmoe)*: above plus the token<->expert
+  all-to-all; shard-local dispatch already applied (§Perf A1); the next
+  step is a shard_map hand-written a2a that skips GSPMD's resharding pair.
+* *collective-bound decode (gemma3/hymba/mamba2/paligemma/gemma2)*: small
+  absolute terms (ms); dominated by TP all-reduces of per-layer outputs —
+  fuse QKV+O projections per block or widen to per-arch TP degree < 16.
+* *memory-bound decode (qwen/olmoe/granite w/ int8)*: cache-resident floor;
+  int8 KV (§Perf C2) halves it, further wins need smaller batch shards or
+  KV windowing.
+* *memory-bound SSM train (mamba2 38 GB/dev)*: the chunked-SSD decay tensor
+  (B,nc,Q,Q,nh) is the live set — recompute it in the backward (remat over
+  the chunk loop) or drop Q to 64.
+* *memory-bound long_500k (gemma2 21.7 GB/dev)*: global-layer KV at 500k,
+  batch=1 prevents data sharding — int8 KV brings it under HBM; or ring
+  attention over the pod axis.
+* *multi-pod anomaly*: olmoe prefill/train regress at 2 pods (31/92 s
+  collective vs 11/31 s single-pod): with 32-way batch shards the per-shard
+  expert capacity drops below the load-balance floor and GSPMD re-gathers
+  dispatch buffers across pods — fix is pod-local dispatch with a pod-level
+  combine, left as the next iteration."""
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    text = re.sub(r"<!-- DRYRUN-TABLE -->", dryrun_table(), text)
+    text = re.sub(r"<!-- ROOFLINE-TABLE -->", roofline_table(), text)
+    open(path, "w").write(text)
+    print("tables written")
+
+
+if __name__ == "__main__":
+    main()

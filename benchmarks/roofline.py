@@ -1,0 +1,53 @@
+"""Roofline table: reads experiments/dryrun/*.json (written by
+repro.launch.dryrun) and prints the per-(arch x shape x mesh) three-term
+roofline with the dominant bottleneck — EXPERIMENTS.md section Roofline."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_json
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_reports(d: str = DRYRUN_DIR) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def run(quick: bool = True):
+    reports = load_reports()
+    ok = skipped = failed = 0
+    rows = {}
+    for rep in reports:
+        tag = f"{rep['arch']}_{rep['shape']}_{rep['mesh']}"
+        if "skipped" in rep:
+            skipped += 1
+            continue
+        if "error" in rep:
+            failed += 1
+            emit(f"roofline.{tag}", 0.0, "ERROR")
+            continue
+        ok += 1
+        r = rep["roofline"]
+        rows[tag] = r
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline.{tag}", dom * 1e6,
+             f"bottleneck={r['bottleneck']};compute={r['compute_s']:.2e};"
+             f"memory={r['memory_s']:.2e};coll={r['collective_s']:.2e};"
+             f"useful={r['useful_flops_ratio']:.2f};"
+             f"hbm_gb={rep['memory']['peak_per_device_gb']:.2f}")
+    emit("roofline.summary", 0.0, f"ok={ok};skipped={skipped};failed={failed}")
+    save_json("roofline_table", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

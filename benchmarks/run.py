@@ -1,0 +1,66 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks.common.emit) and
+writes JSON payloads under experiments/results/.
+
+  pred_accuracy   — Figures 2/3/4 (MAE per layer, refined vs BERT, heatmap)
+  probe_tps       — Table 1 (probe inference microseconds/sample)
+  c_sweep         — Figure 5 (C = 0.2/0.5/0.8/1.0 at rate 14)
+  serving_curves  — Figure 6 (4 systems x request rates)
+  burst           — Figure 7 (burst arrivals)
+  memory_sim      — Appendix D + Lemma 1 (sim vs closed form)
+  roofline        — section Roofline table from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (burst, c_sweep, extensions, memory_sim,
+                        pred_accuracy, probe_tps, roofline, serving_curves)
+from benchmarks.common import emit
+
+MODULES = [
+    ("probe_tps", probe_tps.run),
+    ("memory_sim", memory_sim.run),
+    ("c_sweep", c_sweep.run),
+    ("serving_curves", serving_curves.run),
+    ("burst", burst.run),
+    ("pred_accuracy", pred_accuracy.run),
+    ("extensions", extensions.run),
+    ("roofline", roofline.run),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-sized workloads (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = 0
+    for name, fn in MODULES:
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            fn(quick=not args.full)
+            emit(f"{name}.wall_s", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            emit(f"{name}.wall_s", (time.time() - t0) * 1e6,
+                 f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

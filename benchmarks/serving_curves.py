@@ -1,0 +1,55 @@
+"""Paper Figure 6: mean/median latency and TTFT vs request rate for the four
+systems — vLLM-FCFS, vLLM-SJF_BERT, TRAIL (refined embeddings, C=0.8),
+TRAIL-BERT (prompt-only predictions, C=0.8)."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, save_json
+from repro.config import get_config
+from repro.serving.engine import run_policy
+from repro.serving.predictors import OraclePredictor
+from repro.serving.workload import WorkloadConfig, generate
+
+SYSTEMS = {
+    "vllm-fcfs": dict(policy="fcfs"),
+    "vllm-sjf-bert": dict(policy="sjf"),
+    "trail": dict(policy="trail"),
+    "trail-bert": dict(policy="trail-bert"),
+}
+
+
+def run(quick: bool = True):
+    cfg = get_config("granite-3-8b")
+    rates = (10.0, 14.0, 18.0) if quick else (6.0, 10.0, 14.0, 18.0, 22.0)
+    n = 200 if quick else 600
+    results = {}
+    for rate in rates:
+        wc = WorkloadConfig(n_requests=n, request_rate=rate, seed=3,
+                            vocab=cfg.vocab_size)
+        reqs = generate(wc)
+        for name, kw in SYSTEMS.items():
+            # trail-bert gets no refinement (prompt-only regime)
+            pred = OraclePredictor(cfg.probe, seed=4,
+                                   refine=(name == "trail"))
+            s = run_policy(cfg, kw["policy"], reqs, c_limit=0.8,
+                           max_batch=16, mode="sim", seed=4, predictor=pred)
+            r = s.summary()
+            results[f"{name}@{rate}"] = r
+            emit(f"fig6.{name}.rate={rate}", r["mean_latency"] * 1e6,
+                 f"med_lat={r['median_latency']:.3f};"
+                 f"mean_ttft={r['mean_ttft']:.3f};"
+                 f"med_ttft={r['median_ttft']:.3f}")
+    # headline ratios at the paper's operating point
+    base = results.get("vllm-fcfs@14.0")
+    trail = results.get("trail@14.0")
+    if base and trail:
+        emit("fig6.headline", 0.0,
+             f"latency_ratio={base['mean_latency']/trail['mean_latency']:.2f}x;"
+             f"ttft_ratio={base['mean_ttft']/max(trail['mean_ttft'],1e-9):.2f}x"
+             " (paper: 1.66-2.01x / 1.76-24.07x)")
+    save_json("serving_curves", results)
+    return results
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,38 @@
+"""Paper Figure 6 in miniature: the four serving systems across request
+rates on a Llama-8B-class model under the v5e roofline cost model.
+
+    PYTHONPATH=src python examples/policy_comparison.py [--rates 10 14 18]
+"""
+
+import argparse
+
+from repro.config import get_config
+from repro.serving.engine import run_policy
+from repro.serving.predictors import OraclePredictor
+from repro.serving.workload import WorkloadConfig, generate
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rates", type=float, nargs="+", default=[10.0, 14.0, 18.0])
+ap.add_argument("--n", type=int, default=250)
+args = ap.parse_args()
+
+cfg = get_config("granite-3-8b")
+print(f"arch: {cfg.name} ({cfg.param_count()/1e9:.1f}B params), "
+      "cost model: TPU v5e")
+header = f"{'rate':>5} | " + " | ".join(
+    f"{s:>22}" for s in ("vllm-fcfs", "vllm-sjf-bert", "trail-bert", "trail"))
+print(header)
+print("-" * len(header))
+for rate in args.rates:
+    wc = WorkloadConfig(n_requests=args.n, request_rate=rate, seed=1,
+                        vocab=cfg.vocab_size)
+    reqs = generate(wc)
+    cells = []
+    for name, pol in (("vllm-fcfs", "fcfs"), ("vllm-sjf-bert", "sjf"),
+                      ("trail-bert", "trail-bert"), ("trail", "trail")):
+        pred = OraclePredictor(cfg.probe, seed=2, refine=(name == "trail"))
+        r = run_policy(cfg, pol, reqs, c_limit=0.8, max_batch=16,
+                       mode="sim", seed=2, predictor=pred).summary()
+        cells.append(f"lat {r['mean_latency']:6.2f}s ttft {r['mean_ttft']:5.2f}s")
+    print(f"{rate:5.1f} | " + " | ".join(f"{c:>22}" for c in cells))
+print("(mean latency / mean TTFT; lower is better)")

@@ -1,0 +1,47 @@
+"""Quickstart: build a model, prefill a prompt, decode with the fused TRAIL
+probe, and watch the refined remaining-length prediction evolve.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_smoke_config
+from repro.core.bins import bin_means
+from repro.core.smoothing import bayes_update, transition_matrix
+from repro.models.model import build_model
+
+cfg = get_smoke_config("trail-llama")
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+print(f"model: {cfg.name}  layers={cfg.num_layers} d={cfg.d_model} "
+      f"probe tap=layer {cfg.probe.tap_layer}")
+
+# --- prefill a batch of two prompts -----------------------------------------
+B, P = 2, 12
+prompts = jax.random.randint(jax.random.key(1), (B, P), 4, cfg.vocab_size)
+cache = model.init_cache(B, max_len=64)
+logits, cache, tap_sum, n_tok = model.prefill_chunk(params, cache, prompts)
+print(f"prefill: cache lengths = {np.asarray(cache['lengths'])}")
+
+# prompt-phase probe input: mean of prompt-token taps (paper Section 3.1)
+from repro.core.predictor import apply_probe
+tap_mean = tap_sum / n_tok[:, None]
+q = jax.nn.softmax(apply_probe(params["probe"], tap_mean), -1)
+
+# --- decode 8 tokens, refining the posterior each iteration ------------------
+T = jnp.asarray(transition_matrix(cfg.probe), jnp.float32)
+m = jnp.asarray(bin_means(cfg.probe), jnp.float32)
+tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+for step in range(8):
+    logits, cache, tap, probe_logits = model.decode_step(params, cache, tok)
+    p = jax.nn.softmax(probe_logits, -1)
+    q = bayes_update(q, p, T)                       # Bayesian refinement
+    pred_remaining = q @ m
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    print(f"step {step}: tokens={np.asarray(tok[:, 0])} "
+          f"pred_remaining={np.round(np.asarray(pred_remaining), 1)}")
+
+print("done — predictions refine every iteration at ~0.03% extra FLOPs")

@@ -1,0 +1,62 @@
+"""End-to-end serving driver (deliverable b): trains a small model, then
+serves a batched Poisson workload REALLY running the model on CPU —
+continuous batching, chunked prefill, SPRPT-limited-preemption scheduling,
+and the fused embedding probe — comparing TRAIL against vLLM-style FCFS.
+
+    PYTHONPATH=src python examples/serve_trail.py [--n 16]
+"""
+
+import argparse
+
+import jax
+
+from repro.config import get_smoke_config
+from repro.models.model import build_model
+from repro.serving.engine import run_policy
+from repro.serving.predictors import ProbePredictor
+from repro.serving.workload import WorkloadConfig, generate
+from repro.training import optimizer as opt_mod
+from repro.training.data import DataConfig, batches, harvest_probe_data
+from repro.training.train import ProbeTrainConfig, train_lm, train_probe
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--n", type=int, default=16)
+ap.add_argument("--rate", type=float, default=60.0)
+ap.add_argument("--train-steps", type=int, default=60)
+args = ap.parse_args()
+
+cfg = get_smoke_config("trail-llama")
+model = build_model(cfg)
+params = model.init(jax.random.key(0))
+
+print("== training the serving model briefly ==")
+dc = DataConfig(vocab=cfg.vocab_size, seq_len=64, batch=8, prompt_mean=8,
+                max_out=24, seed=0)
+ocfg = opt_mod.AdamWConfig(lr=3e-3, warmup_steps=5,
+                           total_steps=args.train_steps)
+params, _, _ = train_lm(model, params, batches(dc, args.train_steps), ocfg,
+                        args.train_steps)
+
+print("== training the probe on harvested embeddings ==")
+taps, rem = harvest_probe_data(model, params, dc, 5)
+probe_params, _ = train_probe(taps, rem, cfg.probe, cfg.d_model,
+                              ProbeTrainConfig(epochs=5))
+params = dict(params)
+params["probe"] = probe_params
+
+wc = WorkloadConfig(n_requests=args.n, request_rate=args.rate, seed=3,
+                    vocab=cfg.vocab_size, prompt_mean=8.0, out_median=8.0,
+                    max_out=24)
+reqs = generate(wc)
+print(f"== serving {args.n} requests (real decode on CPU) ==")
+for pol in ("fcfs", "trail"):
+    pred = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                          embed_table=params["embed"])
+    s = run_policy(cfg, pol, reqs, max_batch=4, mode="real", model=model,
+                   params=params, predictor=pred)
+    r = s.summary()
+    print(f"  {pol:6s}: mean_latency {r['mean_latency']*1e3:8.2f} ms "
+          f"mean_ttft {r['mean_ttft']*1e3:7.2f} ms "
+          f"preemptions {r['preemptions']:3d} "
+          f"(simulated v5e clock; {r['iterations']} iterations)")
+print("done — TRAIL ranks by refined predictions and limits preemption")

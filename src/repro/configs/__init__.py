@@ -1,0 +1,1 @@
+"""Per-architecture configs. Each module exports CONFIG (full) and SMOKE (reduced)."""

@@ -1,0 +1,9 @@
+"""TRAIL core: the paper's contribution.
+
+  predictor   — probe MLP on recycled layer embeddings (Section 3.1)
+  smoothing   — Bayesian per-iteration refinement (Section 3.1, Appendix A)
+  bins        — length-bin geometry shared by predictor/smoothing
+  scheduler   — SPRPT with limited preemption (Section 3.3)
+  queueing    — Lemma 1 closed form via SOAP terms (Appendix C)
+  simulation  — M/G/1 discrete-event simulator w/ memory tracking (Appendix D)
+"""

@@ -1,0 +1,40 @@
+"""Length-bin geometry (paper Section 3.1).
+
+k equal-width bins over [0, max_len]; bin i covers
+[max_len*i/k, max_len*(i+1)/k) with mean m_i = (b_i + b_{i+1})/2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ProbeConfig
+
+
+def bin_edges(pc: ProbeConfig) -> np.ndarray:
+    return np.linspace(0.0, pc.max_len, pc.num_bins + 1)
+
+
+def bin_means(pc: ProbeConfig) -> np.ndarray:
+    e = bin_edges(pc)
+    return (e[:-1] + e[1:]) / 2.0
+
+
+def bin_index(lengths, pc: ProbeConfig):
+    """Map remaining-length values to bin ids (clipped into range)."""
+    idx = jnp.floor_divide(jnp.asarray(lengths), pc.bin_width).astype(jnp.int32)
+    return jnp.clip(idx, 0, pc.num_bins - 1)
+
+
+def log_bin_edges(pc: ProbeConfig) -> np.ndarray:
+    """Beyond-paper: logarithmic bins (paper Section 6 future work)."""
+    e = np.geomspace(1.0, pc.max_len, pc.num_bins)
+    return np.concatenate([[0.0], e])
+
+
+def bin_index_log(lengths, pc: ProbeConfig):
+    e = log_bin_edges(pc)
+    idx = jnp.searchsorted(jnp.asarray(e[1:-1]), jnp.asarray(lengths),
+                           side="right")
+    return jnp.clip(idx, 0, pc.num_bins - 1).astype(jnp.int32)

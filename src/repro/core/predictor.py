@@ -1,0 +1,53 @@
+"""The probe: remaining-output-length classifier on recycled embeddings.
+
+Paper Section 3.1: a 2-layer MLP (d_model -> 512 -> k bins, ReLU) applied to
+the tap layer's hidden state of the *serving model itself*:
+  * prompt phase: input = mean of all prompt-token embeddings at the tap layer
+  * decode phase: input = the embedding of the token just generated
+
+This module also implements the prompt-only baseline predictor ("BERT" in the
+paper: a one-shot classifier that sees only the prompt). Offline we cannot
+ship a pretrained DistilBERT, so the baseline is the same probe architecture
+reading the *first* (embedding-layer) representation of the prompt — the same
+information regime as S^3's BERT: prompt only, no recycling, no refinement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ProbeConfig
+
+
+def init_probe(key, d_model: int, pc: ProbeConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    s1, s2 = d_model ** -0.5, pc.hidden ** -0.5
+    return {
+        "w1": jax.random.normal(k1, (d_model, pc.hidden), jnp.float32) * s1,
+        "b1": jnp.zeros((pc.hidden,), jnp.float32),
+        "w2": jax.random.normal(k2, (pc.hidden, pc.num_bins), jnp.float32) * s2,
+        "b2": jnp.zeros((pc.num_bins,), jnp.float32),
+    }
+
+
+def apply_probe(p, x) -> jax.Array:
+    """x: (..., d_model) -> logits (..., num_bins). float32 throughout."""
+    h = jax.nn.relu(x.astype(jnp.float32) @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def probe_probs(p, x) -> jax.Array:
+    return jax.nn.softmax(apply_probe(p, x), axis=-1)
+
+
+def probe_loss(p, x, bin_labels) -> jax.Array:
+    """Cross-entropy over bins. x: (N,d); bin_labels: (N,) int32."""
+    logits = apply_probe(p, x)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, bin_labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def probe_accuracy(p, x, bin_labels) -> jax.Array:
+    return jnp.mean(jnp.argmax(apply_probe(p, x), -1) == bin_labels)

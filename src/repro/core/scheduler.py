@@ -1,0 +1,159 @@
+"""SPRPT with limited preemption (paper Section 3.3) + baseline policies.
+
+Rank function (Appendix C):
+
+    rank(x, r, a) = r - a   if a < a0 = floor(C * r0)
+                    -inf    otherwise  (non-preemptable: pinned to the batch)
+
+where r0 is the *initial* prediction (prompt-phase probe) that fixes the
+preemption budget, and the live rank uses the refined per-iteration
+prediction when available (TRAIL) or r0 - a (TRAIL-BERT).
+
+The scheduler is iteration-level: it is consulted after every decode
+iteration and returns the set of requests to run next, subject to a batch
+slot limit and a KV-memory budget.  Memory accounting is delegated to a
+``bytes_fn(entry) -> int`` callback so the engine can supply the arch-aware
+cost (dense KV grows with age; SSM state is O(1); sliding-window caches
+clamp at the window — see DESIGN.md section 4).
+
+Policies:
+  fcfs        — arrival order, never preempt (vanilla vLLM)
+  sjf         — shortest *initial* prediction first among waiting;
+                running jobs are never preempted (vLLM-SJF_BERT)
+  srpt        — SPRPT, unlimited preemption (TRAIL with C=1)
+  trail       — SPRPT-LP with refined predictions (the paper's system)
+  trail-bert  — SPRPT-LP with static prompt-only predictions
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from enum import Enum
+
+NEG_INF = float("-inf")
+
+POLICIES = ("fcfs", "sjf", "srpt", "trail", "trail-bert", "mlfq")
+
+# FastServe-style MLFQ (Wu et al. 2023, the paper's related-work baseline):
+# priority queues by quantum thresholds on served tokens; a request demotes
+# one level each time it exhausts its quantum. Prediction-free.
+MLFQ_QUANTA = (16, 64, 256, 1024)
+
+
+def mlfq_level(age: int) -> int:
+    served = 0
+    for lvl, q in enumerate(MLFQ_QUANTA):
+        served += q
+        if age < served:
+            return lvl
+    return len(MLFQ_QUANTA)
+
+
+class ReqState(Enum):
+    WAITING = "waiting"      # never started (no cache footprint)
+    RUNNING = "running"      # in the current batch
+    PREEMPTED = "preempted"  # started, kicked out, cache discarded
+    FINISHED = "finished"
+
+
+@dataclass
+class SchedEntry:
+    """Host-side scheduling metadata for one request."""
+    rid: int
+    arrival: float
+    prompt_len: int
+    r0: float = 0.0               # initial predicted output length
+    pred_remaining: float = 0.0   # refined predicted remaining length
+    age: int = 0                  # output tokens generated so far
+    c_limit: float = 0.8          # the paper's C
+    state: ReqState = ReqState.WAITING
+    prefill_done: int = 0         # chunked-prefill progress (tokens)
+    finish_len: int = 0           # ground-truth output length (oracle/sim)
+    preemptions: int = 0
+    first_token_time: float = -1.0
+    finish_time: float = -1.0
+
+    @property
+    def a0(self) -> int:
+        return math.floor(self.c_limit * max(self.r0, 0.0))
+
+    @property
+    def preemptable(self) -> bool:
+        return self.age < self.a0
+
+    def rank(self, policy: str) -> float:
+        if policy == "fcfs":
+            return self.arrival
+        if policy == "sjf":
+            return self.r0
+        if policy == "mlfq":
+            return float(mlfq_level(self.age))     # FCFS tiebreak inside level
+        # prediction-based remaining-time ranks
+        if policy == "trail-bert":
+            r = self.r0 - self.age
+        elif policy in ("trail", "srpt"):
+            r = self.pred_remaining
+        else:
+            raise ValueError(f"unknown policy {policy!r}")
+        if policy != "srpt" and self.state is ReqState.RUNNING and not self.preemptable:
+            return NEG_INF           # pinned: past the preemption budget
+        return r
+
+
+@dataclass
+class Decision:
+    scheduled: list[int] = field(default_factory=list)   # rids to run
+    preempted: list[int] = field(default_factory=list)   # rids kicked out
+    admitted: list[int] = field(default_factory=list)    # rids newly started
+
+
+def select_batch(entries: dict[int, SchedEntry], *, policy: str,
+                 max_batch: int, mem_budget: int, bytes_fn) -> Decision:
+    """Pick the next iteration's batch.
+
+    Invariants (tested by hypothesis):
+      * non-preemptable RUNNING jobs are always scheduled (policy != fcfs/sjf
+        handles this via rank -inf; fcfs/sjf never preempt at all);
+      * |scheduled| <= max_batch and sum(bytes) <= mem_budget (pinned jobs
+        may alone exceed the budget only if they were admitted when it fit);
+      * no WAITING job is scheduled while a strictly lower-rank candidate
+        with room is left out (greedy by rank, FCFS tiebreak).
+    """
+    live = [e for e in entries.values()
+            if e.state in (ReqState.WAITING, ReqState.RUNNING,
+                           ReqState.PREEMPTED)]
+    if policy in ("fcfs", "sjf"):
+        # running jobs are immovable; waiting sorted by policy rank
+        running = sorted((e for e in live if e.state is ReqState.RUNNING),
+                         key=lambda e: e.arrival)
+        waiting = sorted((e for e in live if e.state is not ReqState.RUNNING),
+                         key=lambda e: (e.rank(policy), e.arrival))
+        ordered = running + waiting
+        must_keep = set(e.rid for e in running)
+    else:
+        ordered = sorted(live, key=lambda e: (e.rank(policy), e.arrival))
+        # srpt/mlfq = unlimited preemption: nothing is pinned
+        must_keep = set() if policy in ("srpt", "mlfq") else set(
+            e.rid for e in live
+            if e.state is ReqState.RUNNING and not e.preemptable)
+
+    decision = Decision()
+    used_mem = 0
+    used_slots = 0
+    for e in ordered:
+        cost = bytes_fn(e)
+        pinned = e.rid in must_keep
+        if not pinned and (used_slots + 1 > max_batch
+                           or used_mem + cost > mem_budget):
+            continue
+        decision.scheduled.append(e.rid)
+        used_slots += 1
+        used_mem += cost
+    sched = set(decision.scheduled)
+    for e in live:
+        if e.state is ReqState.RUNNING and e.rid not in sched:
+            decision.preempted.append(e.rid)
+        if e.state is not ReqState.RUNNING and e.rid in sched:
+            decision.admitted.append(e.rid)
+    return decision

@@ -1,0 +1,62 @@
+"""Bayesian per-iteration refinement of the probe's bin distribution.
+
+Paper Section 3.1 + Appendix A. The remaining length shrinks by one each
+iteration, so probability mass drifts from bin B_{i+1} into B_i at rate
+1/bin_size (uniform-within-bin assumption). The filter is:
+
+  q_prior(t) = T @ q(t-1)
+  q(t)(i)    = q_prior(t)(i) * p(t)(i) / sum_j q_prior(t)(j) * p(t)(j)
+
+with the bidiagonal transition matrix
+  T[i, i]   = 1 - 1/bin_size
+  T[i, i+1] = 1/bin_size          (drift from B_{i+1} to B_i)
+
+All functions are batched: q, p are (..., k).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ProbeConfig
+from repro.core.bins import bin_means
+
+
+def transition_matrix(pc: ProbeConfig) -> np.ndarray:
+    """Appendix A matrix; computed once from bin sizes."""
+    k = pc.num_bins
+    r = 1.0 / pc.bin_width
+    T = np.eye(k) * (1.0 - r)
+    for i in range(k - 1):
+        T[i, i + 1] = r
+    T[0, 0] = 1.0    # bin 0 absorbs (request finishes from B_0)
+    return T
+
+
+def bayes_update(q_prev, p_t, T) -> jax.Array:
+    """One filter step. q_prev, p_t: (..., k); T: (k, k). Returns q_t."""
+    prior = q_prev @ jnp.asarray(T, q_prev.dtype).T
+    post = prior * p_t
+    z = jnp.sum(post, axis=-1, keepdims=True)
+    return jnp.where(z > 0, post / jnp.maximum(z, 1e-30), prior)
+
+
+def expected_length(q, pc: ProbeConfig) -> jax.Array:
+    """L_t = sum_i q(i) * m_i  (paper Section 3.1)."""
+    m = jnp.asarray(bin_means(pc), q.dtype)
+    return q @ m
+
+
+def refine_sequence(p_seq, pc: ProbeConfig) -> jax.Array:
+    """Filter a whole prediction sequence (offline eval): p_seq (T,k) -> q (T,k)."""
+    T = jnp.asarray(transition_matrix(pc))
+
+    def step(q, p):
+        qn = bayes_update(q, p, T)
+        return qn, qn
+
+    q0 = p_seq[0]
+    _, qs = jax.lax.scan(step, q0, p_seq[1:])
+    return jnp.concatenate([q0[None], qs], axis=0)

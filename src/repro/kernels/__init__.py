@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+Each kernel ships three pieces:
+  <name>.py — pl.pallas_call + BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrappers (interpret=True off-TPU)
+  ref.py    — pure-jnp oracles used by tests and the dry-run path
+
+Kernels:
+  flash_attention — blocked causal FA (GQA, sliding window, logit softcap)
+  decode_attention — flash-decode over a slot KV cache (the decode_32k /
+                     long_500k hot loop)
+  ssd_scan        — Mamba2 chunked state-space-dual scan
+  probe           — the paper's fused probe MLP + softmax + Bayesian update
+"""

@@ -1,0 +1,110 @@
+"""Flash-decode over a slot KV cache (Pallas TPU).
+
+The decode hot loop: one query token per sequence against a (possibly
+ring-buffered) KV cache with explicit per-slot positions ``kpos``
+(-1 = empty). Grid (B, KH, nk): for each (sequence, KV head) the innermost
+axis streams KV blocks HBM->VMEM with online-softmax scratch — decode is
+memory-bandwidth-bound, so the kernel's job is simply to touch each cache
+byte exactly once; all G grouped query heads ride along in registers/VMEM
+((G, hd) tile) amortizing the stream.
+
+Masking is position-based (kpos <= q_pos, window, kpos >= 0), identical to
+the jnp reference path in ``repro.models.attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _dec_kernel(qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                m_scr, l_scr, acc_scr, *, scale: float, block_k: int,
+                window: int, softcap: float, nk: int):
+    i_k = pl.program_id(2)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (bk, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    kpos = kpos_ref[0]                                       # (bk,)
+    q_pos = qpos_ref[0]                                      # scalar
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kpos >= 0) & (kpos <= q_pos)
+    if window:
+        valid &= kpos > q_pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)                # (G, bk)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(i_k == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "block_k", "interpret"))
+def decode_attention(q, k, v, kpos, q_pos, *, window: int = 0,
+                     softcap: float = 0.0, block_k: int = 256,
+                     interpret: bool = False):
+    """q: (B,H,hd); k/v: (B,M,KH,hd); kpos: (B,M); q_pos: (B,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    M, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    block_k = min(block_k, M)
+    pad = (-M) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
+    Mk = M + pad
+    nk = Mk // block_k
+    qg = q.reshape(B, KH, G, hd)
+
+    kernel = functools.partial(
+        _dec_kernel, scale=hd ** -0.5, block_k=block_k, window=window,
+        softcap=softcap, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KH, nk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ik: (b,)),                 # q_pos
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, ik: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_k), lambda b, h, ik: (b, ik)),      # kpos
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, h, ik: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, qg, k, v, kpos)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,127 @@
+"""Blocked causal flash attention (Pallas TPU).
+
+Grid (B, H, nq, nk); the innermost (fastest) grid axis streams KV blocks while
+f32 running-max / running-sum / accumulator scratch persists in VMEM — the
+classic online-softmax schedule. GQA is expressed in the K/V BlockSpec index
+map (query head h reads KV head h // G), so no KV replication ever
+materializes. Sliding windows and gemma-style logit softcaps are fused.
+
+Block sizes default to 128x128: MXU-aligned, and the per-step VMEM working
+set (q, k, v blocks + acc) is ~4 * 128 * hd * 4B ≈ 256 KiB for hd=128, far
+under the ~16 MiB VMEM budget, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, block_q: int, block_k: int, causal: bool,
+               window: int, softcap: float, nk: int):
+    i_q = pl.program_id(2)
+    i_k = pl.program_id(3)
+
+    @pl.when(i_k == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = i_q * block_q
+    k_start = i_k * block_k
+    # Block-level pruning: skip fully-masked KV blocks.
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window:
+        needed = jnp.logical_and(needed,
+                                 k_start + block_k - 1 > q_start - window)
+
+    @pl.when(needed)
+    def _update():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        valid = jnp.ones((block_q, block_k), bool)
+        if causal:
+            valid &= ki <= qi
+        if window:
+            valid &= ki > qi - window
+        s = jnp.where(valid, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(valid, jnp.exp(s - m_new[:, None]), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                              preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(i_k == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B,S,H,hd); k/v: (B,S,KH,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    pad_q = (-S) % block_q
+    pad_k = (-S) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = S + pad_q, S + pad_k
+    nq, nk = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _fa_kernel, scale=hd ** -0.5, block_q=block_q, block_k=block_k,
+        causal=causal, window=window, softcap=softcap, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, h, iq, ik, G=G: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :S]

@@ -1,0 +1,55 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On a TPU backend the kernels compile natively; everywhere else (this
+container is CPU-only) they run in interpret mode, which executes the kernel
+body in Python with identical semantics — that is how the test suite
+validates them against the ref.py oracles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import probe as _probe
+from repro.kernels import ssd_scan as _ssd
+
+
+@functools.lru_cache(maxsize=1)
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+
+
+def decode_attention(q, k, v, kpos, q_pos, *, window=0, softcap=0.0,
+                     block_k=256, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _dec.decode_attention(q, k, v, kpos, q_pos, window=window,
+                                 softcap=softcap, block_k=block_k,
+                                 interpret=interpret)
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def probe_update(tap, w1, b1, w2, b2, q_prev, T, *, block_b=128,
+                 interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _probe.probe_update(tap, w1, b1, w2, b2, q_prev, T,
+                               block_b=block_b, interpret=interpret)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every kernel (shapes/dtypes as the kernels).
+
+These are the semantics contract: tests sweep shapes and dtypes asserting
+allclose(kernel(interpret=True), ref).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0):
+    """q: (B,S,H,hd); k/v: (B,S,KH,hd). Dense-position attention."""
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, S, KH, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bskgh,bmkh->bkgsm", qg, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qi = jnp.arange(S)[:, None]
+    ki = jnp.arange(S)[None, :]
+    valid = jnp.ones((S, S), bool)
+    if causal:
+        valid &= ki <= qi
+    if window:
+        valid &= ki > qi - window
+    scores = jnp.where(valid[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgsm,bmkh->bskgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, kpos, q_pos, *, window: int = 0,
+                         softcap: float = 0.0):
+    """q: (B,H,hd) one query/row; k/v: (B,M,KH,hd); kpos: (B,M); q_pos: (B,)."""
+    B, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bmkh->bkgm", qg, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (kpos >= 0) & (kpos <= q_pos[:, None])
+    if window:
+        valid &= kpos > (q_pos[:, None] - window)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgm,bmkh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, init_state=None):
+    """Sequential SSD recurrence (the ground truth the chunked forms must match).
+
+    x: (B,L,nh,hp); dt: (B,L,nh); A: (nh,); Bm/Cm: (B,L,N).
+    Returns (y (B,L,nh,hp) f32, final_state (B,nh,hp,N) f32).
+    """
+    Bsz, L, nh, hp = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, nh, hp, N), f32)
+
+    def step(S, inp):
+        xt, dtt, Bt, Ct = inp                       # (B,nh,hp),(B,nh),(B,N),(B,N)
+        a = jnp.exp(dtt * A)                        # (B,nh)
+        S = a[:, :, None, None] * S + jnp.einsum(
+            "bh,bhp,bn->bhpn", dtt, xt, Bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, Ct)
+        return S, y
+
+    xs = (jnp.moveaxis(x.astype(f32), 1, 0), jnp.moveaxis(dt.astype(f32), 1, 0),
+          jnp.moveaxis(Bm.astype(f32), 1, 0), jnp.moveaxis(Cm.astype(f32), 1, 0))
+    S_fin, ys = jax.lax.scan(step, init_state.astype(f32), xs)
+    return jnp.moveaxis(ys, 0, 1), S_fin
+
+
+def probe_update_ref(tap, w1, b1, w2, b2, q_prev, T):
+    """Fused probe + Bayesian filter oracle.
+
+    tap: (B,d); q_prev: (B,k); T: (k,k).
+    Returns (q_new (B,k), p (B,k) raw probe probs).
+    """
+    h = jax.nn.relu(tap.astype(jnp.float32) @ w1 + b1)
+    logits = h @ w2 + b2
+    p = jax.nn.softmax(logits, axis=-1)
+    prior = q_prev.astype(jnp.float32) @ T.T
+    post = prior * p
+    z = jnp.sum(post, axis=-1, keepdims=True)
+    q_new = jnp.where(z > 0, post / jnp.maximum(z, 1e-30), prior)
+    return q_new, p

@@ -1,0 +1,101 @@
+"""Mamba2 chunked SSD scan (Pallas TPU).
+
+TPU adaptation of the SSD algorithm [arXiv:2405.21060]: the GPU version is a
+warp-specialized scan; on TPU we restructure it so nearly all FLOPs are
+MXU matmuls over (Q, Q) and (Q, N)/(hp, N) tiles:
+
+  grid (B, nh, nc) — the innermost axis walks chunks sequentially while the
+  (hp, N) f32 running state persists in VMEM scratch (the same
+  scratch-carry trick the flash kernels use for online softmax). Per chunk:
+
+    intra:   y  = tril((C Bᵀ) ⊙ exp(Δcum)) ⊙ dt  @  x        (Q,Q)@(Q,hp)
+    inter:   y += exp(cum) ⊙ (C @ stateᵀ)                    (Q,N)@(N,hp)
+    state:   S  = exp(cum_Q) S + xᵀ @ (B ⊙ (dt exp(cum_Q-cum)))  (hp,Q)@(Q,N)
+
+B/C are head-shared (groups=1), so their blocks are indexed by (b, c) only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref, s_scr,
+                *, chunk: int, nc: int):
+    i_c = pl.program_id(2)
+
+    @pl.when(i_c == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)            # (Q, hp)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)             # (Q,)
+    A = a_ref[0]                                         # scalar (negative)
+    Bm = b_ref[0].astype(jnp.float32)                    # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)                    # (Q, N)
+
+    cum = jnp.cumsum(dt * A)                             # (Q,)
+    # intra-chunk
+    CB = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    dec = jnp.exp(cum[:, None] - cum[None, :])
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    M = jnp.where(si <= ti, CB * dec * dt[None, :], 0.0)
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q,hp)
+    # inter-chunk from carried state
+    S = s_scr[...]                                        # (hp, N)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cm, S, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+    # state update
+    w = dt * jnp.exp(cum[-1] - cum)                       # (Q,)
+    S_new = (jnp.exp(cum[-1]) * S
+             + jax.lax.dot_general(x, Bm * w[:, None], (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    s_scr[...] = S_new
+
+    @pl.when(i_c == nc - 1)
+    def _finish():
+        sfin_ref[0, 0] = S_new.astype(sfin_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,L,nh,hp); dt: (B,L,nh) post-softplus; A: (nh,) negative;
+    Bm/Cm: (B,L,N). Returns (y (B,L,nh,hp) f32, final_state (B,nh,hp,N) f32).
+    L must be divisible by chunk."""
+    B, L, nh, hp = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nc=nc)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hp), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hp, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, nh, hp), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, hp, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hp, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, s_fin

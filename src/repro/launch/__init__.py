@@ -1,0 +1,1 @@
+"""Launchers: production mesh, shardings, multi-pod dry-run, train/serve."""

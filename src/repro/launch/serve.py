@@ -1,0 +1,76 @@
+"""Serving launcher: run the TRAIL engine over a workload.
+
+    # paper-scale policy comparison under the roofline cost model
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+        --policy trail --rate 14 --n 300
+
+    # real end-to-end on a CPU-sized model (trains briefly first)
+    PYTHONPATH=src python -m repro.launch.serve --arch trail-llama \
+        --smoke --real --policy trail --n 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.config import ARCH_IDS, get_config, get_smoke_config
+from repro.core.scheduler import POLICIES
+from repro.serving.engine import run_policy
+from repro.serving.workload import WorkloadConfig, generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b",
+                    choices=ARCH_IDS + ("trail-llama",))
+    ap.add_argument("--policy", default="trail", choices=POLICIES)
+    ap.add_argument("--c", type=float, default=0.8)
+    ap.add_argument("--rate", type=float, default=14.0)
+    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--burst", action="store_true")
+    ap.add_argument("--max-batch", type=int, default=16)
+    ap.add_argument("--mem-gb", type=float, default=0.0,
+                    help="KV memory budget (0 = unlimited)")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--real", action="store_true",
+                    help="actually run the model (CPU-sized configs)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    wc = WorkloadConfig(n_requests=args.n, request_rate=args.rate,
+                        burst=args.burst, vocab=cfg.vocab_size,
+                        seed=args.seed)
+    if args.real:
+        wc = WorkloadConfig(n_requests=args.n, request_rate=args.rate,
+                            burst=args.burst, vocab=cfg.vocab_size,
+                            prompt_mean=10.0, out_median=8.0, max_out=32,
+                            seed=args.seed)
+    reqs = generate(wc)
+
+    model = params = None
+    mode = "sim"
+    predictor = None
+    if args.real:
+        import jax
+        from repro.models.model import build_model
+        from repro.serving.predictors import ProbePredictor
+        model = build_model(cfg)
+        params = model.init(jax.random.key(args.seed))
+        predictor = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                                   embed_table=params["embed"])
+        mode = "real"
+
+    stats = run_policy(
+        cfg, args.policy, reqs, c_limit=args.c, max_batch=args.max_batch,
+        mem_budget=int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62,
+        mode=mode, predictor=predictor, model=model, params=params,
+        seed=args.seed)
+    print(json.dumps({"arch": cfg.name, "policy": args.policy,
+                      "c": args.c, "rate": args.rate,
+                      **stats.summary()}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

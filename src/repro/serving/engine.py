@@ -1,0 +1,340 @@
+"""Iteration-level serving engine (the paper's system, Figure 1).
+
+One engine iteration =
+  1. admit new arrivals into the request pool (initial prompt-only
+     prediction fixes r0 and the preemption budget a0 = floor(C*r0));
+  2. run the SPRPT-LP scheduler over running+waiting+preempted requests
+     under the slot/memory budget (Section 3.3); apply preemptions
+     (discard-and-recompute: slot released, cache invalidated);
+  3. chunked prefill for scheduled-but-unprefilled requests (shared
+     per-iteration token budget, rank order);
+  4. one decode token for every scheduled prefilled request, with the probe
+     fused into the decode step; Bayesian-refine predictions (Section 3.1);
+  5. advance the clock: real wall time, or the roofline cost model
+     (CPU-only container; see costmodel.py).
+
+Two execution modes:
+  * real  — a JAX model actually prefills/decodes on a fixed slot pool
+            (static shapes, one compile per phase); probe predictions are
+            real probe outputs. Generation ends at the oracle length or
+            EOS/max_new.
+  * sim   — no device math; oracle-noise probe statistics; paper-scale
+            models under the cost model (Figures 5-7 reproduction).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.core.scheduler import Decision, ReqState, SchedEntry, select_batch
+from repro.serving.costmodel import CostModel, HardwareSpec
+from repro.serving.kv_cache import SlotPool, bytes_for_context
+from repro.serving.predictors import OraclePredictor, PredictorBase
+from repro.serving.request import Request
+
+
+@dataclass
+class EngineConfig:
+    policy: str = "trail"           # fcfs | sjf | srpt | trail | trail-bert
+    c_limit: float = 0.8            # the paper's C
+    max_batch: int = 16             # slot count
+    mem_budget: int = 1 << 62       # cache bytes budget
+    prefill_chunk: int = 256        # per-iteration prefill token budget
+    max_len: int = 1024             # cache slots per sequence
+    probe_interval: int = 1         # refine every k-th token (paper Sec 6
+                                    # future work; k>1 cuts probe cost k x)
+    oom_mode: str = "discard"       # "discard" (paper's choice: recompute)
+                                    # | "swap" (KV to host; sim mode only)
+    mode: str = "sim"               # "sim" | "real"
+    hardware: HardwareSpec = field(default_factory=HardwareSpec)
+    seed: int = 0
+
+
+@dataclass
+class EngineStats:
+    latencies: list = field(default_factory=list)
+    ttfts: list = field(default_factory=list)
+    n_preemptions: int = 0
+    recomputed_tokens: int = 0
+    swapped_bytes: int = 0
+    peak_mem_bytes: int = 0
+    iterations: int = 0
+    sim_time: float = 0.0
+
+    def summary(self) -> dict:
+        lat = sorted(self.latencies)
+        tt = sorted(self.ttfts)
+        med = lambda v: v[len(v) // 2] if v else 0.0
+        return {
+            "mean_latency": float(np.mean(lat)) if lat else 0.0,
+            "median_latency": med(lat),
+            "mean_ttft": float(np.mean(tt)) if tt else 0.0,
+            "median_ttft": med(tt),
+            "p99_latency": lat[int(len(lat) * 0.99)] if lat else 0.0,
+            "preemptions": self.n_preemptions,
+            "recomputed_tokens": self.recomputed_tokens,
+            "swapped_gb": self.swapped_bytes / 1e9,
+            "peak_mem_gb": self.peak_mem_bytes / 1e9,
+            "iterations": self.iterations,
+            "makespan": self.sim_time,
+        }
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
+                 predictor: PredictorBase | None = None,
+                 model=None, params=None):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.predictor = predictor or OraclePredictor(cfg.probe,
+                                                      seed=ecfg.seed)
+        self.cost = CostModel(cfg, ecfg.hardware)
+        self.model = model
+        self.params = params
+        self.pool: SlotPool | None = None
+        self._swap_pending_s = 0.0
+        if ecfg.oom_mode == "swap" and ecfg.mode == "real":
+            raise ValueError("swap OOM mode is a cost-model study (sim only);"
+                             " the real engine uses the paper's"
+                             " discard-and-recompute")
+        if ecfg.mode == "real":
+            assert model is not None and params is not None
+            self.pool = SlotPool(model, ecfg.max_batch, ecfg.max_len)
+            import jax
+            self._decode_fn = jax.jit(model.decode_step)
+            self._prefill_fn = jax.jit(model.prefill_chunk)
+        self._rng = np.random.default_rng(ecfg.seed)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> EngineStats:
+        ecfg = self.ecfg
+        stats = EngineStats()
+        pending = sorted(requests, key=lambda r: r.arrival)
+        pool_reqs: dict[int, Request] = {}
+        entries: dict[int, SchedEntry] = {}
+        now = 0.0
+        p_idx = 0
+        wall0 = time.perf_counter()
+
+        def admit_arrivals(t):
+            nonlocal p_idx
+            while p_idx < len(pending) and pending[p_idx].arrival <= t:
+                req = pending[p_idx]
+                r0 = self.predictor.initial(req)
+                req.entry.r0 = r0
+                req.entry.pred_remaining = r0
+                req.entry.c_limit = ecfg.c_limit
+                req.entry.finish_len = req.true_out_len
+                pool_reqs[req.rid] = req
+                entries[req.rid] = req.entry
+                p_idx += 1
+
+        while p_idx < len(pending) or any(
+                e.state is not ReqState.FINISHED for e in entries.values()):
+            admit_arrivals(now)
+            live = [r for r in pool_reqs.values() if not r.done]
+            if not live:
+                now = pending[p_idx].arrival     # idle: jump to next arrival
+                continue
+
+            decision = select_batch(
+                entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
+                mem_budget=ecfg.mem_budget,
+                bytes_fn=lambda e: bytes_for_context(
+                    self.cfg, pool_reqs[e.rid].context_len + 1))
+
+            self._apply_preemptions(decision, pool_reqs, stats)
+            self._apply_admissions(decision, pool_reqs, stats)
+
+            # Prefill covers context_len - 1 tokens; the final known token is
+            # always consumed by decode_step (which emits the next one). This
+            # keeps fresh and preemption-resumed requests on one code path.
+            sched = [pool_reqs[rid] for rid in decision.scheduled]
+            prefilling = [r for r in sched
+                          if r.entry.prefill_done < r.context_len - 1]
+            decoding = [r for r in sched
+                        if r.entry.prefill_done >= r.context_len - 1]
+
+            if not sched:
+                if p_idx < len(pending):
+                    now = max(now, pending[p_idx].arrival)
+                    continue
+                raise RuntimeError(
+                    "scheduler deadlock: nothing fits the memory budget")
+
+            # ---- chunked prefill (shared token budget, rank order) --------
+            budget = ecfg.prefill_chunk
+            pf_plan: list[tuple[Request, int]] = []
+            for r in prefilling:
+                if budget <= 0:
+                    break
+                todo = (r.context_len - 1) - r.entry.prefill_done
+                take = min(todo, budget)
+                pf_plan.append((r, take))
+                budget -= take
+
+            if ecfg.mode == "real":
+                self._device_step(pf_plan, decoding)
+            else:
+                self._sim_step(pf_plan, decoding)
+
+            # ---- bookkeeping / clock -------------------------------------
+            pf_tokens = sum(t for _, t in pf_plan)
+            pf_ctx = max((r.context_len for r, _ in pf_plan), default=0)
+            dt = self.cost.iteration_time(
+                [r.context_len for r in decoding], pf_tokens, pf_ctx)
+            dt += self._swap_pending_s              # DMA stalls the batch
+            self._swap_pending_s = 0.0
+            now_next = now + dt
+            for r, take in pf_plan:
+                r.entry.prefill_done += take
+            for r in decoding:
+                r.entry.age += 1
+                if r.first_token_time < 0:
+                    r.first_token_time = now_next
+                if (len(r.generated) >= r.true_out_len
+                        or len(r.generated) >= r.max_new_tokens):
+                    r.entry.state = ReqState.FINISHED
+                    r.finish_time = now_next
+                    stats.latencies.append(r.latency())
+                    stats.ttfts.append(r.ttft())
+                    if self.pool is not None:
+                        self.pool.release(r.rid)
+                    elif r.slot >= 0:
+                        r.slot = -1
+
+            mem = sum(bytes_for_context(self.cfg, pool_reqs[rid].context_len)
+                      for rid in decision.scheduled)
+            stats.peak_mem_bytes = max(stats.peak_mem_bytes, mem)
+            stats.iterations += 1
+            now = now_next
+
+        stats.sim_time = now if ecfg.mode == "sim" else time.perf_counter() - wall0
+        return stats
+
+    # ------------------------------------------------------------------
+    def _apply_preemptions(self, decision: Decision, pool_reqs, stats):
+        for rid in decision.preempted:
+            req = pool_reqs[rid]
+            req.entry.state = ReqState.PREEMPTED
+            req.entry.preemptions += 1
+            stats.n_preemptions += 1
+            if self.ecfg.oom_mode == "swap":
+                # KV pages move to host; prefill progress is kept but the
+                # DMA stalls the whole batch (paper Section 3.3 discussion)
+                nbytes = bytes_for_context(self.cfg, req.context_len)
+                stats.swapped_bytes += nbytes
+                self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
+                req._swapped = True
+            else:
+                # discard-and-recompute: cache gone, re-prefill everything
+                stats.recomputed_tokens += req.entry.prefill_done
+                req.entry.prefill_done = 0
+            if self.pool is not None:
+                self.pool.release(rid)
+            req.slot = -1
+
+    def _apply_admissions(self, decision: Decision, pool_reqs, stats):
+        for rid in decision.admitted:
+            req = pool_reqs[rid]
+            req.entry.state = ReqState.RUNNING
+            if getattr(req, "_swapped", False):     # swap back in
+                nbytes = bytes_for_context(self.cfg, req.context_len)
+                stats.swapped_bytes += nbytes
+                self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
+                req._swapped = False
+            if self.pool is not None:
+                req.slot = self.pool.assign(rid)
+
+    # ------------------------------------------------------------------
+    # sim mode: oracle probe statistics, no device math
+    # ------------------------------------------------------------------
+    def _sim_step(self, pf_plan, decoding):
+        for r, take in pf_plan:
+            if r.entry.prefill_done + take >= r.context_len - 1:
+                pred = self.predictor.on_prefill(r)
+                r.entry.pred_remaining = pred
+        for r in decoding:
+            r.generated.append(int(self._rng.integers(1, self.cfg.vocab_size)))
+            if len(r.generated) % self.ecfg.probe_interval == 0:
+                r.entry.pred_remaining = self.predictor.on_token(r)
+            else:   # between probes: predictions age deterministically
+                r.entry.pred_remaining = max(r.entry.pred_remaining - 1.0, 0.0)
+
+    # ------------------------------------------------------------------
+    # real mode: batched device calls over the slot pool
+    # ------------------------------------------------------------------
+    def _device_step(self, pf_plan, decoding):
+        import jax.numpy as jnp
+        pool = self.pool
+        B = pool.n_slots
+        if pf_plan:
+            pool.flush_resets()
+            # bucketize the chunk width (powers of two) to bound recompiles
+            need = max(take for _, take in pf_plan)
+            chunk = 8
+            while chunk < need:
+                chunk *= 2
+            chunk = min(chunk, self.ecfg.prefill_chunk)
+            tokens = np.zeros((B, chunk), np.int32)
+            valid = np.zeros((B, chunk), bool)
+            for r, take in pf_plan:
+                full = r.prompt + r.generated
+                seg = full[r.entry.prefill_done:r.entry.prefill_done + take]
+                tokens[r.slot, :len(seg)] = seg
+                valid[r.slot, :len(seg)] = True
+            logits, pool.cache, tap_sum, n_new = self._prefill_fn(
+                self.params, pool.cache, jnp.asarray(tokens),
+                valid=jnp.asarray(valid))
+            tap_sum = np.asarray(tap_sum)
+            n_new = np.asarray(n_new)
+            for r, take in pf_plan:
+                if r.tap_sum is None:
+                    r.tap_sum = np.zeros(self.cfg.d_model, np.float32)
+                r.tap_sum = r.tap_sum + tap_sum[r.slot]
+                r.tap_cnt += int(n_new[r.slot])
+                if r.entry.prefill_done + take >= r.context_len - 1:
+                    tap_mean = r.tap_sum / max(r.tap_cnt, 1)
+                    pred = self.predictor.on_prefill(r, tap_mean)
+                    r.entry.pred_remaining = pred
+        if decoding:
+            pool.flush_resets()
+            tokens = np.zeros((B, 1), np.int32)
+            active = np.zeros((B,), bool)
+            for r in decoding:
+                tokens[r.slot, 0] = (r.generated[-1] if r.generated
+                                     else (r.prompt[-1] if r.prompt else 1))
+                active[r.slot] = True
+            logits, pool.cache, tap, probe_logits = self._decode_fn(
+                self.params, pool.cache, jnp.asarray(tokens),
+                active=jnp.asarray(active))
+            logits_np = np.asarray(logits)
+            pl = np.asarray(probe_logits)
+            for r in decoding:
+                r.generated.append(int(np.argmax(logits_np[r.slot])))
+                if len(r.generated) % self.ecfg.probe_interval == 0:
+                    p = np.exp(pl[r.slot] - pl[r.slot].max())
+                    p /= p.sum()
+                    r.entry.pred_remaining = self.predictor.on_token(r, p)
+                else:
+                    r.entry.pred_remaining = max(
+                        r.entry.pred_remaining - 1.0, 0.0)
+
+
+def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
+               max_batch=16, mem_budget=1 << 62, mode="sim",
+               predictor=None, model=None, params=None,
+               hardware: HardwareSpec | None = None, seed=0,
+               probe_interval=1, oom_mode="discard") -> EngineStats:
+    ecfg = EngineConfig(policy=policy, c_limit=c_limit, max_batch=max_batch,
+                        mem_budget=mem_budget, mode=mode, seed=seed,
+                        probe_interval=probe_interval, oom_mode=oom_mode,
+                        hardware=hardware or HardwareSpec())
+    import copy
+    reqs = copy.deepcopy(requests)
+    eng = Engine(cfg, ecfg, predictor=predictor, model=model, params=params)
+    return eng.run(reqs)

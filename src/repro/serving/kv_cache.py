@@ -1,0 +1,127 @@
+"""Slot-pool KV cache manager (the TPU-native replacement for PagedAttention).
+
+A fixed pool of ``slots`` sequence slots is allocated once per engine
+(static shapes for XLA); requests map onto slots for their lifetime in the
+batch. The OOM mode is the paper's choice: *discard and recompute* — a
+preempted request's slot is released, its cache garbage-collected lazily by
+``reset_slots`` (kpos=-1 kills stale attention entries; SSM state zeroed),
+and on re-admission the engine re-prefills prompt + generated-so-far.
+
+``bytes_for`` is the arch-aware preemption-cost function m(age) from
+DESIGN.md section 4: dense KV grows linearly with context, sliding-window
+layers clamp at the window, SSM layers cost O(1) state. The scheduler uses
+it both for the admission budget and (implicitly, via the paper's C*r rule)
+for limiting preemption.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (KIND_ATTN, KIND_HYBRID, KIND_LOCAL, KIND_MOE,
+                          KIND_SSM, ModelConfig)
+from repro.models.ssm import ssm_dims
+
+
+def dtype_bytes(cfg: ModelConfig) -> int:
+    return jnp.dtype(cfg.dtype).itemsize
+
+
+def bytes_per_token_kind(cfg: ModelConfig, kind: str) -> int:
+    """KV bytes one token adds in one layer of this kind (0 for SSM)."""
+    if kind == KIND_SSM:
+        return 0
+    if cfg.kv_quant:     # int8 payload + f32 per-(token,head) scales
+        return 2 * (cfg.kv_dim * 1 + cfg.num_kv_heads * 4)
+    return 2 * cfg.kv_dim * dtype_bytes(cfg)
+
+
+def ssm_state_bytes(cfg: ModelConfig) -> int:
+    d_in, nh, conv_ch = ssm_dims(cfg)
+    n = cfg.ssm_groups * cfg.ssm_state
+    return 4 * (nh * cfg.ssm_head_dim * n) + 4 * (cfg.ssm_conv - 1) * conv_ch
+
+
+def bytes_for_context(cfg: ModelConfig, context_len: int) -> int:
+    """Total per-request cache bytes at a given context length."""
+    total = 0
+    for kind in cfg.layer_kinds:
+        per_tok = bytes_per_token_kind(cfg, kind)
+        if kind in (KIND_LOCAL, KIND_HYBRID) and cfg.sliding_window:
+            total += per_tok * min(context_len, cfg.sliding_window)
+        else:
+            total += per_tok * context_len
+        if kind in (KIND_SSM, KIND_HYBRID):
+            total += ssm_state_bytes(cfg)
+    if cfg.cross_attention and cfg.encoder_seq:
+        total += (cfg.num_layers * 2 * cfg.kv_dim * dtype_bytes(cfg)
+                  * cfg.encoder_seq)
+    return total
+
+
+class SlotPool:
+    """Host-side slot bookkeeping + device-side cache reset."""
+
+    def __init__(self, model, slots: int, max_len: int):
+        self.model = model
+        self.cfg = model.cfg
+        self.n_slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len)
+        self.slot_of: dict[int, int] = {}
+        self.free = list(range(slots))[::-1]
+        self._dirty: list[int] = []              # slots needing device reset
+
+    # -- allocation ------------------------------------------------------
+    def assign(self, rid: int) -> int:
+        slot = self.free.pop()
+        self.slot_of[rid] = slot
+        return slot
+
+    def release(self, rid: int) -> int:
+        slot = self.slot_of.pop(rid)
+        self.free.append(slot)
+        self._dirty.append(slot)
+        return slot
+
+    def flush_resets(self):
+        """Apply pending slot resets on device (batched into one call)."""
+        if not self._dirty:
+            return
+        mask = jnp.zeros((self.n_slots,), bool).at[
+            jnp.asarray(self._dirty, jnp.int32)].set(True)
+        self.cache = _reset_slots(self.cache, mask)
+        self._dirty.clear()
+
+    # -- accounting --------------------------------------------------------
+    def bytes_for(self, context_len: int) -> int:
+        return bytes_for_context(self.cfg, min(context_len, self.max_len))
+
+    def used_slots(self) -> int:
+        return self.n_slots - len(self.free)
+
+
+@jax.jit
+def _reset_slots(cache, mask):
+    """Invalidate slots: kpos=-1, lengths=0, SSM state zeroed."""
+
+    def reset_sub(r):
+        r = dict(r)
+        if "kpos" in r:
+            r["kpos"] = jnp.where(mask[None, :, None], -1, r["kpos"])
+        for leaf in ("ssm_state", "conv_buf"):
+            if leaf in r:
+                m = mask.reshape((1, -1) + (1,) * (r[leaf].ndim - 2))
+                r[leaf] = jnp.where(m, 0, r[leaf].astype(r[leaf].dtype))
+        return r
+
+    new = dict(cache)
+    new["lengths"] = jnp.where(mask, 0, cache["lengths"])
+    for key, run in cache.items():
+        if not key.startswith("run_"):
+            continue
+        new[key] = tuple(reset_sub(sub) for sub in run)
+    return new

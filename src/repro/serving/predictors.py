@@ -1,0 +1,121 @@
+"""Prediction providers for the engine.
+
+Two regimes:
+  * ``ProbePredictor`` — the real thing: probe logits come back fused from
+    ``decode_step`` / ``prefill_chunk`` taps; this class just runs the
+    Bayesian filter and converts posteriors to expected remaining lengths.
+  * ``OraclePredictor`` — simulation mode: models the *statistics* of a
+    trained probe (configurable accuracy) around the ground-truth remaining
+    length, so paper-scale serving benchmarks can run without a GPU-scale
+    model. ``temp`` controls per-iteration probe sharpness; ``bert_sigma``
+    controls the prompt-only baseline's (one-shot) multiplicative error.
+
+Both expose:
+  initial(req)                 -> r0 (prompt-only prediction, pre-forward)
+  on_prefill(req, tap_mean)    -> posterior from the prompt-phase embedding
+  on_token(req, probe_probs)   -> updated predicted-remaining length
+"""
+
+from __future__ import annotations
+
+import math
+import random
+
+import numpy as np
+
+from repro.config import ProbeConfig
+from repro.core import predictor as probe_mod
+from repro.core.bins import bin_means
+from repro.core.smoothing import bayes_update, transition_matrix
+
+
+class PredictorBase:
+    def __init__(self, pc: ProbeConfig):
+        self.pc = pc
+        self.T = np.asarray(transition_matrix(pc))
+        self.means = bin_means(pc)
+
+    def expected(self, q) -> float:
+        return float(np.dot(np.asarray(q), self.means))
+
+    def _filter(self, req, p_t):
+        q = np.asarray(req.posterior)
+        prior = self.T @ q
+        post = prior * np.asarray(p_t)
+        z = post.sum()
+        req.posterior = post / z if z > 0 else prior
+        return self.expected(req.posterior)
+
+
+class OraclePredictor(PredictorBase):
+    def __init__(self, pc: ProbeConfig, *, temp: float = 1.0,
+                 bert_sigma: float = 0.9, flip_prob: float = 0.1,
+                 seed: int = 0, refine: bool = True):
+        super().__init__(pc)
+        self.temp = temp
+        self.bert_sigma = bert_sigma
+        self.flip_prob = flip_prob
+        self.refine = refine
+        self.rng = random.Random(seed)
+
+    def initial(self, req) -> float:
+        # prompt-only "BERT" prediction: multiplicative lognormal error
+        err = self.rng.lognormvariate(0.0, self.bert_sigma)
+        r0 = min(max(req.true_out_len * err, 1.0), self.pc.max_len)
+        req.posterior = self._probs_around(r0)
+        return float(r0)
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        # prefill-phase probe: sharper than BERT (paper Figure 3, t=0 point)
+        rem = req.true_out_len
+        req.posterior = self._probs_around(self._noisy(rem))
+        return self.expected(req.posterior)
+
+    def on_token(self, req, probe_probs=None) -> float:
+        if not self.refine:
+            return max(float(req.entry.r0) - req.entry.age, 0.0)
+        rem = max(req.true_out_len - len(req.generated), 0)
+        p_t = self._probs_around(self._noisy(rem))
+        return self._filter(req, p_t)
+
+    def _noisy(self, rem: float) -> float:
+        if self.rng.random() < self.flip_prob:
+            rem = rem * self.rng.lognormvariate(0.0, 0.5)
+        return rem
+
+    def _probs_around(self, length: float) -> np.ndarray:
+        b = min(int(length / self.pc.bin_width), self.pc.num_bins - 1)
+        idx = np.arange(self.pc.num_bins)
+        logits = -np.abs(idx - b) / max(self.temp, 1e-3)
+        e = np.exp(logits - logits.max())
+        return e / e.sum()
+
+
+class ProbePredictor(PredictorBase):
+    """Uses the real probe outputs (fused into the decode step)."""
+
+    def __init__(self, pc: ProbeConfig, probe_params=None, embed_table=None):
+        super().__init__(pc)
+        self.probe_params = probe_params
+        self.embed_table = embed_table     # for the pre-forward r0 estimate
+
+    def initial(self, req) -> float:
+        if self.probe_params is None or self.embed_table is None:
+            return self.pc.max_len / 2.0       # uninformative prior
+        emb = np.asarray(self.embed_table)[np.asarray(req.prompt)].mean(0)
+        logits = np.asarray(probe_mod.apply_probe(self.probe_params, emb))
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        req.posterior = p
+        return self.expected(p)
+
+    def on_prefill(self, req, tap_mean) -> float:
+        logits = np.asarray(probe_mod.apply_probe(self.probe_params,
+                                                  np.asarray(tap_mean)))
+        p = np.exp(logits - logits.max())
+        p /= p.sum()
+        req.posterior = p
+        return self.expected(p)
+
+    def on_token(self, req, probe_probs) -> float:
+        return self._filter(req, np.asarray(probe_probs))

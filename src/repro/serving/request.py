@@ -1,0 +1,48 @@
+"""Request lifecycle objects shared by the engine and the benchmarks."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.scheduler import ReqState, SchedEntry
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: float
+    prompt: list[int]
+    max_new_tokens: int = 512
+    # oracle ground truth (sim mode / synthetic EOS): output length in tokens
+    true_out_len: int = 0
+
+    generated: list[int] = field(default_factory=list)
+    entry: SchedEntry = None                      # scheduling metadata
+    posterior: object = None                      # Bayesian filter state (k,)
+    tap_sum: object = None                        # prompt-phase tap accumulator
+    tap_cnt: int = 0
+    slot: int = -1                                # cache slot (-1 = none)
+
+    # metrics (in engine-clock seconds)
+    first_token_time: float = -1.0
+    finish_time: float = -1.0
+
+    def __post_init__(self):
+        if self.entry is None:
+            self.entry = SchedEntry(
+                rid=self.rid, arrival=self.arrival,
+                prompt_len=len(self.prompt))
+
+    @property
+    def context_len(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return self.entry.state is ReqState.FINISHED
+
+    def latency(self) -> float:
+        return self.finish_time - self.arrival
+
+    def ttft(self) -> float:
+        return self.first_token_time - self.arrival

@@ -1,0 +1,86 @@
+"""Checkpointing: flat-path .npz save/restore for parameter/optimizer pytrees.
+
+Simple but real: path-keyed flattening survives refactors that preserve dict
+structure, round-trips dtypes (bfloat16 included via a view trick), and
+writes atomically (tmp + rename).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+        out[f"{prefix}__len__"] = np.asarray(len(tree))
+        out[f"{prefix}__tuple__"] = np.asarray(isinstance(tree, tuple))
+    else:
+        out[prefix.rstrip("/")] = tree
+    return out
+
+
+def save(path: str, tree) -> None:
+    flat = {}
+    for k, v in _flatten(tree).items():
+        arr = np.asarray(v)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[k + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[k] = arr
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path) or ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str):
+    """Rebuild the nested structure from path keys."""
+    import jax.numpy as jnp
+    with np.load(path) as z:
+        flat = {}
+        for k in z.files:
+            if k.endswith("::bf16"):
+                flat[k[:-6]] = z[k].view(jnp.bfloat16)
+            else:
+                flat[k] = z[k]
+
+    root: dict = {}
+    meta: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        if parts[-1] in ("__len__", "__tuple__"):
+            meta["/".join(parts[:-1]) + "/" + parts[-1]] = val
+            continue
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    def fix(node, prefix=""):
+        if not isinstance(node, dict):
+            return node
+        n_key = f"{prefix}__len__"
+        if n_key in meta:
+            n = int(meta[n_key])
+            seq = [fix(node[str(i)], f"{prefix}{i}/") for i in range(n)]
+            return tuple(seq) if bool(meta[f"{prefix}__tuple__"]) else seq
+        return {k: fix(v, f"{prefix}{k}/") for k, v in node.items()}
+
+    return fix(root)

@@ -1,0 +1,109 @@
+"""Synthetic instruction-following data pipeline.
+
+No Alpaca offline, so we synthesize sequences with the same *structure*:
+
+    [BOS, prompt..., SEP, response..., EOS, PAD...]
+
+Prompt/response lengths follow the workload distributions (right-skewed
+lognormal, responses clipped at 512). To make output length *learnable* (so
+the probe has signal, mirroring real models where the prompt statistically
+determines response length), the response length is a deterministic-ish
+function of visible prompt features: a small set of "topic" tokens at the
+start of the prompt sets the response-length regime, plus noise. Response
+tokens repeat topic-conditioned patterns so the tap embeddings carry state
+about progress (giving the per-iteration probe something to read).
+
+Yields batches:
+  tokens    (B, S) int32
+  labels    (B, S) int32   next-token targets, -1 on prompt/pad
+  remaining (B, S) int32   remaining response tokens at each position,
+                            -1 outside the response span (probe labels)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import numpy as np
+
+BOS, EOS, SEP, PAD = 1, 2, 3, 0
+N_TOPICS = 8
+TOPIC_BASE = 4                      # token ids [4, 4+N_TOPICS) are topics
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int = 32000
+    seq_len: int = 512
+    batch: int = 8
+    prompt_mean: float = 44.0
+    prompt_sigma: float = 0.6
+    out_sigma: float = 0.35         # within-topic length spread
+    max_out: int = 448
+    seed: int = 0
+
+
+def topic_median_len(topic: int, dc: DataConfig) -> float:
+    """Topic t's median response length: geometric ladder over [8, max_out]."""
+    lo, hi = 8.0, float(dc.max_out)
+    f = topic / max(N_TOPICS - 1, 1)
+    return lo * (hi / lo) ** f
+
+
+def sample_example(rng: np.random.Generator, dc: DataConfig):
+    topic = int(rng.integers(0, N_TOPICS))
+    plen = int(np.clip(rng.lognormal(math.log(dc.prompt_mean),
+                                     dc.prompt_sigma), 4, dc.seq_len // 3))
+    rlen = int(np.clip(rng.lognormal(math.log(topic_median_len(topic, dc)),
+                                     dc.out_sigma), 1, dc.max_out))
+    room = dc.seq_len - plen - 3
+    rlen = max(1, min(rlen, room))
+    prompt = rng.integers(16, dc.vocab, size=plen)
+    prompt[0] = TOPIC_BASE + topic
+    # topic-conditioned periodic response (progress is decodable from context)
+    period = 3 + topic
+    resp = 16 + ((np.arange(rlen) % period) * 37 + topic * 101) % (dc.vocab - 16)
+    return topic, prompt, resp
+
+
+def batches(dc: DataConfig, n_batches: int):
+    rng = np.random.default_rng(dc.seed)
+    for _ in range(n_batches):
+        tokens = np.full((dc.batch, dc.seq_len), PAD, np.int32)
+        labels = np.full((dc.batch, dc.seq_len), -1, np.int32)
+        remaining = np.full((dc.batch, dc.seq_len), -1, np.int32)
+        for b in range(dc.batch):
+            _, prompt, resp = sample_example(rng, dc)
+            seq = np.concatenate([[BOS], prompt, [SEP], resp, [EOS]])
+            L = len(seq)
+            tokens[b, :L] = seq
+            # next-token labels over the response span (incl. EOS)
+            start = 1 + len(prompt) + 1            # index of first resp token
+            for i in range(start - 1, L - 1):
+                labels[b, i] = seq[i + 1]
+            # probe labels: remaining response tokens AFTER position i
+            for i in range(start - 1, L - 1):
+                remaining[b, i] = (L - 1) - (i + 1)
+        yield {"tokens": tokens, "labels": labels, "remaining": remaining}
+
+
+def harvest_probe_data(model, params, dc: DataConfig, n_batches: int):
+    """Run forward_train, collect (tap embedding, remaining-length) pairs.
+
+    This is the paper's profiling step (Section 3.1 "Focused profiling"):
+    embeddings from the tap layer for every response token, paired with the
+    count of remaining tokens.
+    """
+    import jax.numpy as jnp
+    xs, ys = [], []
+    for batch in batches(dc, n_batches):
+        _, aux = model.forward_train(
+            params, {"tokens": jnp.asarray(batch["tokens"]),
+                     "labels": jnp.asarray(batch["labels"])})
+        tap = np.asarray(aux["tap"], np.float32)           # (B,S,d)
+        rem = batch["remaining"]
+        mask = rem >= 0
+        xs.append(tap[mask])
+        ys.append(rem[mask])
+    return np.concatenate(xs), np.concatenate(ys)

@@ -1,0 +1,131 @@
+"""Train loops: the LM trainer (for the ~100M serving model and the smoke
+tests) and the probe trainer (the paper's Section 3.1 recipe).
+
+``make_train_step(model, opt_cfg)`` builds the jit-able
+(params, opt_state, batch) -> (params, opt_state, metrics) function the
+launcher shards with pjit — the same function the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, ProbeConfig
+from repro.core import predictor as probe_mod
+from repro.core.bins import bin_index
+from repro.training import optimizer as opt_mod
+
+
+def make_loss_fn(model):
+    def loss_fn(params, batch):
+        loss, aux = model.forward_train(params, batch)
+        return loss, aux
+    return loss_fn
+
+
+def make_train_step(model, ocfg: opt_mod.AdamWConfig):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, om = opt_mod.update(ocfg, grads, opt_state, params)
+        metrics = {"loss": loss, "aux_loss": aux["aux_loss"],
+                   "n_tok": aux["n_tok"], **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_lm(model, params, data_iter, ocfg: opt_mod.AdamWConfig,
+             n_steps: int, log_every: int = 20, callback=None):
+    """Single-host training loop (CPU-sized models / smoke tests)."""
+    step_fn = jax.jit(make_train_step(model, ocfg))
+    opt_state = opt_mod.init(ocfg, params)
+    history = []
+    for step, batch in enumerate(data_iter):
+        if step >= n_steps:
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items()
+              if k in ("tokens", "labels", "enc_embeds", "prefix_embeds")}
+        params, opt_state, m = step_fn(params, opt_state, jb)
+        if step % log_every == 0 or step == n_steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = step
+            history.append(rec)
+            if callback:
+                callback(rec)
+    return params, opt_state, history
+
+
+# ---------------------------------------------------------------------------
+# Probe training (paper Section 3.1)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ProbeTrainConfig:
+    epochs: int = 30                # paper: 30 epochs
+    batch: int = 32                 # paper: batch 32
+    lr: float = 0.01                # paper: cosine 0.01 -> 0
+    seed: int = 0
+
+
+def train_probe(taps: np.ndarray, remaining: np.ndarray, pc: ProbeConfig,
+                d_model: int, tc: ProbeTrainConfig = ProbeTrainConfig(),
+                probe_params=None, log=None):
+    """Train the probe MLP on harvested (tap, remaining) pairs.
+
+    Returns (probe_params, history). CE over bins, AdamW, cosine annealing —
+    the paper's recipe verbatim (Section 3.1 'Predictor architecture').
+    """
+    n = taps.shape[0]
+    steps_per_epoch = max(n // tc.batch, 1)
+    total = tc.epochs * steps_per_epoch
+    ocfg = opt_mod.AdamWConfig(lr=tc.lr, warmup_steps=0, total_steps=total,
+                               weight_decay=0.01, clip_norm=0.0)
+    key = jax.random.key(tc.seed)
+    if probe_params is None:
+        probe_params = probe_mod.init_probe(key, d_model, pc)
+    labels = np.asarray(bin_index(remaining, pc))
+
+    @jax.jit
+    def step_fn(p, o, x, y):
+        loss, grads = jax.value_and_grad(probe_mod.probe_loss)(p, x, y)
+        p, o, _ = opt_mod.update(ocfg, grads, o, p)
+        return p, o, loss
+
+    opt_state = opt_mod.init(ocfg, probe_params)
+    rng = np.random.default_rng(tc.seed)
+    history = []
+    for ep in range(tc.epochs):
+        perm = rng.permutation(n)
+        losses = []
+        for i in range(steps_per_epoch):
+            idx = perm[i * tc.batch:(i + 1) * tc.batch]
+            probe_params, opt_state, loss = step_fn(
+                probe_params, opt_state, jnp.asarray(taps[idx]),
+                jnp.asarray(labels[idx]))
+            losses.append(float(loss))
+        acc = float(probe_mod.probe_accuracy(
+            probe_params, jnp.asarray(taps[:4096]),
+            jnp.asarray(labels[:4096])))
+        rec = {"epoch": ep, "loss": float(np.mean(losses)), "acc": acc}
+        history.append(rec)
+        if log:
+            log(rec)
+    return probe_params, history
+
+
+def probe_mae(probe_params, taps, remaining, pc: ProbeConfig,
+              refine: bool = False) -> float:
+    """Mean absolute error of expected-length predictions (Figure 2/3)."""
+    from repro.core.bins import bin_means
+    p = np.asarray(jax.nn.softmax(
+        probe_mod.apply_probe(probe_params, jnp.asarray(taps)), -1))
+    pred = p @ bin_means(pc)
+    return float(np.mean(np.abs(pred - remaining)))

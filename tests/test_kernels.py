@@ -1,0 +1,136 @@
+"""Per-kernel shape/dtype sweeps: pallas_call(interpret=True) vs ref.py."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ProbeConfig
+from repro.core.smoothing import transition_matrix
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.probe import probe_update
+from repro.kernels.ssd_scan import ssd_scan
+
+KEY = jax.random.key(0)
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,KH,hd,win,cap", [
+    (2, 64, 4, 2, 32, 0, 0.0),
+    (1, 100, 4, 1, 64, 0, 0.0),      # MQA + ragged S
+    (2, 128, 8, 8, 32, 32, 0.0),     # MHA + sliding window
+    (1, 96, 4, 2, 32, 0, 50.0),      # softcap
+    (2, 80, 4, 2, 32, 24, 30.0),     # window + softcap
+])
+def test_flash_attention(B, S, H, KH, hd, win, cap, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, S + H), 3)
+    q = rand(ks[0], (B, S, H, hd), dtype)
+    k = rand(ks[1], (B, S, KH, hd), dtype)
+    v = rand(ks[2], (B, S, KH, hd), dtype)
+    o = flash_attention(q, k, v, window=win, softcap=cap,
+                        block_q=32, block_k=32, interpret=True)
+    r = ref.flash_attention_ref(q, k, v, window=win, softcap=cap)
+    assert o.dtype == q.dtype
+    err = jnp.max(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)))
+    assert float(err) < TOL[dtype], float(err)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,M,H,KH,hd,win,cap", [
+    (2, 64, 4, 2, 32, 0, 0.0),
+    (3, 100, 4, 1, 64, 0, 0.0),
+    (2, 128, 8, 8, 32, 48, 0.0),
+    (1, 96, 4, 2, 32, 0, 50.0),
+])
+def test_decode_attention(B, M, H, KH, hd, win, cap, dtype):
+    ks = jax.random.split(jax.random.fold_in(KEY, M + H), 5)
+    q = rand(ks[0], (B, H, hd), dtype)
+    k = rand(ks[1], (B, M, KH, hd), dtype)
+    v = rand(ks[2], (B, M, KH, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, M)
+    kpos = jnp.where(jnp.arange(M)[None] < lengths[:, None],
+                     jnp.arange(M)[None], -1)
+    o = decode_attention(q, k, v, kpos, lengths, window=win, softcap=cap,
+                         block_k=32, interpret=True)
+    r = ref.decode_attention_ref(q, k, v, kpos, lengths, window=win,
+                                 softcap=cap)
+    err = jnp.max(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)))
+    assert float(err) < TOL[dtype], float(err)
+
+
+def test_decode_attention_empty_rows_no_nan():
+    """Rows with an empty cache must produce finite output (NaN-free)."""
+    B, M, H, KH, hd = 2, 64, 4, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = rand(ks[0], (B, H, hd), jnp.float32)
+    k = rand(ks[1], (B, M, KH, hd), jnp.float32)
+    v = rand(ks[2], (B, M, KH, hd), jnp.float32)
+    kpos = jnp.full((B, M), -1)                     # nothing valid
+    o = decode_attention(q, k, v, kpos, jnp.zeros((B,), jnp.int32),
+                         block_k=32, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(o)))
+
+
+@pytest.mark.parametrize("B,L,nh,hp,N,chunk", [
+    (2, 64, 4, 32, 16, 16),
+    (1, 128, 2, 64, 32, 32),
+    (2, 96, 3, 32, 8, 32),
+])
+def test_ssd_scan(B, L, nh, hp, N, chunk):
+    ks = jax.random.split(jax.random.fold_in(KEY, L + nh), 5)
+    x = jax.random.normal(ks[0], (B, L, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y_ref, s_ref = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    y, s = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=True)
+    assert float(jnp.max(jnp.abs(y - y_ref))) < 1e-3
+    assert float(jnp.max(jnp.abs(s - s_ref))) < 1e-3
+
+
+def test_ssd_scan_initial_state_continuation():
+    """Scanning [a;b] equals scanning a then b from a's final state."""
+    B, L, nh, hp, N = 1, 64, 2, 32, 16
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, L, nh, hp))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, L, N))
+    Cm = jax.random.normal(ks[4], (B, L, N))
+    y_full, s_full = ref.ssd_scan_ref(x, dt, A, Bm, Cm)
+    h = L // 2
+    y1, s1 = ref.ssd_scan_ref(x[:, :h], dt[:, :h], A, Bm[:, :h], Cm[:, :h])
+    y2, s2 = ref.ssd_scan_ref(x[:, h:], dt[:, h:], A, Bm[:, h:], Cm[:, h:],
+                              init_state=s1)
+    assert float(jnp.max(jnp.abs(y2 - y_full[:, h:]))) < 1e-4
+    assert float(jnp.max(jnp.abs(s2 - s_full))) < 1e-4
+
+
+@pytest.mark.parametrize("B,d,hid,k", [(4, 64, 32, 10), (7, 768, 512, 10),
+                                       (1, 128, 64, 5)])
+def test_probe_kernel(B, d, hid, k):
+    ks = jax.random.split(jax.random.fold_in(KEY, B + d), 6)
+    tap = jax.random.normal(ks[0], (B, d))
+    w1 = jax.random.normal(ks[1], (d, hid)) * 0.1
+    b1 = jax.random.normal(ks[2], (hid,)) * 0.1
+    w2 = jax.random.normal(ks[3], (hid, k)) * 0.1
+    b2 = jax.random.normal(ks[4], (k,)) * 0.1
+    qp = jax.nn.softmax(jax.random.normal(ks[5], (B, k)), -1)
+    T = jnp.asarray(transition_matrix(ProbeConfig(num_bins=k, max_len=512)),
+                    jnp.float32)
+    q, p = probe_update(tap, w1, b1, w2, b2, qp, T, block_b=4, interpret=True)
+    qr, pr = ref.probe_update_ref(tap, w1, b1, w2, b2, qp, T)
+    assert float(jnp.max(jnp.abs(q - qr))) < 1e-5
+    assert float(jnp.max(jnp.abs(p - pr))) < 1e-5
+    # posteriors remain distributions
+    assert float(jnp.max(jnp.abs(jnp.sum(q, -1) - 1.0))) < 1e-5

@@ -1,0 +1,66 @@
+"""Theory (Lemma 1) vs discrete-event simulation cross-validation."""
+
+import pytest
+
+from repro.core.queueing import Lemma1, MG1Config, mean_response
+from repro.core.simulation import simulate
+
+
+def test_fcfs_mm1_sanity():
+    # M/M/1 FCFS: E[T] = 1 / (1 - rho)
+    for lam in (0.3, 0.6):
+        r = simulate("fcfs", lam, n_jobs=40000, seed=1)
+        assert r.mean_response == pytest.approx(1 / (1 - lam), rel=0.08)
+
+
+@pytest.mark.parametrize("lam,C", [(0.4, 0.5), (0.7, 1.0)])
+def test_lemma1_matches_sim_perfect(lam, C):
+    th = mean_response(MG1Config(lam=lam, C=C, prediction="perfect"))
+    sim = simulate("sprpt-lp", lam, C=C, n_jobs=60000,
+                   prediction="perfect", seed=5).mean_response
+    assert sim == pytest.approx(th, rel=0.15)
+
+
+@pytest.mark.parametrize("lam,C", [(0.4, 0.8), (0.7, 0.5)])
+def test_lemma1_matches_sim_exponential(lam, C):
+    th = mean_response(MG1Config(lam=lam, C=C, prediction="exponential"))
+    sim = simulate("sprpt-lp", lam, C=C, n_jobs=60000,
+                   prediction="exponential", seed=5).mean_response
+    assert sim == pytest.approx(th, rel=0.15)
+
+
+def test_c1_equals_srpt():
+    """C=1 'becomes the same as SPRPT' (paper Section 3.3)."""
+    a = simulate("sprpt-lp", 0.8, C=1.0, n_jobs=30000, seed=3)
+    b = simulate("srpt", 0.8, C=1.0, n_jobs=30000, seed=3)
+    assert a.mean_response == pytest.approx(b.mean_response, rel=1e-9)
+    assert a.preemptions == b.preemptions
+
+
+def test_policy_ordering():
+    """SRPT-family < SJF < FCFS in mean response under load."""
+    lam = 0.8
+    rs = {p: simulate(p, lam, C=0.8, n_jobs=40000,
+                      prediction="perfect", seed=2).mean_response
+          for p in ("srpt", "sprpt-lp", "sjf", "fcfs")}
+    assert rs["srpt"] <= rs["sprpt-lp"] * 1.05
+    assert rs["sprpt-lp"] < rs["sjf"]
+    assert rs["sjf"] < rs["fcfs"]
+
+
+def test_limited_preemption_reduces_memory():
+    """Appendix D: smaller C -> fewer preemptions and lower mean memory."""
+    lam = 0.85
+    big = simulate("sprpt-lp", lam, C=1.0, n_jobs=40000, seed=3)
+    small = simulate("sprpt-lp", lam, C=0.2, n_jobs=40000, seed=3)
+    assert small.preemptions < big.preemptions
+    assert small.mean_memory < big.mean_memory
+    # and the response-time cost of limiting is modest at this load
+    assert small.mean_response < big.mean_response * 1.2
+
+
+def test_response_xr_monotone_in_x():
+    l1 = Lemma1(MG1Config(lam=0.5, C=0.8, prediction="exponential"))
+    xs = [0.5, 1.0, 2.0, 4.0]
+    vals = [l1.response_xr(x, 1.0) for x in xs]
+    assert all(b > a for a, b in zip(vals, vals[1:]))

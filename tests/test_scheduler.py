@@ -1,0 +1,131 @@
+"""Scheduler unit + hypothesis property tests (SPRPT-LP invariants)."""
+
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import (Decision, ReqState, SchedEntry, select_batch)
+
+
+def mk(rid, arrival=0.0, r0=10.0, age=0, state=ReqState.WAITING, c=0.8,
+       pred=None, prompt=16):
+    e = SchedEntry(rid=rid, arrival=arrival, prompt_len=prompt, r0=r0,
+                   pred_remaining=pred if pred is not None else r0,
+                   age=age, c_limit=c, state=state)
+    return e
+
+
+def bytes_fn(e):
+    return 100 * (e.prompt_len + e.age)
+
+
+def test_rank_function_matches_paper():
+    # rank = r - a while a < floor(C*r), else -inf (only when running)
+    e = mk(0, r0=10.0, age=3, state=ReqState.RUNNING, c=0.8, pred=7.0)
+    assert e.a0 == 8
+    assert e.preemptable
+    assert e.rank("trail") == 7.0
+    assert e.rank("trail-bert") == 7.0
+    e.age = 8
+    e.pred_remaining = 2.0
+    assert not e.preemptable
+    assert e.rank("trail") == float("-inf")
+    # srpt (C=1 in paper notation) never pins
+    assert e.rank("srpt") == 2.0
+
+
+def test_c_zero_means_no_preemption_after_start():
+    e = mk(0, r0=10.0, age=0, state=ReqState.RUNNING, c=0.0)
+    assert e.a0 == 0 and not e.preemptable
+    assert e.rank("trail") == float("-inf")
+
+
+def test_pinned_jobs_always_scheduled():
+    entries = {
+        0: mk(0, arrival=0, r0=10, age=9, state=ReqState.RUNNING, pred=1.0),
+        1: mk(1, arrival=1, r0=2, state=ReqState.WAITING, pred=2.0),
+    }
+    entries[0].pred_remaining = 50.0     # terrible rank, but pinned (age>=a0)
+    d = select_batch(entries, policy="trail", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn)
+    assert 0 in d.scheduled
+    assert d.preempted == []
+
+
+def test_fcfs_never_preempts():
+    entries = {
+        0: mk(0, arrival=0.0, state=ReqState.RUNNING, r0=100),
+        1: mk(1, arrival=1.0, state=ReqState.WAITING, r0=1),
+    }
+    d = select_batch(entries, policy="fcfs", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn)
+    assert d.scheduled == [0] and d.preempted == []
+
+
+def test_trail_preempts_preemptable_running():
+    entries = {
+        0: mk(0, arrival=0.0, state=ReqState.RUNNING, r0=100, age=1,
+              pred=99.0),
+        1: mk(1, arrival=1.0, state=ReqState.WAITING, r0=2, pred=2.0),
+    }
+    d = select_batch(entries, policy="trail", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn)
+    assert d.scheduled == [1]
+    assert d.preempted == [0]
+    assert d.admitted == [1]
+
+
+states = st.sampled_from([ReqState.WAITING, ReqState.RUNNING,
+                          ReqState.PREEMPTED])
+
+
+@st.composite
+def entry_strategy(draw, rid):
+    r0 = draw(st.floats(0.5, 512.0))
+    return mk(rid,
+              arrival=draw(st.floats(0.0, 100.0)),
+              r0=r0,
+              age=draw(st.integers(0, 600)),
+              state=draw(states),
+              c=draw(st.sampled_from([0.0, 0.2, 0.5, 0.8, 1.0])),
+              pred=draw(st.floats(0.0, 512.0)),
+              prompt=draw(st.integers(1, 128)))
+
+
+@given(st.integers(1, 14).flatmap(
+    lambda n: st.tuples(*[entry_strategy(i) for i in range(n)])),
+    st.integers(1, 8), st.sampled_from([10_000, 200_000, 1 << 60]),
+    st.sampled_from(["fcfs", "sjf", "srpt", "trail", "trail-bert"]))
+@settings(max_examples=200, deadline=None)
+def test_select_batch_invariants(entries_tuple, max_batch, mem_budget, policy):
+    entries = {e.rid: e for e in entries_tuple}
+    d = select_batch(entries, policy=policy, max_batch=max_batch,
+                     mem_budget=mem_budget, bytes_fn=bytes_fn)
+    sched = set(d.scheduled)
+    assert len(sched) == len(d.scheduled), "duplicates"
+
+    pinned = {e.rid for e in entries.values()
+              if e.state is ReqState.RUNNING
+              and (policy in ("fcfs", "sjf") or
+                   (policy != "srpt" and not e.preemptable))}
+    # 1. pinned running jobs always stay
+    assert pinned <= sched
+    # 2. budget respected by non-pinned selections
+    extra = [entries[r] for r in sched - pinned]
+    assert len(sched) <= max(max_batch, len(pinned))
+    used_pinned = sum(bytes_fn(entries[r]) for r in pinned)
+    used = used_pinned + sum(bytes_fn(e) for e in extra)
+    if extra:
+        assert used <= max(mem_budget, used_pinned)
+    # 3. preempted = running not scheduled; admitted = non-running scheduled
+    for e in entries.values():
+        if e.state is ReqState.RUNNING and e.rid not in sched:
+            assert e.rid in d.preempted
+        if e.state is not ReqState.RUNNING and e.rid in sched:
+            assert e.rid in d.admitted
+    # 4. fcfs/sjf never preempt
+    if policy in ("fcfs", "sjf"):
+        assert not d.preempted
+    # 5. a0 is the paper's floor(C * r0)
+    for e in entries.values():
+        assert e.a0 == math.floor(e.c_limit * max(e.r0, 0.0))
