@@ -1,7 +1,16 @@
-"""Paper Appendix D (+ Lemma 1): M/G/1 SPRPT-LP — response time and memory
-across arrival rates and C, simulation vs the closed form."""
+"""Memory studies: (a) paper Appendix D (+ Lemma 1) M/G/1 SPRPT-LP —
+response time and memory across arrival rates and C, simulation vs the
+closed form; (b) paged vs contiguous KV under the serving engine — at the
+same ``mem_budget``, block-granular preemption (retain/evict/swap pages)
+must beat whole-sequence discard-and-recompute on ``recomputed_tokens``.
+
+    PYTHONPATH=src python -m benchmarks.memory_sim --quick          # (a)
+    PYTHONPATH=src python -m benchmarks.memory_sim --quick --paged  # (b)
+"""
 
 from __future__ import annotations
+
+import argparse
 
 from benchmarks.common import emit, save_json
 from repro.core.queueing import MG1Config, mean_response
@@ -34,5 +43,64 @@ def run(quick: bool = True):
     return results
 
 
+def run_paged(quick: bool = True, page_size: int = 16):
+    """Engine-level paged-vs-contiguous comparison at equal mem_budget.
+
+    Uses a paper-scale dense GQA config (pure global attention, so paged
+    preemption retains pages) under SPRPT-LP at a load that forces
+    preemptions both by rank and by memory pressure.
+    """
+    from repro.config import get_config
+    from repro.serving.engine import run_policy
+    from repro.serving.kv_cache import bytes_for_context
+    from repro.serving.workload import WorkloadConfig, generate
+
+    cfg = get_config("granite-3-8b")
+    n = 100 if quick else 300
+    wc = WorkloadConfig(n_requests=n, request_rate=20.0, seed=4,
+                        vocab=cfg.vocab_size)
+    reqs = generate(wc)
+    results = {}
+    budgets = {"slack": 1 << 62,
+               "tight": 10 * bytes_for_context(cfg, 256)}
+    for bname, budget in budgets.items():
+        for layout in ("contig", "paged"):
+            for oom in ("discard", "swap"):
+                s = run_policy(cfg, "trail", reqs, mode="sim", seed=5,
+                               mem_budget=budget, max_batch=16,
+                               oom_mode=oom, kv_layout=layout,
+                               page_size=page_size)
+                d = s.summary()
+                key = f"{bname}.{layout}.{oom}"
+                results[key] = {
+                    "finished": len(s.latencies),
+                    "preemptions": s.n_preemptions,
+                    "recomputed_tokens": s.recomputed_tokens,
+                    "swapped_gb": d["swapped_gb"],
+                    "peak_mem_gb": d["peak_mem_gb"],
+                    "mean_latency": d["mean_latency"],
+                }
+                emit(f"paged_kv.{key}", d["mean_latency"] * 1e6,
+                     f"preempt={s.n_preemptions};"
+                     f"recomputed={s.recomputed_tokens};"
+                     f"swapped_gb={d['swapped_gb']:.3f};"
+                     f"peak_gb={d['peak_mem_gb']:.4f}")
+        gain = (results[f"{bname}.contig.discard"]["recomputed_tokens"]
+                - results[f"{bname}.paged.discard"]["recomputed_tokens"])
+        emit(f"paged_kv.{bname}.recompute_saved_tokens", float(gain))
+    save_json("memory_sim_paged", results)
+    return results
+
+
 if __name__ == "__main__":
-    run(quick=False)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="small job counts (CI smoke)")
+    ap.add_argument("--paged", action="store_true",
+                    help="run the paged-vs-contiguous engine comparison")
+    ap.add_argument("--page-size", type=int, default=16)
+    args = ap.parse_args()
+    if args.paged:
+        run_paged(quick=args.quick, page_size=args.page_size)
+    else:
+        run(quick=args.quick)

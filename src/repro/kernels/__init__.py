@@ -9,6 +9,8 @@ Kernels:
   flash_attention — blocked causal FA (GQA, sliding window, logit softcap)
   decode_attention — flash-decode over a slot KV cache (the decode_32k /
                      long_500k hot loop)
+  paged_decode_attention — flash-decode over a paged KV cache: block-table
+                     gather across non-contiguous pages via scalar prefetch
   ssd_scan        — Mamba2 chunked state-space-dual scan
   probe           — the paper's fused probe MLP + softmax + Bayesian update
 """

@@ -14,6 +14,7 @@ import jax
 
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
+from repro.kernels import paged_decode_attention as _paged
 from repro.kernels import probe as _probe
 from repro.kernels import ssd_scan as _ssd
 
@@ -39,6 +40,15 @@ def decode_attention(q, k, v, kpos, q_pos, *, window=0, softcap=0.0,
     return _dec.decode_attention(q, k, v, kpos, q_pos, window=window,
                                  softcap=softcap, block_k=block_k,
                                  interpret=interpret)
+
+
+def paged_decode_attention(q, k_pages, v_pages, kpos_pages, block_table,
+                           q_pos, *, window=0, softcap=0.0, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _paged.paged_decode_attention(
+        q, k_pages, v_pages, kpos_pages, block_table, q_pos, window=window,
+        softcap=softcap, interpret=interpret)
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):

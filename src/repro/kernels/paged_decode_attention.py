@@ -1,0 +1,117 @@
+"""Flash-decode over a paged KV cache (Pallas TPU).
+
+The paged sibling of ``decode_attention``: K/V live in a pool of
+fixed-size pages shared by every sequence, and each (sequence, KV head)
+streams its pages HBM->VMEM through a *block-table* indirection instead of
+a contiguous slot stripe. The block table and query positions ride in as
+scalar-prefetch operands (``PrefetchScalarGridSpec``), so the page index
+of the next DMA is known before the kernel body runs — the gather costs
+nothing beyond the streaming the contiguous kernel already does.
+
+Grid (B, KH, pmax): the innermost axis walks the sequence's logical pages;
+``index_map`` resolves logical page p of sequence b to physical page
+``block_table[b, p]``. Unallocated table entries point at physical page 0,
+the null page, whose per-token positions ``pkpos`` are pinned to -1 — the
+standard position mask (kpos >= 0, kpos <= q_pos) then drops them, and
+stale data from a page's previous owner is likewise invisible because page
+resets set pkpos=-1. All G grouped query heads ride along in VMEM as in
+the contiguous kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _paged_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, kpos_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                  softcap: float, npages: int):
+    i_p = pl.program_id(2)
+
+    @pl.when(i_p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)                      # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (ps, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    kpos = kpos_ref[0]                                       # (ps,)
+    q_pos = qpos_ref[b]                                      # scalar
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kpos >= 0) & (kpos <= q_pos)
+    if window:
+        valid &= kpos > q_pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)                # (G, ps)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(valid[None, :], jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(i_p == npages - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, kpos_pages, block_table,
+                           q_pos, *, window: int = 0, softcap: float = 0.0,
+                           interpret: bool = False):
+    """q: (B,H,hd); k/v_pages: (P,ps,KH,hd); kpos_pages: (P,ps);
+    block_table: (B,pmax) int32 (0 = null page); q_pos: (B,) -> (B,H,hd)."""
+    B, H, hd = q.shape
+    P, ps, KH = k_pages.shape[0], k_pages.shape[1], k_pages.shape[2]
+    pmax = block_table.shape[1]
+    G = H // KH
+    qg = q.reshape(B, KH, G, hd)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=hd ** -0.5, window=window, softcap=softcap,
+        npages=pmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block_table, q_pos
+        grid=(B, KH, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, qp: (b, h, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, p, bt, qp: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, p, bt, qp: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, p, bt, qp: (bt[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, p, bt, qp: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, q_pos, qg, k_pages, v_pages, kpos_pages)
+    return out.reshape(B, H, hd)

@@ -56,6 +56,23 @@ def decode_attention_ref(q, k, v, kpos, q_pos, *, window: int = 0,
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, kpos_pages, block_table,
+                               q_pos, *, window: int = 0,
+                               softcap: float = 0.0):
+    """q: (B,H,hd); k/v_pages: (P,ps,KH,hd) shared page pool; kpos_pages:
+    (P,ps); block_table: (B,pmax) int32 (0 = null page, kpos -1); q_pos: (B,).
+
+    Semantics: gather each sequence's pages in logical order and run the
+    contiguous decode reference over the flattened view.
+    """
+    P, ps, KH, hd = k_pages.shape
+    k = k_pages[block_table].reshape(q.shape[0], -1, KH, hd)
+    v = v_pages[block_table].reshape(q.shape[0], -1, KH, hd)
+    kpos = kpos_pages[block_table].reshape(q.shape[0], -1)
+    return decode_attention_ref(q, k, v, kpos, q_pos, window=window,
+                                softcap=softcap)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm, init_state=None):
     """Sequential SSD recurrence (the ground truth the chunked forms must match).
 

@@ -311,6 +311,97 @@ def self_attention_cached(cfg: ModelConfig, p, h, cache_l, q_pos, *,
     return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(h.dtype), new_cache
 
 
+# ---------------------------------------------------------------------------
+# Paged self-attention (block-table indirection over a shared page pool)
+# ---------------------------------------------------------------------------
+
+def init_paged_kv_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                        n_layers: int):
+    """A paged cache for a run of ``n_layers`` global-attention layers.
+
+    K/V live in a pool of ``num_pages`` fixed-size pages shared by every
+    sequence; per-sequence block tables (held at the cache's top level)
+    map logical page ``pos // page_size`` to a physical page. Physical
+    page 0 is the null page: its ``pkpos`` stays -1, so block-table rows
+    can point unallocated logical pages at it and masking does the rest.
+    Leaves are named pk/pv/pkpos so the cached path can tell the layouts
+    apart structurally (jit-safe — no static flags in the pytree).
+    """
+    if cfg.kv_quant:
+        raise NotImplementedError("paged KV does not support kv_quant yet")
+    shape = (n_layers, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "pkpos": jnp.full((n_layers, num_pages, page_size), -1, jnp.int32),
+        "pk": jnp.zeros(shape, cdtype(cfg)),
+        "pv": jnp.zeros(shape, cdtype(cfg)),
+    }
+
+
+def gather_pages(x_pages, block_table):
+    """x_pages: (P, ps, ...); block_table: (B, pmax) -> (B, pmax*ps, ...).
+
+    The gathered view is ordered by logical position (block tables map
+    logical page i of a sequence to entry i), so downstream position
+    masking sees a plain per-sequence cache."""
+    g = x_pages[block_table]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_cache_write(cache_l, k_new, v_new, positions, block_table):
+    """Write S new entries per sequence through the block table.
+
+    cache_l: {"pk": (P,ps,KH,hd), "pv": ..., "pkpos": (P,ps)};
+    k_new/v_new: (B,S,KH,hd); positions: (B,S) absolute (-1 = inactive);
+    block_table: (B, pmax). Writes resolving to the null page (0) or past
+    the table are dropped, like the contiguous path's mode="drop"."""
+    P, ps, KH, hd = cache_l["pk"].shape
+    pmax = block_table.shape[1]
+    pidx = positions // ps
+    page_ids = jnp.take_along_axis(
+        block_table, jnp.clip(pidx, 0, pmax - 1), axis=1)
+    ok = (positions >= 0) & (pidx < pmax) & (page_ids > 0)
+    flat = jnp.where(ok, page_ids * ps + positions % ps, P * ps)
+    out = dict(cache_l)
+    out["pk"] = cache_l["pk"].reshape(P * ps, KH, hd).at[flat].set(
+        k_new.astype(cache_l["pk"].dtype), mode="drop").reshape(P, ps, KH, hd)
+    out["pv"] = cache_l["pv"].reshape(P * ps, KH, hd).at[flat].set(
+        v_new.astype(cache_l["pv"].dtype), mode="drop").reshape(P, ps, KH, hd)
+    out["pkpos"] = cache_l["pkpos"].reshape(P * ps).at[flat].set(
+        positions, mode="drop").reshape(P, ps)
+    return out
+
+
+def self_attention_paged(cfg: ModelConfig, p, h, cache_l, q_pos, block_table):
+    """One layer of paged cached self-attention (global attention only).
+
+    Same semantics as ``self_attention_cached`` with window=0, but K/V are
+    read and written through the block table. Decode (S=1) writes first
+    and attends over the updated pool (pages are request-exclusive, so no
+    in-chunk clobber hazard exists); prefill chunks attend over the
+    gathered prefix plus the fresh in-chunk K/V, then write.
+    """
+    q, k, v = project_qkv(cfg, p, h)
+    if cfg.use_rope:
+        q = apply_rope(q, q_pos, cfg.rope_theta)
+        k = apply_rope(k, q_pos, cfg.rope_theta)
+    B, S = h.shape[:2]
+    if S == 1:
+        new_cache = paged_cache_write(cache_l, k, v, q_pos, block_table)
+        out = attend(cfg, q, gather_pages(new_cache["pk"], block_table),
+                     gather_pages(new_cache["pv"], block_table), q_pos,
+                     gather_pages(new_cache["pkpos"], block_table))
+        return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(h.dtype), new_cache
+    k_all = jnp.concatenate([gather_pages(cache_l["pk"], block_table), k],
+                            axis=1)
+    v_all = jnp.concatenate([gather_pages(cache_l["pv"], block_table), v],
+                            axis=1)
+    kpos_all = jnp.concatenate(
+        [gather_pages(cache_l["pkpos"], block_table), q_pos], axis=1)
+    out = attend(cfg, q, k_all, v_all, q_pos, kpos_all)
+    new_cache = paged_cache_write(cache_l, k, v, q_pos, block_table)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(h.dtype), new_cache
+
+
 def self_attention_full(cfg: ModelConfig, p, h, *, window: int = 0,
                         positions=None, causal: bool = True):
     """Training-path attention (no cache): full (causal) over (B,S,d)."""

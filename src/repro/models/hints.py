@@ -20,9 +20,16 @@ from jax.sharding import PartitionSpec as P
 BATCH = "__batch__"
 
 
+def _abstract_mesh():
+    """jax.sharding.get_abstract_mesh appeared in jax 0.4.38; older jax has
+    no ambient-mesh query, so hints degrade to no-ops there."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
 def data_shards() -> int:
     """Number of batch-sharding ways in the ambient mesh (1 outside jit)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     names = getattr(am, "axis_names", ())
     if not names:
         return 1
@@ -35,7 +42,7 @@ def data_shards() -> int:
 
 
 def hint(x, *spec):
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     names = getattr(am, "axis_names", ())
     if not names:
         return x

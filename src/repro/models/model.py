@@ -87,15 +87,28 @@ class Model:
     # ------------------------------------------------------------------
     # Cache
     # ------------------------------------------------------------------
-    def init_cache(self, batch: int, max_len: int) -> dict:
+    def init_cache(self, batch: int, max_len: int,
+                   kv_layout: str = "contig", page_size: int = 16) -> dict:
+        """kv_layout="paged" stores global-attention K/V in a shared page
+        pool (1 null page + batch * ceil(max_len/page_size) pages) behind a
+        (batch, pages_per_seq) block table; windowed/SSM/cross state keeps
+        the per-slot layout (already bounded)."""
         cfg = self.cfg
         cache: dict[str, Any] = {
             "lengths": jnp.zeros((batch,), jnp.int32),
         }
+        num_pages = 0
+        if kv_layout == "paged":
+            pages_per_seq = -(-max_len // page_size)
+            num_pages = 1 + batch * pages_per_seq      # page 0 = null page
+            cache["block_table"] = jnp.zeros((batch, pages_per_seq),
+                                             jnp.int32)
         for ri, (kinds, nb) in enumerate(self.runs):
             cache[f"run_{ri}"] = tuple(
                 tfm.init_run_cache(cfg, kind, nb, batch, max_len,
-                                   enc_seq=cfg.encoder_seq)
+                                   enc_seq=cfg.encoder_seq,
+                                   kv_layout=kv_layout, num_pages=num_pages,
+                                   page_size=page_size)
                 for kind in kinds)
         return cache
 
@@ -239,6 +252,7 @@ class Model:
         new_cache = dict(cache)
         tap = None
         aux_total = jnp.float32(0)
+        block_table = cache.get("block_table")     # shared across all layers
         for ri, (kinds, nb) in enumerate(self.runs):
             def body(carry, xs, _kinds=kinds):
                 p_blk, c_blk = xs
@@ -247,7 +261,7 @@ class Model:
                 for j, kind in enumerate(_kinds):
                     carry, c_new, a = tfm.block_cached(
                         cfg, kind, p_blk[j], carry, c_blk[j], q_pos,
-                        decode=decode)
+                        decode=decode, block_table=block_table)
                     new_blk.append(c_new)
                     aux = aux + a
                 return carry, (tuple(new_blk), aux)

@@ -150,10 +150,12 @@ def block_train(cfg: ModelConfig, kind: str, p, h, enc_out=None, positions=None)
 
 
 def block_cached(cfg: ModelConfig, kind: str, p, h, cache_l, q_pos,
-                 decode: bool = False):
+                 decode: bool = False, block_table=None):
     """Cached-path block (prefill chunk or decode). Returns (h, cache_l, aux).
 
     h: (B,S,d); q_pos: (B,S) absolute positions (-1 = inactive slot).
+    ``block_table`` (B, pmax) routes K/V through the shared page pool when
+    this run's cache is paged (pk/pv/pkpos leaves).
     """
     hn = apply_norm(cfg, p["norm1"], h)
     new_cache = dict(cache_l)
@@ -169,10 +171,15 @@ def block_cached(cfg: ModelConfig, kind: str, p, h, cache_l, q_pos,
         return h + y, new_cache, jnp.float32(0)
 
     window = _kind_window(cfg, kind)
-    kv_keys = ("k", "v", "kpos", "k_scale", "v_scale")
-    kvcache = {k: cache_l[k] for k in kv_keys if k in cache_l}
-    a, kv_new = attn.self_attention_cached(cfg, p["attn"], hn, kvcache, q_pos,
-                                           window=window)
+    if "pk" in cache_l:
+        kvcache = {k: cache_l[k] for k in ("pk", "pv", "pkpos")}
+        a, kv_new = attn.self_attention_paged(cfg, p["attn"], hn, kvcache,
+                                              q_pos, block_table)
+    else:
+        kv_keys = ("k", "v", "kpos", "k_scale", "v_scale")
+        kvcache = {k: cache_l[k] for k in kv_keys if k in cache_l}
+        a, kv_new = attn.self_attention_cached(cfg, p["attn"], hn, kvcache,
+                                               q_pos, window=window)
     new_cache.update(kv_new)
     if kind == KIND_HYBRID:
         if decode:
@@ -198,12 +205,19 @@ def block_cached(cfg: ModelConfig, kind: str, p, h, cache_l, q_pos,
 # ---------------------------------------------------------------------------
 
 def init_run_cache(cfg: ModelConfig, kind: str, n_layers: int, batch: int,
-                   max_len: int, enc_seq: int = 0):
+                   max_len: int, enc_seq: int = 0, kv_layout: str = "contig",
+                   num_pages: int = 0, page_size: int = 0):
     cache: dict = {}
     window = _kind_window(cfg, kind)
     if kind != KIND_SSM:
-        cache.update(attn.init_kv_cache(cfg, batch, max_len, n_layers,
-                                        window=window))
+        # Windowed runs keep their ring buffers even under kv_layout="paged":
+        # they are already bounded at the window, so paging buys nothing.
+        if kv_layout == "paged" and not window:
+            cache.update(attn.init_paged_kv_cache(cfg, num_pages, page_size,
+                                                  n_layers))
+        else:
+            cache.update(attn.init_kv_cache(cfg, batch, max_len, n_layers,
+                                            window=window))
     if kind in (KIND_SSM, KIND_HYBRID):
         cache.update(ssm_mod.init_ssm_state(cfg, batch, n_layers))
     if cfg.cross_attention and enc_seq:

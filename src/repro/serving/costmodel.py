@@ -22,7 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.config import KIND_LOCAL, KIND_SSM, ModelConfig
-from repro.serving.kv_cache import bytes_for_context
+from repro.serving.kv_cache import bytes_for_context, paged_bytes_for_context
 
 
 @dataclass(frozen=True)
@@ -40,11 +40,18 @@ A100 = HardwareSpec(name="a100-80g", peak_flops=312e12, hbm_bw=2039e9,
 
 class CostModel:
     def __init__(self, cfg: ModelConfig, hw: HardwareSpec = HardwareSpec(),
-                 weight_dtype_bytes: int = 2):
+                 weight_dtype_bytes: int = 2, page_size: int = 0):
         self.cfg = cfg
         self.hw = hw
+        self.page_size = page_size          # >0: paged KV — decode streams
+                                            # whole pages, not exact tokens
         self.active_params = cfg.active_param_count()
         self.param_bytes = cfg.param_count() * weight_dtype_bytes
+
+    def _cache_bytes(self, ctx: int) -> int:
+        if self.page_size:
+            return paged_bytes_for_context(self.cfg, ctx, self.page_size)
+        return bytes_for_context(self.cfg, ctx)
 
     def _attn_flops_per_token(self, ctx: int) -> float:
         """Attention score+value FLOPs for one new token at context ctx."""
@@ -67,10 +74,10 @@ class CostModel:
         mem = float(self.param_bytes)
         for ctx in decode_ctxs:
             flops += 2.0 * self.active_params + self._attn_flops_per_token(ctx)
-            mem += bytes_for_context(self.cfg, ctx)     # stream the cache
+            mem += self._cache_bytes(ctx)               # stream the cache
         if prefill_tokens:
             flops += 2.0 * self.active_params * prefill_tokens
             flops += self._attn_flops_per_token(prefill_ctx) * prefill_tokens / 2.0
-            mem += bytes_for_context(self.cfg, prefill_ctx)
+            mem += self._cache_bytes(prefill_ctx)
         t = max(flops / self.hw.peak_flops, mem / self.hw.hbm_bw)
         return t + self.hw.overhead_s

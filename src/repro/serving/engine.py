@@ -32,7 +32,10 @@ import numpy as np
 from repro.config import ModelConfig
 from repro.core.scheduler import Decision, ReqState, SchedEntry, select_batch
 from repro.serving.costmodel import CostModel, HardwareSpec
-from repro.serving.kv_cache import SlotPool, bytes_for_context
+from repro.serving.kv_cache import (BlockManager, PagedSlotPool, SlotPool,
+                                    bytes_for_context, page_bytes,
+                                    paged_bytes_for_context,
+                                    supports_page_retention)
 from repro.serving.predictors import OraclePredictor, PredictorBase
 from repro.serving.request import Request
 
@@ -49,6 +52,10 @@ class EngineConfig:
                                     # future work; k>1 cuts probe cost k x)
     oom_mode: str = "discard"       # "discard" (paper's choice: recompute)
                                     # | "swap" (KV to host; sim mode only)
+    kv_layout: str = "contig"       # "contig" (slot cache) | "paged"
+                                    # (block-table pages; preemption frees /
+                                    #  retains / swaps at page granularity)
+    page_size: int = 16             # tokens per KV page (paged layout)
     mode: str = "sim"               # "sim" | "real"
     hardware: HardwareSpec = field(default_factory=HardwareSpec)
     seed: int = 0
@@ -92,10 +99,17 @@ class Engine:
         self.ecfg = ecfg
         self.predictor = predictor or OraclePredictor(cfg.probe,
                                                       seed=ecfg.seed)
-        self.cost = CostModel(cfg, ecfg.hardware)
+        self.paged = ecfg.kv_layout == "paged"
+        if ecfg.kv_layout not in ("contig", "paged"):
+            raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        self.cost = CostModel(cfg, ecfg.hardware,
+                              page_size=ecfg.page_size if self.paged else 0)
         self.model = model
         self.params = params
         self.pool: SlotPool | None = None
+        self.blocks: BlockManager | None = None
+        self._retain = self.paged and supports_page_retention(cfg)
+        self._page_bytes = page_bytes(cfg, ecfg.page_size)
         self._swap_pending_s = 0.0
         if ecfg.oom_mode == "swap" and ecfg.mode == "real":
             raise ValueError("swap OOM mode is a cost-model study (sim only);"
@@ -103,11 +117,27 @@ class Engine:
                              " discard-and-recompute")
         if ecfg.mode == "real":
             assert model is not None and params is not None
-            self.pool = SlotPool(model, ecfg.max_batch, ecfg.max_len)
+            if self.paged:
+                self.pool = PagedSlotPool(model, ecfg.max_batch, ecfg.max_len,
+                                          page_size=ecfg.page_size,
+                                          retain=self._retain)
+                self.blocks = self.pool.blocks
+            else:
+                self.pool = SlotPool(model, ecfg.max_batch, ecfg.max_len)
             import jax
             self._decode_fn = jax.jit(model.decode_step)
             self._prefill_fn = jax.jit(model.prefill_chunk)
+        elif self.paged:
+            # sim mode: unbounded id space — capacity pressure is enforced
+            # in bytes against mem_budget by the reclamation loop
+            self.blocks = BlockManager(0, ecfg.page_size)
         self._rng = np.random.default_rng(ecfg.seed)
+
+    def _bytes_for(self, context_len: int) -> int:
+        if self.paged:
+            return paged_bytes_for_context(self.cfg, context_len,
+                                           self.ecfg.page_size)
+        return bytes_for_context(self.cfg, context_len)
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request]) -> EngineStats:
@@ -144,10 +174,14 @@ class Engine:
             decision = select_batch(
                 entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
                 mem_budget=ecfg.mem_budget,
-                bytes_fn=lambda e: bytes_for_context(
-                    self.cfg, pool_reqs[e.rid].context_len + 1))
+                bytes_fn=lambda e: self._bytes_for(
+                    pool_reqs[e.rid].context_len + 1))
 
             self._apply_preemptions(decision, pool_reqs, stats)
+            if self.paged:
+                # page-granular memory pressure: suspended (preempted but
+                # resident) pages yield before any admitted request starts
+                self._reclaim_pages(decision, pool_reqs, entries, stats)
             self._apply_admissions(decision, pool_reqs, stats)
 
             # Prefill covers context_len - 1 tokens; the final known token is
@@ -177,6 +211,13 @@ class Engine:
                 pf_plan.append((r, take))
                 budget -= take
 
+            if self.paged:
+                # allocate pages ahead of the writes this iteration performs
+                for r, take in pf_plan:
+                    self._ensure_pages(r, r.entry.prefill_done + take, entries)
+                for r in decoding:
+                    self._ensure_pages(r, r.context_len, entries)
+
             if ecfg.mode == "real":
                 self._device_step(pf_plan, decoding)
             else:
@@ -192,7 +233,14 @@ class Engine:
             now_next = now + dt
             for r, take in pf_plan:
                 r.entry.prefill_done += take
+                # tokens actually materialized in the cache (never credited
+                # past what was written: a mid-prefill preemption must not
+                # mark unwritten positions as retained)
+                r._kv_written = max(getattr(r, "_kv_written", 0),
+                                    r.entry.prefill_done)
             for r in decoding:
+                r._kv_written = max(getattr(r, "_kv_written", 0),
+                                    r.context_len - 1)
                 r.entry.age += 1
                 if r.first_token_time < 0:
                     r.first_token_time = now_next
@@ -206,9 +254,24 @@ class Engine:
                         self.pool.release(r.rid)
                     elif r.slot >= 0:
                         r.slot = -1
+                    if self.blocks is not None and self.pool is None:
+                        # sim mode only: real-mode release() freed the pages
+                        self.blocks.free_request(r.rid)
 
-            mem = sum(bytes_for_context(self.cfg, pool_reqs[rid].context_len)
+            if self.blocks is not None:
+                for rid in decision.scheduled:
+                    r = pool_reqs[rid]
+                    if not r.done:
+                        self.blocks.note_cached(
+                            rid, getattr(r, "_kv_written", 0))
+
+            mem = sum(self._bytes_for(pool_reqs[rid].context_len)
                       for rid in decision.scheduled)
+            if self.blocks is not None:
+                mem += self._page_bytes * sum(
+                    self.blocks.resident_pages(e.rid)
+                    for e in entries.values()
+                    if e.state is ReqState.PREEMPTED)
             stats.peak_mem_bytes = max(stats.peak_mem_bytes, mem)
             stats.iterations += 1
             now = now_next
@@ -223,32 +286,133 @@ class Engine:
             req.entry.state = ReqState.PREEMPTED
             req.entry.preemptions += 1
             stats.n_preemptions += 1
-            if self.ecfg.oom_mode == "swap":
-                # KV pages move to host; prefill progress is kept but the
+            if self._retain:
+                # paged: pages stay resident ("suspended"); the reclamation
+                # loop evicts/swaps them tail-first only under real memory
+                # pressure, and resume accounting charges exactly the
+                # evicted tokens. No recompute is booked here.
+                cached = getattr(req, "_kv_written", 0)
+                if self.pool is not None:       # real pool is max_len-bounded
+                    cached = min(cached, self.ecfg.max_len)
+                self.blocks.ensure(rid, cached)
+                self.blocks.note_cached(rid, cached)
+            elif self.ecfg.oom_mode == "swap":
+                # KV moves to host; prefill progress is kept but the
                 # DMA stalls the whole batch (paper Section 3.3 discussion)
-                nbytes = bytes_for_context(self.cfg, req.context_len)
+                nbytes = self._bytes_for(req.context_len)
                 stats.swapped_bytes += nbytes
                 self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
                 req._swapped = True
+                if self.blocks is not None:
+                    # the whole cache is on host now; its device pages are
+                    # free (swap-in is charged once at re-admission)
+                    self.blocks.free_request(rid)
             else:
                 # discard-and-recompute: cache gone, re-prefill everything
                 stats.recomputed_tokens += req.entry.prefill_done
                 req.entry.prefill_done = 0
+                if self.blocks is not None and self.pool is None:
+                    # sim mode only: in real mode pool.release() below frees
+                    # the pages itself (and queues their device reset)
+                    self.blocks.free_request(rid)
             if self.pool is not None:
-                self.pool.release(rid)
+                if self.paged:
+                    self.pool.release(rid, retain=self._retain)
+                else:
+                    self.pool.release(rid)
             req.slot = -1
 
     def _apply_admissions(self, decision: Decision, pool_reqs, stats):
         for rid in decision.admitted:
             req = pool_reqs[rid]
+            was_preempted = req.entry.state is ReqState.PREEMPTED
             req.entry.state = ReqState.RUNNING
-            if getattr(req, "_swapped", False):     # swap back in
-                nbytes = bytes_for_context(self.cfg, req.context_len)
+            if getattr(req, "_swapped", False):     # swap back in (whole seq)
+                nbytes = self._bytes_for(req.context_len)
                 stats.swapped_bytes += nbytes
                 self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
                 req._swapped = False
+            if self._retain and was_preempted:
+                n_host = self.blocks.host_pages.get(rid, 0)
+                if n_host:                          # page-granular swap-in
+                    nbytes = n_host * self._page_bytes
+                    stats.swapped_bytes += nbytes
+                    self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
+                    self.blocks.swap_in(rid)
+                # copy-on-admit: retained prefix re-links (block-table
+                # write); only the evicted tail is ever recomputed
+                retained = min(self.blocks.resume(rid),
+                               max(req.context_len - 1, 0))
+                lost = req.entry.prefill_done - retained
+                if lost > 0:
+                    stats.recomputed_tokens += lost
+                req.entry.prefill_done = retained
+                req._kv_written = retained
             if self.pool is not None:
                 req.slot = self.pool.assign(rid)
+
+    # ------------------------------------------------------------------
+    # paged-layout memory management
+    # ------------------------------------------------------------------
+    def _suspended(self, entries, exclude=()):
+        return [e for e in entries.values()
+                if e.state is ReqState.PREEMPTED and e.rid not in exclude
+                and self.blocks.resident_pages(e.rid) > 0]
+
+    def _reclaim_pages(self, decision: Decision, pool_reqs, entries, stats):
+        """Evict (discard) or swap out suspended pages, tail-first from the
+        least-urgent victim, until scheduled + suspended bytes fit."""
+        need = sum(self._bytes_for(pool_reqs[rid].context_len + 1)
+                   for rid in decision.scheduled)
+        sched = set(decision.scheduled)
+        susp = self._suspended(entries, exclude=sched)
+        resident = sum(self.blocks.resident_pages(e.rid) for e in susp)
+        over = need + resident * self._page_bytes - self.ecfg.mem_budget
+        swap = self.ecfg.oom_mode == "swap"
+        while over > 0 and susp:
+            victim = max(susp, key=lambda e: (e.pred_remaining, e.rid))
+            n_pages = -(-over // self._page_bytes)       # all we still need
+            if swap:
+                freed = self.blocks.swap_out_tail(victim.rid, n_pages)
+                if freed:
+                    nbytes = len(freed) * self._page_bytes
+                    stats.swapped_bytes += nbytes
+                    self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
+            elif self.pool is not None:
+                freed = self.pool.evict_tail(victim.rid, n_pages)
+            else:
+                freed = self.blocks.evict_tail(victim.rid, n_pages)
+            if not freed:
+                break
+            over -= len(freed) * self._page_bytes
+            susp = [e for e in susp if self.blocks.resident_pages(e.rid) > 0]
+
+    def _ensure_pages(self, req, tokens: int, entries):
+        """Grow a scheduled request's page list, evicting suspended pages
+        when the (real-mode) physical pool is exhausted."""
+        if self.pool is not None:
+            # only the real device pool is max_len-bounded; sim-mode paged
+            # accounting must track contexts as far as the contig baseline
+            tokens = min(tokens, self.ecfg.max_len)
+        while True:
+            ok = (self.pool.ensure_pages(req.rid, tokens)
+                  if self.paged and self.pool is not None
+                  else self.blocks.ensure(req.rid, tokens))
+            if ok:
+                return
+            susp = self._suspended(entries, exclude=(req.rid,))
+            if not susp:
+                raise RuntimeError("paged KV pool exhausted: no suspended "
+                                   "pages left to evict")
+            victim = max(susp, key=lambda e: (e.pred_remaining, e.rid))
+            shortfall = max(
+                1, (-(-tokens // self.ecfg.page_size)
+                    - self.blocks.resident_pages(req.rid)
+                    - self.blocks.free_pages()))
+            if self.pool is not None:
+                self.pool.evict_tail(victim.rid, shortfall)
+            else:
+                self.blocks.evict_tail(victim.rid, shortfall)
 
     # ------------------------------------------------------------------
     # sim mode: oracle probe statistics, no device math
@@ -329,10 +493,13 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                max_batch=16, mem_budget=1 << 62, mode="sim",
                predictor=None, model=None, params=None,
                hardware: HardwareSpec | None = None, seed=0,
-               probe_interval=1, oom_mode="discard") -> EngineStats:
+               probe_interval=1, oom_mode="discard", kv_layout="contig",
+               page_size=16, max_len=1024) -> EngineStats:
     ecfg = EngineConfig(policy=policy, c_limit=c_limit, max_batch=max_batch,
                         mem_budget=mem_budget, mode=mode, seed=seed,
                         probe_interval=probe_interval, oom_mode=oom_mode,
+                        kv_layout=kv_layout, page_size=page_size,
+                        max_len=max_len,
                         hardware=hardware or HardwareSpec())
     import copy
     reqs = copy.deepcopy(requests)

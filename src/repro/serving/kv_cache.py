@@ -1,25 +1,42 @@
-"""Slot-pool KV cache manager (the TPU-native replacement for PagedAttention).
+"""KV-cache managers: contiguous slot pool and block-granular paged pool.
 
-A fixed pool of ``slots`` sequence slots is allocated once per engine
-(static shapes for XLA); requests map onto slots for their lifetime in the
-batch. The OOM mode is the paper's choice: *discard and recompute* — a
-preempted request's slot is released, its cache garbage-collected lazily by
-``reset_slots`` (kpos=-1 kills stale attention entries; SSM state zeroed),
-and on re-admission the engine re-prefills prompt + generated-so-far.
+Two layouts coexist behind the engine's ``kv_layout`` switch:
 
-``bytes_for`` is the arch-aware preemption-cost function m(age) from
-DESIGN.md section 4: dense KV grows linearly with context, sliding-window
-layers clamp at the window, SSM layers cost O(1) state. The scheduler uses
-it both for the admission budget and (implicitly, via the paper's C*r rule)
-for limiting preemption.
+* ``contig`` — :class:`SlotPool`: a fixed pool of ``slots`` sequence slots
+  allocated once per engine (static shapes for XLA); requests map onto slots
+  for their lifetime in the batch. The OOM mode is the paper's choice:
+  *discard and recompute* — a preempted request's slot is released, its
+  cache garbage-collected lazily (kpos=-1 kills stale attention entries;
+  SSM state zeroed), and on re-admission the engine re-prefills
+  prompt + generated-so-far.
+
+* ``paged`` — :class:`BlockManager` + :class:`PagedSlotPool`: the KV store
+  is a pool of fixed-size pages (``page_size`` tokens each) shared by all
+  sequences, addressed through per-request block tables. Preemption can
+  then free *or retain* memory at page granularity: a preempted request's
+  pages stay resident while memory allows, and re-admission re-links them
+  into the new slot's block-table row without any copy ("copy-on-admit" is
+  a table write, not a cache move), so only evicted pages are recomputed.
+  This is the mechanism the paper's Section 3.3 preemption-cost discussion
+  assumes away — paging makes the C-limit sweep's recompute term smaller.
+
+``bytes_for_context`` is the arch-aware preemption-cost function m(age)
+from DESIGN.md section 4: dense KV grows linearly with context,
+sliding-window layers clamp at the window, SSM layers cost O(1) state.
+``paged_bytes_for_context`` is its page-granular counterpart (token counts
+round up to whole pages — the fragmentation the scheduler must budget
+for). The scheduler uses these both for the admission budget and
+(implicitly, via the paper's C*r rule) for limiting preemption.
 """
 
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import (KIND_ATTN, KIND_HYBRID, KIND_LOCAL, KIND_MOE,
                           KIND_SSM, ModelConfig)
@@ -62,6 +79,186 @@ def bytes_for_context(cfg: ModelConfig, context_len: int) -> int:
     return total
 
 
+def pages_for_tokens(tokens: int, page_size: int) -> int:
+    return max(0, math.ceil(tokens / page_size))
+
+
+def page_bytes(cfg: ModelConfig, page_size: int) -> int:
+    """KV bytes of one page across all non-SSM layers (window layers too:
+    their ring buffers are page-sized in the accounting model)."""
+    per_tok = sum(bytes_per_token_kind(cfg, kind) for kind in cfg.layer_kinds)
+    return per_tok * page_size
+
+
+def paged_bytes_for_context(cfg: ModelConfig, context_len: int,
+                            page_size: int) -> int:
+    """Page-granular m(age): like ``bytes_for_context`` but every token
+    count rounds up to whole pages, exposing allocation fragmentation.
+    SSM state and cross-attention caches are unpaged (fixed-size)."""
+    rounded = pages_for_tokens(context_len, page_size) * page_size
+    total = 0
+    for kind in cfg.layer_kinds:
+        per_tok = bytes_per_token_kind(cfg, kind)
+        if kind in (KIND_LOCAL, KIND_HYBRID) and cfg.sliding_window:
+            win = min(context_len, cfg.sliding_window)
+            total += per_tok * pages_for_tokens(win, page_size) * page_size
+        else:
+            total += per_tok * rounded
+        if kind in (KIND_SSM, KIND_HYBRID):
+            total += ssm_state_bytes(cfg)
+    if cfg.cross_attention and cfg.encoder_seq:
+        total += (cfg.num_layers * 2 * cfg.kv_dim * dtype_bytes(cfg)
+                  * cfg.encoder_seq)
+    return total
+
+
+def supports_page_retention(cfg: ModelConfig) -> bool:
+    """Retaining a preempted request's KV pages is only coherent when the
+    *whole* recurrent state lives in those pages: pure global-attention
+    stacks (dense/MoE). SSM state, ring buffers and cross caches are
+    per-slot and reset on release, so such archs fall back to
+    discard-and-recompute (still with page-accurate accounting)."""
+    return (all(k in (KIND_ATTN, KIND_MOE) for k in cfg.layer_kinds)
+            and not cfg.cross_attention and not cfg.kv_quant)
+
+
+class BlockManager:
+    """Free-list page allocator with per-request block tables.
+
+    Physical page ids run ``first_id .. first_id + num_pages - 1``; id 0 is
+    reserved as the null page (device ``pkpos`` stays -1 there forever, so
+    unallocated block-table entries mask out cleanly). ``num_pages=0``
+    means unbounded (sim-mode accounting, no device pool behind it).
+
+    Per request the manager tracks the ordered list of *resident* pages
+    (covering logical pages ``[0, len(pages))``), a count of tail pages
+    swapped to host memory, and ``cached_tokens`` — how many prefix tokens
+    the resident+host pages actually hold. Eviction and swap are tail-first
+    so the retained portion is always a clean prefix.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, first_id: int = 1):
+        if page_size <= 0:
+            raise ValueError("page_size must be positive")
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.bounded = num_pages > 0
+        self.free: list[int] = (
+            list(range(first_id, first_id + num_pages))[::-1]
+            if self.bounded else [])
+        self._next_id = first_id + num_pages
+        self.pages: dict[int, list[int]] = {}
+        self.host_pages: dict[int, int] = {}
+        self.cached_tokens: dict[int, int] = {}
+
+    # -- allocation ------------------------------------------------------
+    def _take_page(self) -> int | None:
+        if self.free:
+            return self.free.pop()
+        if not self.bounded:
+            pid = self._next_id
+            self._next_id += 1
+            return pid
+        return None
+
+    def free_pages(self) -> int:
+        return len(self.free) if self.bounded else 1 << 30
+
+    def ensure(self, rid: int, tokens: int) -> bool:
+        """Grow ``rid``'s resident page list to cover ``tokens`` prefix
+        tokens. Returns False (allocating nothing) on pool exhaustion."""
+        have = self.pages.setdefault(rid, [])
+        need = pages_for_tokens(tokens, self.page_size) - len(have)
+        if need <= 0:
+            return True
+        if self.bounded and len(self.free) < need:
+            return False
+        for _ in range(need):
+            have.append(self._take_page())
+        return True
+
+    def note_cached(self, rid: int, tokens: int):
+        """Record that the prefix up to ``tokens`` is now materialized."""
+        cap = ((len(self.pages.get(rid, ())) + self.host_pages.get(rid, 0))
+               * self.page_size)
+        self.cached_tokens[rid] = min(tokens, cap)
+
+    # -- queries ---------------------------------------------------------
+    def block_table(self, rid: int) -> list[int]:
+        return list(self.pages.get(rid, ()))
+
+    def resident_pages(self, rid: int) -> int:
+        return len(self.pages.get(rid, ()))
+
+    def resident_tokens(self, rid: int) -> int:
+        return min(self.cached_tokens.get(rid, 0),
+                   self.resident_pages(rid) * self.page_size)
+
+    def total_resident_pages(self) -> int:
+        return sum(len(p) for p in self.pages.values())
+
+    # -- eviction / swap (tail-first) -----------------------------------
+    def evict_tail(self, rid: int, n_pages: int) -> list[int]:
+        """Discard up to ``n_pages`` tail pages (their tokens must be
+        recomputed on resume). Host-swapped tail pages are dropped first —
+        they are beyond the resident prefix. Returns freed physical ids."""
+        dropped_host = min(self.host_pages.get(rid, 0), n_pages)
+        if dropped_host:
+            self.host_pages[rid] -= dropped_host
+            n_pages -= dropped_host
+        have = self.pages.get(rid, [])
+        freed = []
+        for _ in range(min(n_pages, len(have))):
+            freed.append(have.pop())
+        if self.bounded:
+            self.free.extend(freed)
+        self.note_cached(rid, self.cached_tokens.get(rid, 0))
+        return freed
+
+    def swap_out_tail(self, rid: int, n_pages: int) -> list[int]:
+        """Move up to ``n_pages`` tail pages to host memory: physical pages
+        are freed but their tokens stay cached (swap-in restores them).
+        Returns the freed physical ids."""
+        have = self.pages.get(rid, [])
+        freed = []
+        for _ in range(min(n_pages, len(have))):
+            freed.append(have.pop())
+        if freed:
+            self.host_pages[rid] = self.host_pages.get(rid, 0) + len(freed)
+            if self.bounded:
+                self.free.extend(freed)
+        return freed
+
+    def swap_in(self, rid: int) -> int:
+        """Re-allocate physical pages for host-swapped tail pages.
+        Returns the number of pages brought back (0 if none or if the pool
+        cannot hold them — caller must evict first)."""
+        n = self.host_pages.get(rid, 0)
+        if not n:
+            return 0
+        if self.bounded and len(self.free) < n:
+            return 0
+        have = self.pages.setdefault(rid, [])
+        for _ in range(n):
+            have.append(self._take_page())
+        self.host_pages[rid] = 0
+        return n
+
+    # -- lifecycle -------------------------------------------------------
+    def resume(self, rid: int) -> int:
+        """Copy-on-admit: re-link the retained prefix on re-admission (a
+        block-table write, no cache copy). Returns retained token count."""
+        return self.resident_tokens(rid)
+
+    def free_request(self, rid: int) -> list[int]:
+        freed = self.pages.pop(rid, [])
+        if self.bounded:
+            self.free.extend(freed)
+        self.host_pages.pop(rid, None)
+        self.cached_tokens.pop(rid, None)
+        return freed
+
+
 class SlotPool:
     """Host-side slot bookkeeping + device-side cache reset."""
 
@@ -102,6 +299,123 @@ class SlotPool:
 
     def used_slots(self) -> int:
         return self.n_slots - len(self.free)
+
+
+class PagedSlotPool(SlotPool):
+    """Slot pool whose global-attention KV lives in a shared device page
+    pool addressed through per-slot block tables.
+
+    Slots still carry the per-sequence state that cannot be paged (lengths,
+    SSM state, ring buffers, cross caches); the :class:`BlockManager` owns
+    the page pool. With ``retain=True`` (pure-attention archs) a preempted
+    request keeps its pages across release/assign — resumption re-points
+    the new slot's block-table row at them and restores ``lengths``, so
+    decode continues over the retained prefix with zero recompute.
+    """
+
+    def __init__(self, model, slots: int, max_len: int, page_size: int = 16,
+                 retain: bool | None = None):
+        self.page_size = page_size
+        self.pages_per_seq = pages_for_tokens(max_len, page_size)
+        self.model = model
+        self.cfg = model.cfg
+        self.n_slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len, kv_layout="paged",
+                                      page_size=page_size)
+        self.slot_of: dict[int, int] = {}
+        self.free = list(range(slots))[::-1]
+        self._dirty: list[int] = []
+        self._dirty_pages: list[int] = []
+        self._table_stale = True
+        # physical ids 1..N; page 0 is the null page (pkpos stays -1)
+        self.blocks = BlockManager(slots * self.pages_per_seq, page_size)
+        self.table = np.zeros((slots, self.pages_per_seq), np.int32)
+        if retain is None:
+            retain = supports_page_retention(self.cfg)
+        self.retain = retain
+
+    # -- allocation ------------------------------------------------------
+    def assign(self, rid: int) -> int:
+        slot = super().assign(rid)
+        self._write_table_row(slot, self.blocks.block_table(rid))
+        retained = self.blocks.resume(rid)
+        if retained:
+            # the slot's pending reset (from its previous occupant) must
+            # land before we restore the resumed request's length, or the
+            # deferred wipe would clobber it
+            self.flush_resets()
+            self.cache["lengths"] = self.cache["lengths"].at[slot].set(
+                retained)
+        return slot
+
+    def release(self, rid: int, retain: bool = False) -> int:
+        slot = self.slot_of[rid]
+        if not retain:
+            self._dirty_pages.extend(self.blocks.free_request(rid))
+        self._write_table_row(slot, [])
+        return super().release(rid)
+
+    # -- pages -----------------------------------------------------------
+    def ensure_pages(self, rid: int, tokens: int) -> bool:
+        """Allocate pages so ``rid`` can hold a ``tokens``-long prefix and
+        refresh its block-table row. False only on true pool exhaustion."""
+        tokens = min(tokens, self.max_len)
+        ok = self.blocks.ensure(rid, tokens)
+        if ok and rid in self.slot_of:
+            self._write_table_row(self.slot_of[rid],
+                                  self.blocks.block_table(rid))
+        return ok
+
+    def evict_tail(self, rid: int, n_pages: int) -> list[int]:
+        freed = self.blocks.evict_tail(rid, n_pages)
+        self._dirty_pages.extend(freed)
+        if rid in self.slot_of:
+            self._write_table_row(self.slot_of[rid],
+                                  self.blocks.block_table(rid))
+        return freed
+
+    def _write_table_row(self, slot: int, pages: list[int]):
+        row = np.zeros((self.pages_per_seq,), np.int32)
+        row[:len(pages)] = pages
+        self.table[slot] = row
+        self._table_stale = True
+
+    # -- device sync -----------------------------------------------------
+    def flush_resets(self):
+        super().flush_resets()
+        if self._dirty_pages:
+            n_pages = 1 + self.blocks.num_pages
+            mask = jnp.zeros((n_pages,), bool).at[
+                jnp.asarray(self._dirty_pages, jnp.int32)].set(True)
+            self.cache = _reset_pages(self.cache, mask)
+            self._dirty_pages.clear()
+        if self._table_stale:
+            self.cache["block_table"] = jnp.asarray(self.table)
+            self._table_stale = False
+
+    # -- accounting ------------------------------------------------------
+    def bytes_for(self, context_len: int) -> int:
+        return paged_bytes_for_context(
+            self.cfg, min(context_len, self.max_len), self.page_size)
+
+
+@jax.jit
+def _reset_pages(cache, page_mask):
+    """Invalidate freed pages: pkpos=-1 so stale entries never attend."""
+    new = dict(cache)
+    for key, run in cache.items():
+        if not key.startswith("run_"):
+            continue
+        subs = []
+        for sub in run:
+            if "pkpos" in sub:
+                sub = dict(sub)
+                sub["pkpos"] = jnp.where(page_mask[None, :, None], -1,
+                                         sub["pkpos"])
+            subs.append(sub)
+        new[key] = tuple(subs)
+    return new
 
 
 @jax.jit

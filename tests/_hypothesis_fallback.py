@@ -1,0 +1,50 @@
+"""Import-or-stub shim for hypothesis.
+
+The tier-1 suite must *collect* (and its non-property tests must run) on
+machines without ``hypothesis`` installed. Test modules import property
+-testing names from here instead of from hypothesis directly:
+
+    from _hypothesis_fallback import HAVE_HYPOTHESIS, given, settings, st
+
+When hypothesis is available this re-exports the real thing. When it is
+not, ``given`` becomes a decorator that marks the test skipped, and
+``st``/``hnp`` become chainable stand-ins so module-level strategy
+expressions (``st.integers(0, 9).flatmap(...)``, ``@st.composite``)
+still evaluate during collection.
+"""
+
+try:
+    from hypothesis import assume, given, settings, strategies as st
+
+    try:
+        from hypothesis.extra import numpy as hnp
+    except ImportError:          # hypothesis without the numpy extra
+        hnp = None
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any attribute access / call, returning itself, so
+        strategy-construction expressions evaluate at collection time."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+    hnp = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(
+            reason="hypothesis not installed (property test)")
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    def assume(_condition):
+        return True

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.config import get_config, get_smoke_config
 from repro.serving.engine import EngineConfig, Engine, run_policy
@@ -179,6 +179,7 @@ def test_bytes_for_context_arch_awareness():
 # real mode end-to-end
 # ---------------------------------------------------------------------------
 
+@pytest.mark.real
 @pytest.mark.parametrize("arch", ["trail-llama", "mamba2-370m"])
 def test_real_mode_end_to_end(arch):
     cfg = get_smoke_config(arch)

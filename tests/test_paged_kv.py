@@ -1,0 +1,306 @@
+"""Paged KV subsystem: BlockManager invariants, block-table correctness
+across preempt->resume (including a slot move), paged engine behaviour in
+sim and real modes, and page-granular memory accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro.config import get_config, get_smoke_config
+from repro.core.scheduler import ReqState, SchedEntry, select_batch
+from repro.serving.engine import run_policy
+from repro.serving.kv_cache import (BlockManager, PagedSlotPool,
+                                    bytes_for_context, page_bytes,
+                                    paged_bytes_for_context,
+                                    supports_page_retention)
+from repro.serving.workload import WorkloadConfig, generate
+
+CFG = get_config("granite-3-8b")
+
+
+# ---------------------------------------------------------------------------
+# BlockManager
+# ---------------------------------------------------------------------------
+
+def test_block_manager_alloc_and_exhaustion():
+    bm = BlockManager(num_pages=4, page_size=8)
+    assert bm.ensure(1, 16)                 # 2 pages
+    assert bm.ensure(2, 16)                 # 2 pages
+    assert bm.free_pages() == 0
+    assert not bm.ensure(3, 8)              # exhausted: allocates nothing
+    assert bm.resident_pages(3) == 0
+    bm.free_request(1)
+    assert bm.free_pages() == 2
+    assert bm.ensure(3, 8)
+    # distinct physical ids across requests, all within the id range
+    ids = bm.block_table(2) + bm.block_table(3)
+    assert len(set(ids)) == len(ids)
+    assert all(1 <= i <= 4 for i in ids)
+
+
+def test_block_manager_partial_growth_is_atomic():
+    bm = BlockManager(num_pages=3, page_size=8)
+    assert bm.ensure(1, 16)
+    assert not bm.ensure(2, 24)             # needs 3, only 1 free
+    assert bm.resident_pages(2) == 0        # nothing allocated on failure
+    assert bm.ensure(2, 8)
+
+
+def test_block_manager_tail_eviction_clamps_cached_tokens():
+    bm = BlockManager(num_pages=8, page_size=8)
+    bm.ensure(1, 30)                        # 4 pages
+    bm.note_cached(1, 30)
+    assert bm.resident_tokens(1) == 30
+    bm.evict_tail(1, 1)
+    assert bm.resident_pages(1) == 3
+    assert bm.resident_tokens(1) == 24      # clamped to surviving pages
+    assert bm.resume(1) == 24               # resume sees the clean prefix
+    bm.evict_tail(1, 10)                    # over-eviction is safe
+    assert bm.resident_tokens(1) == 0
+
+
+def test_block_manager_swap_roundtrip_preserves_tokens():
+    bm = BlockManager(num_pages=4, page_size=8)
+    bm.ensure(1, 32)
+    bm.note_cached(1, 30)
+    freed = bm.swap_out_tail(1, 2)
+    assert len(freed) == 2
+    assert bm.free_pages() == 2
+    assert bm.resident_tokens(1) == 16      # resident prefix only
+    assert bm.cached_tokens[1] == 30        # host still holds the tail
+    assert bm.swap_in(1) == 2
+    assert bm.resident_tokens(1) == 30
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 64)),
+                min_size=1, max_size=60))
+@settings(max_examples=60, deadline=None)
+def test_block_manager_never_double_books_pages(ops):
+    """Random ensure/free interleavings: every resident physical page is
+    owned by exactly one request and the free list never overlaps."""
+    bm = BlockManager(num_pages=10, page_size=8)
+    for rid, tokens in ops:
+        if bm.resident_pages(rid) and tokens % 3 == 0:
+            bm.free_request(rid)
+        else:
+            bm.ensure(rid, tokens)
+        owned = [p for ps in bm.pages.values() for p in ps]
+        assert len(set(owned)) == len(owned)
+        assert not (set(owned) & set(bm.free))
+        assert len(owned) + len(bm.free) == 10
+
+
+# ---------------------------------------------------------------------------
+# page-granular accounting
+# ---------------------------------------------------------------------------
+
+def test_paged_bytes_rounds_up_to_pages():
+    ps = 16
+    assert paged_bytes_for_context(CFG, 1, ps) == \
+        paged_bytes_for_context(CFG, ps, ps)
+    assert paged_bytes_for_context(CFG, ps + 1, ps) == \
+        paged_bytes_for_context(CFG, 2 * ps, ps)
+    # page-aligned contexts cost the same as exact accounting (dense arch)
+    assert paged_bytes_for_context(CFG, 256, ps) == \
+        bytes_for_context(CFG, 256)
+    assert paged_bytes_for_context(CFG, 250, ps) > \
+        bytes_for_context(CFG, 250)
+    assert page_bytes(CFG, ps) * (256 // ps) == \
+        paged_bytes_for_context(CFG, 256, ps)
+
+
+def test_page_retention_gating():
+    assert supports_page_retention(get_config("granite-3-8b"))
+    assert supports_page_retention(get_config("trail-llama"))
+    assert not supports_page_retention(get_config("mamba2-370m"))
+    assert not supports_page_retention(get_config("gemma3-1b"))
+    assert not supports_page_retention(get_config("whisper-tiny"))
+
+
+@given(st.lists(st.tuples(st.integers(1, 128), st.integers(0, 400),
+                          st.floats(1.0, 400.0)),
+                min_size=1, max_size=24),
+       st.integers(1, 64))
+@settings(max_examples=80, deadline=None)
+def test_scheduled_paged_bytes_never_exceed_budget(jobs, n_pages_budget):
+    """Hypothesis invariant: under paged accounting (with its round-up
+    fragmentation) the scheduler's admitted set stays within mem_budget.
+    srpt pins nothing, so the bound is strict."""
+    ps = 16
+    budget = n_pages_budget * page_bytes(CFG, ps)
+    entries = {}
+    for i, (prompt, age, pred) in enumerate(jobs):
+        e = SchedEntry(rid=i, arrival=float(i), prompt_len=prompt,
+                       r0=pred, pred_remaining=pred, age=age)
+        entries[i] = e
+    bytes_fn = lambda e: paged_bytes_for_context(
+        CFG, e.prompt_len + e.age + 1, ps)
+    d = select_batch(entries, policy="srpt", max_batch=8,
+                     mem_budget=budget, bytes_fn=bytes_fn)
+    used = sum(bytes_fn(entries[rid]) for rid in d.scheduled)
+    assert used <= budget
+    assert len(d.scheduled) <= 8
+
+
+# ---------------------------------------------------------------------------
+# paged engine: sim mode
+# ---------------------------------------------------------------------------
+
+def small_workload(n=100, rate=20.0, seed=4):
+    wc = WorkloadConfig(n_requests=n, request_rate=rate, seed=seed,
+                        vocab=CFG.vocab_size)
+    return generate(wc)
+
+
+def test_paged_engine_completes_and_skips_recompute():
+    """With memory slack, paged preemption retains every page: same
+    workload finishes with zero recomputed tokens, vs >0 for contig."""
+    reqs = small_workload()
+    contig = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                        kv_layout="contig")
+    paged = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                       kv_layout="paged", page_size=16)
+    assert len(paged.latencies) == len(reqs)
+    assert contig.n_preemptions > 0 and paged.n_preemptions > 0
+    assert contig.recomputed_tokens > 0
+    assert paged.recomputed_tokens == 0
+    assert paged.recomputed_tokens < contig.recomputed_tokens
+
+
+def test_paged_engine_tight_budget_evicts_not_discards():
+    """Under real memory pressure pages are evicted tail-first, so paged
+    recompute stays strictly below contiguous discard-and-recompute."""
+    reqs = small_workload(n=120, rate=30.0)
+    budget = 6 * bytes_for_context(CFG, 256)
+    contig = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                        mem_budget=budget, max_batch=64, kv_layout="contig")
+    paged = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                       mem_budget=budget, max_batch=64, kv_layout="paged",
+                       page_size=16)
+    assert len(paged.latencies) == len(reqs)
+    assert paged.recomputed_tokens < contig.recomputed_tokens
+    # suspended + scheduled pages respect the budget (small slack for the
+    # pinned-growth exemption select_batch documents)
+    assert paged.peak_mem_bytes <= budget * 1.25
+
+
+def test_paged_swap_moves_pages_not_sequences():
+    """oom_mode="swap" + paged: only the pages squeezed out by pressure
+    cross the DMA, so swap traffic drops vs whole-sequence swapping."""
+    reqs = small_workload(n=120, rate=30.0)
+    budget = 6 * bytes_for_context(CFG, 256)
+    contig = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                        mem_budget=budget, max_batch=64, oom_mode="swap",
+                        kv_layout="contig")
+    paged = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                       mem_budget=budget, max_batch=64, oom_mode="swap",
+                       kv_layout="paged", page_size=16)
+    assert contig.swapped_bytes > 0
+    assert paged.swapped_bytes > 0
+    assert paged.swapped_bytes < contig.swapped_bytes
+    assert paged.recomputed_tokens == 0
+    assert len(paged.latencies) == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# paged pool: real mode block-table correctness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.real
+def test_paged_pool_retention_survives_preempt_and_slot_move():
+    """Preempt a request, hand its slot to another rid, resume it in a
+    different slot: the re-linked block table must reproduce the exact
+    logits of an uninterrupted run."""
+    cfg = get_smoke_config("trail-llama")
+    from repro.models.model import Model
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    decode = jax.jit(m.decode_step)
+    prefill = jax.jit(m.prefill_chunk)
+    prompts = jax.random.randint(jax.random.key(1), (2, 8), 4,
+                                 cfg.vocab_size)
+
+    def uninterrupted():
+        cache = m.init_cache(2, 32)
+        logits, cache, *_ = prefill(params, cache, prompts)
+        out, tok = [], jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for _ in range(6):
+            logits, cache, *_ = decode(params, cache, tok)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            out.append(np.asarray(logits))
+        return out
+
+    def preempt_resume():
+        pool = PagedSlotPool(m, slots=2, max_len=32, page_size=8)
+        assert pool.retain
+        rid = 7
+        slot = pool.assign(rid)
+        pool.ensure_pages(rid, 8)
+        pool.flush_resets()
+        toks = np.zeros((2, 8), np.int32)
+        valid = np.zeros((2, 8), bool)
+        toks[slot] = np.asarray(prompts)[0]
+        valid[slot] = True
+        logits, pool.cache, *_ = prefill(params, pool.cache,
+                                         jnp.asarray(toks),
+                                         valid=jnp.asarray(valid))
+        out = []
+        tok = np.zeros((2, 1), np.int32)
+        active = np.zeros((2,), bool)
+        tok[slot, 0] = int(jnp.argmax(logits[slot]))
+        active[slot] = True
+        for step in range(3):
+            pool.ensure_pages(rid, 9 + step)
+            pool.flush_resets()
+            logits, pool.cache, *_ = decode(params, pool.cache,
+                                            jnp.asarray(tok),
+                                            active=jnp.asarray(active))
+            out.append(np.asarray(logits[slot]))
+            tok[slot, 0] = int(jnp.argmax(logits[slot]))
+        saved = tok[slot, 0]
+        pool.blocks.note_cached(rid, 11)     # 8 prompt + 3 decoded written
+        pool.release(rid, retain=True)
+        other = pool.assign(99)              # old slot goes to someone else
+        slot2 = pool.assign(rid)             # resume in the remaining slot
+        assert slot2 != other
+        assert int(pool.cache["lengths"][slot2]) == 11
+        tok = np.zeros((2, 1), np.int32)
+        active = np.zeros((2,), bool)
+        tok[slot2, 0] = saved
+        active[slot2] = True
+        for step in range(3):
+            pool.ensure_pages(rid, 12 + step)
+            pool.flush_resets()
+            logits, pool.cache, *_ = decode(params, pool.cache,
+                                            jnp.asarray(tok),
+                                            active=jnp.asarray(active))
+            out.append(np.asarray(logits[slot2]))
+            tok[slot2, 0] = int(jnp.argmax(logits[slot2]))
+        return out
+
+    ref = uninterrupted()
+    got = preempt_resume()
+    for i, (r, g) in enumerate(zip(ref, got)):
+        assert float(np.max(np.abs(r[0] - g))) == 0.0, f"step {i} diverged"
+
+
+@pytest.mark.real
+def test_paged_real_mode_end_to_end():
+    cfg = get_smoke_config("trail-llama")
+    from repro.models.model import Model
+    from repro.serving.predictors import ProbePredictor
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    wc = WorkloadConfig(n_requests=6, request_rate=100.0, seed=1,
+                        vocab=cfg.vocab_size, prompt_mean=8.0,
+                        out_median=6.0, max_out=16)
+    reqs = generate(wc)
+    pred = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                          embed_table=params["embed"])
+    s = run_policy(cfg, "trail", reqs, max_batch=3, mode="real", model=m,
+                   params=params, predictor=pred, kv_layout="paged",
+                   page_size=8, max_len=64)
+    assert len(s.latencies) == len(reqs)
+    assert s.iterations > 0

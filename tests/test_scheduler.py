@@ -2,7 +2,7 @@
 
 import math
 
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core.scheduler import (Decision, ReqState, SchedEntry, select_batch)
 

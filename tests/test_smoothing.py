@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_fallback import given, hnp, settings, st
 
 from repro.config import ProbeConfig
 from repro.core.bins import bin_index, bin_means

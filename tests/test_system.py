@@ -92,6 +92,7 @@ def test_long_500k_skip_rules():
                                      "whisper-tiny", "paligemma-3b"))
 
 
+@pytest.mark.slow
 def test_dryrun_lowers_on_production_mesh():
     """Subprocess: the smallest (arch, shape) pair must lower+compile on the
     256-chip mesh via the real entry point."""
