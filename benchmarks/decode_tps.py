@@ -1,0 +1,179 @@
+"""Real-mode decode hot path: per-token scheduling loop vs device megasteps.
+
+Two measurement levels, both on the tiny ``trail_llama`` smoke config:
+
+* engine — ``run_policy(mode="real")`` end to end. ``probe_interval=1`` is
+  the per-token baseline (scheduler, page allocation, cost model and host
+  bookkeeping consulted after every generated token); ``probe_interval=k``
+  amortizes all of that over k-token device-resident megasteps. This is
+  the headline ``speedup_k4`` number.
+
+* device_loop — the raw decode loops without the engine around them. The
+  baseline reproduces the pre-megastep hot path exactly: one un-donated
+  ``decode_step`` jit call per token, the full (B, vocab) logits pulled to
+  the host, host-side argmax + probe softmax, token fed back from Python.
+  ``decode_multi(k)`` transfers only (B,k) ids + (B,k,num_bins) probe
+  posteriors, so its host bytes/token are vocab-independent.
+
+Writes ``BENCH_decode_tps.json`` at the repo root (perf trajectory seed).
+
+    PYTHONPATH=src python -m benchmarks.decode_tps --quick
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_smoke_config
+from repro.models.model import Model
+from repro.serving.engine import run_policy
+from repro.serving.kv_cache import donating_jit
+from repro.serving.predictors import ProbePredictor
+from repro.serving.workload import WorkloadConfig, generate
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+KS = (1, 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# engine level: per-token scheduling loop vs k-token megasteps
+# ---------------------------------------------------------------------------
+
+def bench_engine(quick: bool):
+    cfg = get_smoke_config("trail-llama")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    wc = WorkloadConfig(n_requests=12 if quick else 24, request_rate=1e9,
+                        seed=1, vocab=cfg.vocab_size, prompt_mean=8.0,
+                        out_median=40.0, max_out=48)
+    pred = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                          embed_table=params["embed"])
+    reps = 2 if quick else 3
+
+    def measure(pi):
+        kw = dict(max_batch=8, mode="real", model=m, params=params,
+                  predictor=pred, probe_interval=pi, max_len=128)
+        run_policy(cfg, "trail", generate(wc), **kw)    # warm compiles
+        best, toks = 1e9, 0
+        for _ in range(reps):
+            reqs = generate(wc)
+            toks = sum(min(r.true_out_len, r.max_new_tokens) for r in reqs)
+            t0 = time.perf_counter()
+            s = run_policy(cfg, "trail", reqs, **kw)
+            best = min(best, time.perf_counter() - t0)
+            assert len(s.latencies) == len(reqs)
+        return toks / best
+
+    out = {}
+    base = measure(1)
+    out["probe_interval_1"] = {"tokens_per_s": base}
+    print(f"engine  per-token loop (k=1): {base:10.1f} tok/s", flush=True)
+    for k in KS[1:]:
+        tps = measure(k)
+        out[f"probe_interval_{k}"] = {"tokens_per_s": tps,
+                                      "speedup_vs_per_token": tps / base}
+        print(f"engine  megasteps     (k={k}): {tps:10.1f} tok/s  "
+              f"({tps / base:.2f}x)", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# device level: the raw loops, host-transfer accounting
+# ---------------------------------------------------------------------------
+
+def bench_device_loop(quick: bool):
+    B, prompt_len, max_len = 4, 8, 128
+    T = 64 if quick else 256
+    cfg = get_smoke_config("trail-llama")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    prompts = jax.random.randint(jax.random.key(1), (B, prompt_len), 4,
+                                 cfg.vocab_size)
+    cache0 = m.init_cache(B, max_len)
+    logits, cache0, *_ = jax.jit(m.prefill_chunk)(params, cache0, prompts)
+    tok0 = np.asarray(jnp.argmax(logits, -1)[:, None].astype(jnp.int32))
+    decode_step = jax.jit(m.decode_step)
+    decode_multi = donating_jit(m.decode_multi,
+                                static_argnames=("k", "eos_id"))
+
+    def fresh():
+        return jax.tree_util.tree_map(jnp.copy, cache0)
+
+    def run_baseline(cache, tok, steps):
+        # pre-megastep engine loop: (B, vocab) logits to host every token
+        for _ in range(steps):
+            lo, cache, _, pl = decode_step(params, cache, jnp.asarray(tok))
+            logits_np = np.asarray(lo)
+            pln = np.asarray(pl)
+            p = np.exp(pln - pln.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            tok = np.argmax(logits_np, -1)[:, None].astype(np.int32)
+        return cache
+
+    def run_megastep(cache, tok, nsteps, k):
+        for _ in range(nsteps):
+            toks, cache, probs, n_emit = decode_multi(
+                params, cache, jnp.asarray(tok), k=k)
+            toks_np = np.asarray(toks)                  # (B, k) ids only
+            _ = np.asarray(probs)
+            _ = np.asarray(n_emit)
+            tok = toks_np[:, -1:].astype(np.int32)
+        return cache
+
+    reps = 3 if quick else 5
+    out = {}
+    run_baseline(fresh(), tok0, 4)                      # warmup / compile
+    best = 1e9
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        run_baseline(fresh(), tok0, T)
+        best = min(best, time.perf_counter() - t0)
+    bpt = B * (cfg.vocab_size * 4 + cfg.probe.num_bins * 4)
+    out["baseline"] = {"tokens_per_s": B * T / best,
+                       "host_bytes_per_token": bpt}
+    print(f"device  per-token loop: {B * T / best:10.1f} tok/s  "
+          f"{bpt} host B/tok (O(B*V) logits)", flush=True)
+    for k in KS:
+        run_megastep(fresh(), tok0, 2, k)               # warmup / compile
+        best = 1e9
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            run_megastep(fresh(), tok0, T // k, k)
+            best = min(best, time.perf_counter() - t0)
+        tps = B * (T // k) * k / best
+        bpt_k = (B * (k * 4 + k * cfg.probe.num_bins * 4 + 4)) // k
+        out[f"k{k}"] = {"tokens_per_s": tps, "host_bytes_per_token": bpt_k}
+        print(f"device  megastep k={k}: {tps:10.1f} tok/s  "
+              f"{bpt_k} host B/tok (vocab-independent)", flush=True)
+    return out
+
+
+def run(quick: bool = True):
+    results = {"config": "trail-llama-smoke", "mode": "real"}
+    results["engine"] = bench_engine(quick)
+    results["device_loop"] = bench_device_loop(quick)
+    results["speedup_k4"] = \
+        results["engine"]["probe_interval_4"]["speedup_vs_per_token"]
+    results["transfer_reduction_k4"] = (
+        results["device_loop"]["baseline"]["host_bytes_per_token"]
+        / results["device_loop"]["k4"]["host_bytes_per_token"])
+    with open(os.path.join(ROOT, "BENCH_decode_tps.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"speedup_k4={results['speedup_k4']:.2f}x  transfer_reduction_k4="
+          f"{results['transfer_reduction_k4']:.0f}x", flush=True)
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller workload / fewer steps (CI smoke)")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -33,9 +33,10 @@ def run(quick: bool = True):
         emit(f"table1.probe_tps_cpu_b{batch}", us, f"batch={batch}")
     # overhead vs an 8B serving model: probe params / model params
     probe_params = d * pc.hidden + pc.hidden * pc.num_bins
-    results["flop_overhead_frac"] = probe_params / 8e9
-    emit("table1.probe_flop_overhead", 0.0,
-         f"{probe_params/8e9:.5%} of an 8B model per token")
+    frac = probe_params / 8e9
+    results["flop_overhead_frac"] = frac
+    emit("table1.probe_flop_overhead", frac,
+         f"{frac:.5%} of an 8B model per token")
     save_json("probe_tps", results)
     return results
 

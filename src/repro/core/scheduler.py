@@ -109,8 +109,19 @@ class Decision:
 
 
 def select_batch(entries: dict[int, SchedEntry], *, policy: str,
-                 max_batch: int, mem_budget: int, bytes_fn) -> Decision:
+                 max_batch: int, mem_budget: int, bytes_fn,
+                 lookahead: int = 1) -> Decision:
     """Pick the next iteration's batch.
+
+    ``lookahead`` is the number of decode tokens every scheduled row will
+    generate before the scheduler is consulted again (1 for the per-token
+    loop; k for the engine's k-token decode megasteps). The caller's
+    ``bytes_fn`` should account for that growth (context + lookahead), and
+    with lookahead > 1 the prediction-based policies additionally pin any
+    RUNNING job whose predicted remaining length fits inside the upcoming
+    megastep: preempting a job that would have finished within k tokens
+    discards nearly-complete work for at most k tokens of relief. With the
+    default lookahead=1 the decision is exactly the per-token one.
 
     Invariants (tested by hypothesis):
       * non-preemptable RUNNING jobs are always scheduled (policy != fcfs/sjf
@@ -137,6 +148,20 @@ def select_batch(entries: dict[int, SchedEntry], *, policy: str,
         must_keep = set() if policy in ("srpt", "mlfq") else set(
             e.rid for e in live
             if e.state is ReqState.RUNNING and not e.preemptable)
+        if lookahead > 1 and policy != "mlfq":   # mlfq has no predictions
+            # megastep lookahead: about-to-finish jobs ride out the megastep
+            must_keep |= set(
+                e.rid for e in live
+                if e.state is ReqState.RUNNING
+                and e.pred_remaining <= lookahead)
+            # lookahead-pinned jobs keep their normal (finite) rank, so
+            # unlike -inf-ranked non-preemptables they would not sort
+            # first: move every pinned entry to the front (stable) so
+            # pinned slots/bytes are claimed before any admission — else
+            # a better-ranked WAITING job could take the last slot and
+            # the forced pin would oversubscribe max_batch / the pool
+            ordered = ([e for e in ordered if e.rid in must_keep]
+                       + [e for e in ordered if e.rid not in must_keep])
 
     decision = Decision()
     used_mem = 0

@@ -11,6 +11,9 @@ Kernels:
                      long_500k hot loop)
   paged_decode_attention — flash-decode over a paged KV cache: block-table
                      gather across non-contiguous pages via scalar prefetch
+                     (plus a multi-query variant that amortizes the prefetch
+                     and page streaming over a decode megastep / prefill
+                     chunk's T query tokens)
   ssd_scan        — Mamba2 chunked state-space-dual scan
   probe           — the paper's fused probe MLP + softmax + Bayesian update
 """

@@ -51,6 +51,16 @@ def paged_decode_attention(q, k_pages, v_pages, kpos_pages, block_table,
         softcap=softcap, interpret=interpret)
 
 
+def paged_decode_attention_multi(q, k_pages, v_pages, kpos_pages,
+                                 block_table, q_pos, *, window=0,
+                                 softcap=0.0, interpret=None):
+    if interpret is None:
+        interpret = _interpret_default()
+    return _paged.paged_decode_attention_multi(
+        q, k_pages, v_pages, kpos_pages, block_table, q_pos, window=window,
+        softcap=softcap, interpret=interpret)
+
+
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
     if interpret is None:
         interpret = _interpret_default()

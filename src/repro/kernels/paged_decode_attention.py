@@ -16,6 +16,15 @@ standard position mask (kpos >= 0, kpos <= q_pos) then drops them, and
 stale data from a page's previous owner is likewise invisible because page
 resets set pkpos=-1. All G grouped query heads ride along in VMEM as in
 the contiguous kernel.
+
+``paged_decode_attention_multi`` is the multi-query variant for decode
+megasteps / chunked prefill over the same pool: T query tokens per
+sequence ride in VMEM together and every page is streamed HBM->VMEM
+*once* for all T of them, so the block-table scalar prefetch and the page
+DMA traffic are amortized T-fold versus T single-query calls. Causality
+within the chunk comes from the same position mask (the in-flight tokens'
+K/V must already be written to their pages — pages are request-exclusive,
+so write-first is safe).
 """
 
 from __future__ import annotations
@@ -115,3 +124,104 @@ def paged_decode_attention(q, k_pages, v_pages, kpos_pages, block_table,
         interpret=interpret,
     )(block_table, q_pos, qg, k_pages, v_pages, kpos_pages)
     return out.reshape(B, H, hd)
+
+
+def _paged_multi_kernel(bt_ref, qpos_ref, q_ref, k_ref, v_ref, kpos_ref,
+                        o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                        window: int, softcap: float, npages: int):
+    i_p = pl.program_id(2)
+
+    @pl.when(i_p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = pl.program_id(0)
+    q = q_ref[0, 0].astype(jnp.float32)                      # (T, G, hd)
+    T, G, hd = q.shape
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                # (ps, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    kpos = kpos_ref[0]                                       # (ps,)
+    q_pos = qpos_ref[b]                                      # (T,)
+
+    s = jax.lax.dot_general(q.reshape(T * G, hd), k,
+                            (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    valid = (kpos[None, :] >= 0) & (kpos[None, :] <= q_pos[:, None])
+    if window:
+        valid &= kpos[None, :] > q_pos[:, None] - window
+    validg = jnp.broadcast_to(valid[:, None, :],
+                              (T, G, kpos.shape[0])).reshape(T * G, -1)
+    s = jnp.where(validg, s, NEG_INF)                        # (T*G, ps)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(validg, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    m_scr[...] = m_new
+
+    @pl.when(i_p == npages - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).reshape(
+            T, G, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "interpret"))
+def paged_decode_attention_multi(q, k_pages, v_pages, kpos_pages,
+                                 block_table, q_pos, *, window: int = 0,
+                                 softcap: float = 0.0,
+                                 interpret: bool = False):
+    """q: (B,T,H,hd); k/v_pages: (P,ps,KH,hd); kpos_pages: (P,ps);
+    block_table: (B,pmax) int32 (0 = null page); q_pos: (B,T) int32
+    (-1 = inactive query) -> (B,T,H,hd).
+
+    The T queries of each sequence attend over the pool together: one
+    block-table prefetch and one page stream per (sequence, kv-head) per
+    megastep, not per token. K/V of the T in-flight tokens must already be
+    written through the block table (write-first; causality is enforced by
+    the position mask alone)."""
+    B, T, H, hd = q.shape
+    ps, KH = k_pages.shape[1], k_pages.shape[2]
+    pmax = block_table.shape[1]
+    G = H // KH
+    qg = jnp.moveaxis(q.reshape(B, T, KH, G, hd), 1, 2)      # (B,KH,T,G,hd)
+
+    kernel = functools.partial(
+        _paged_multi_kernel, scale=hd ** -0.5, window=window,
+        softcap=softcap, npages=pmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # block_table, q_pos
+        grid=(B, KH, pmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, T, G, hd),
+                         lambda b, h, p, bt, qp: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, p, bt, qp: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, h, p, bt, qp: (bt[b, p], 0, h, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, p, bt, qp: (bt[b, p], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, T, G, hd),
+                               lambda b, h, p, bt, qp: (b, h, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G,), jnp.float32),
+            pltpu.VMEM((T * G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, T, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_table, q_pos, qg, k_pages, v_pages, kpos_pages)
+    return jnp.moveaxis(out, 2, 1).reshape(B, T, H, hd)

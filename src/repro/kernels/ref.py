@@ -73,6 +73,38 @@ def paged_decode_attention_ref(q, k_pages, v_pages, kpos_pages, block_table,
                                 softcap=softcap)
 
 
+def paged_decode_attention_multi_ref(q, k_pages, v_pages, kpos_pages,
+                                     block_table, q_pos, *, window: int = 0,
+                                     softcap: float = 0.0):
+    """q: (B,T,H,hd); q_pos: (B,T) (-1 = inactive query); pool args as in
+    ``paged_decode_attention_ref``. Gather the pages in logical order and
+    attend all T queries over the flattened view (position-mask causality).
+    """
+    B, T, H, hd = q.shape
+    KH = k_pages.shape[2]
+    G = H // KH
+    k = k_pages[block_table].reshape(B, -1, KH, hd)
+    v = v_pages[block_table].reshape(B, -1, KH, hd)
+    kpos = kpos_pages[block_table].reshape(B, -1)
+    qg = q.reshape(B, T, KH, G, hd).astype(jnp.float32)
+    scores = jnp.einsum("btkgh,bmkh->bkgtm", qg, k.astype(jnp.float32))
+    scores = scores * (hd ** -0.5)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= q_pos[:, :, None])
+    if window:
+        valid &= kpos[:, None, :] > (q_pos[:, :, None] - window)
+    vmask = valid[:, None, None]
+    scores = jnp.where(vmask, scores, NEG_INF)
+    # masked softmax: inactive queries (q_pos=-1, nothing valid) -> zeros,
+    # matching the kernels' l=max(sum p, eps) guard
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(vmask, jnp.exp(scores - m), 0.0)
+    w = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgtm,bmkh->btkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
 def ssd_scan_ref(x, dt, A, Bm, Cm, init_state=None):
     """Sequential SSD recurrence (the ground truth the chunked forms must match).
 

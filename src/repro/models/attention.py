@@ -371,7 +371,8 @@ def paged_cache_write(cache_l, k_new, v_new, positions, block_table):
     return out
 
 
-def self_attention_paged(cfg: ModelConfig, p, h, cache_l, q_pos, block_table):
+def self_attention_paged(cfg: ModelConfig, p, h, cache_l, q_pos, block_table,
+                         use_kernels: bool = False):
     """One layer of paged cached self-attention (global attention only).
 
     Same semantics as ``self_attention_cached`` with window=0, but K/V are
@@ -379,12 +380,31 @@ def self_attention_paged(cfg: ModelConfig, p, h, cache_l, q_pos, block_table):
     and attends over the updated pool (pages are request-exclusive, so no
     in-chunk clobber hazard exists); prefill chunks attend over the
     gathered prefix plus the fresh in-chunk K/V, then write.
+
+    With ``use_kernels`` the gather+attend reference is replaced by the
+    Pallas flash-decode kernels, which stream pages HBM->VMEM through the
+    scalar-prefetched block table instead of materializing the gathered
+    cache: single-query for decode, multi-query (write-first, one page
+    stream for all S chunk tokens) for prefill chunks.
     """
     q, k, v = project_qkv(cfg, p, h)
     if cfg.use_rope:
         q = apply_rope(q, q_pos, cfg.rope_theta)
         k = apply_rope(k, q_pos, cfg.rope_theta)
     B, S = h.shape[:2]
+    if use_kernels:
+        from repro.kernels import ops
+        new_cache = paged_cache_write(cache_l, k, v, q_pos, block_table)
+        if S == 1:
+            out = ops.paged_decode_attention(
+                q[:, 0], new_cache["pk"], new_cache["pv"],
+                new_cache["pkpos"], block_table, q_pos[:, 0],
+                softcap=cfg.attn_logit_softcap)[:, None]
+        else:
+            out = ops.paged_decode_attention_multi(
+                q, new_cache["pk"], new_cache["pv"], new_cache["pkpos"],
+                block_table, q_pos, softcap=cfg.attn_logit_softcap)
+        return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(h.dtype), new_cache
     if S == 1:
         new_cache = paged_cache_write(cache_l, k, v, q_pos, block_table)
         out = attend(cfg, q, gather_pages(new_cache["pk"], block_table),

@@ -261,7 +261,8 @@ class Model:
                 for j, kind in enumerate(_kinds):
                     carry, c_new, a = tfm.block_cached(
                         cfg, kind, p_blk[j], carry, c_blk[j], q_pos,
-                        decode=decode, block_table=block_table)
+                        decode=decode, block_table=block_table,
+                        use_kernels=self.use_kernels)
                     new_blk.append(c_new)
                     aux = aux + a
                 return carry, (tuple(new_blk), aux)
@@ -341,6 +342,55 @@ class Model:
         tap = tap[:, 0]
         probe_logits = predictor.apply_probe(params["probe"], tap)
         return logits, new_cache, tap, probe_logits
+
+    def decode_multi(self, params, cache, tokens, active=None, budget=None,
+                     *, k: int = 1, eos_id: int = -1):
+        """Decode megastep: ``k`` fused decode+probe steps under one
+        ``lax.scan`` with on-device greedy sampling and per-row halting.
+
+        The (B, vocab) logits never leave the device — each step argmaxes
+        on device and feeds the winner back as the next query, so the host
+        round-trip per megastep is O(B*k) token ids plus O(B*k*num_bins)
+        probe posteriors instead of k transfers of O(B*vocab) logits.
+
+        tokens: (B,1) int32 — last known token per row; active: (B,) bool;
+        budget: (B,) int32 — max tokens each row may still emit (rows halt
+        early on budget exhaustion or, when ``eos_id >= 0``, after emitting
+        the EOS token; halted rows stop writing KV / advancing ``lengths``
+        exactly like inactive rows). ``k`` and ``eos_id`` must be static
+        under jit.
+
+        Returns (tokens (B,k) int32 with -1 past each row's halt point,
+        cache, probe_probs (B,k,num_bins) f32 softmax posteriors,
+        n_emitted (B,) int32).
+        """
+        B = tokens.shape[0]
+        if active is None:
+            active = jnp.ones((B,), bool)
+        if budget is None:
+            budget = jnp.full((B,), k, jnp.int32)
+        budget = jnp.minimum(budget.astype(jnp.int32), k)
+
+        def step(carry, _):
+            cache, tok, emitted, halted = carry
+            act = active & ~halted & (emitted < budget)
+            logits, cache, _, probe_logits = self.decode_step(
+                params, cache, tok, active=act)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            if eos_id >= 0:
+                halted = halted | (act & (nxt == eos_id))
+            emitted = emitted + act.astype(jnp.int32)
+            probs = jax.nn.softmax(probe_logits.astype(jnp.float32), axis=-1)
+            tok_out = jnp.where(act, nxt, -1)
+            tok_next = jnp.where(act, nxt, tok[:, 0])[:, None]
+            return (cache, tok_next, emitted, halted), (tok_out, probs)
+
+        carry0 = (cache, tokens, jnp.zeros((B,), jnp.int32),
+                  jnp.zeros((B,), bool))
+        (cache, _, emitted, _), (toks, probs) = jax.lax.scan(
+            step, carry0, None, length=k)
+        return (jnp.moveaxis(toks, 0, 1), cache,
+                jnp.moveaxis(probs, 0, 1), emitted)
 
 
 def _mask_recurrent(old_cache, new_cache, active):

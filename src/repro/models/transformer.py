@@ -150,12 +150,15 @@ def block_train(cfg: ModelConfig, kind: str, p, h, enc_out=None, positions=None)
 
 
 def block_cached(cfg: ModelConfig, kind: str, p, h, cache_l, q_pos,
-                 decode: bool = False, block_table=None):
+                 decode: bool = False, block_table=None,
+                 use_kernels: bool = False):
     """Cached-path block (prefill chunk or decode). Returns (h, cache_l, aux).
 
     h: (B,S,d); q_pos: (B,S) absolute positions (-1 = inactive slot).
     ``block_table`` (B, pmax) routes K/V through the shared page pool when
-    this run's cache is paged (pk/pv/pkpos leaves).
+    this run's cache is paged (pk/pv/pkpos leaves). ``use_kernels`` swaps
+    the paged gather+attend reference for the Pallas flash-decode kernels
+    (single-query for decode, multi-query for prefill chunks).
     """
     hn = apply_norm(cfg, p["norm1"], h)
     new_cache = dict(cache_l)
@@ -174,7 +177,8 @@ def block_cached(cfg: ModelConfig, kind: str, p, h, cache_l, q_pos,
     if "pk" in cache_l:
         kvcache = {k: cache_l[k] for k in ("pk", "pv", "pkpos")}
         a, kv_new = attn.self_attention_paged(cfg, p["attn"], hn, kvcache,
-                                              q_pos, block_table)
+                                              q_pos, block_table,
+                                              use_kernels=use_kernels)
     else:
         kv_keys = ("k", "v", "kpos", "k_scale", "v_scale")
         kvcache = {k: cache_l[k] for k in kv_keys if k in cache_l}

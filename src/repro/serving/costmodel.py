@@ -70,11 +70,29 @@ class CostModel:
                        prefill_tokens: int = 0,
                        prefill_ctx: int = 0) -> float:
         """One engine iteration: a batch of decode rows + a prefill chunk."""
+        return self.megastep_time(decode_ctxs, [1] * len(decode_ctxs),
+                                  prefill_tokens, prefill_ctx)
+
+    def megastep_time(self, decode_ctxs: list[int], emitted: list[int],
+                      prefill_tokens: int = 0,
+                      prefill_ctx: int = 0) -> float:
+        """One decode megastep: row i starts at context ``decode_ctxs[i]``
+        and generates ``emitted[i]`` tokens without returning to the host.
+
+        Per-token compute and cache streaming are unchanged (each of the k
+        scanned steps still reads the weights and the growing KV), but the
+        fixed dispatch/host overhead is paid ONCE per megastep instead of
+        once per token — the amortization the engine's megastep loop buys.
+        With all-ones ``emitted`` this is exactly ``iteration_time``.
+        """
         flops = 0.0
-        mem = float(self.param_bytes)
-        for ctx in decode_ctxs:
-            flops += 2.0 * self.active_params + self._attn_flops_per_token(ctx)
-            mem += self._cache_bytes(ctx)               # stream the cache
+        steps = max(emitted, default=0)
+        mem = float(self.param_bytes) * max(steps, 1)
+        for ctx, n in zip(decode_ctxs, emitted):
+            for j in range(n):
+                flops += (2.0 * self.active_params
+                          + self._attn_flops_per_token(ctx + j))
+                mem += self._cache_bytes(ctx + j)       # stream the cache
         if prefill_tokens:
             flops += 2.0 * self.active_params * prefill_tokens
             flops += self._attn_flops_per_token(prefill_ctx) * prefill_tokens / 2.0

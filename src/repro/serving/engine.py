@@ -8,8 +8,11 @@ One engine iteration =
      (discard-and-recompute: slot released, cache invalidated);
   3. chunked prefill for scheduled-but-unprefilled requests (shared
      per-iteration token budget, rank order);
-  4. one decode token for every scheduled prefilled request, with the probe
-     fused into the decode step; Bayesian-refine predictions (Section 3.1);
+  4. one decode MEGASTEP for every scheduled prefilled request: k =
+     probe_interval fused decode+probe steps stay resident on device
+     (lax.scan, on-device greedy sampling, donated KV buffers), with the
+     probe fused into every step; Bayesian-refine predictions (Section 3.1)
+     at each k-token probe boundary;
   5. advance the clock: real wall time, or the roofline cost model
      (CPU-only container; see costmodel.py).
 
@@ -17,9 +20,15 @@ Two execution modes:
   * real  — a JAX model actually prefills/decodes on a fixed slot pool
             (static shapes, one compile per phase); probe predictions are
             real probe outputs. Generation ends at the oracle length or
-            EOS/max_new.
+            EOS/max_new. The decode hot path runs in megasteps: scheduler,
+            page allocation and cost model are consulted once per k tokens,
+            the host round-trip is O(B*k) token ids + probe posteriors
+            (never O(B*vocab) logits), and the KV cache is donated to every
+            jit call so XLA updates it in place.
   * sim   — no device math; oracle-noise probe statistics; paper-scale
-            models under the cost model (Figures 5-7 reproduction).
+            models under the cost model (Figures 5-7 reproduction). Sim
+            stays a per-token loop: probe_interval only throttles
+            refinement there, so scheduling semantics are unchanged.
 """
 
 from __future__ import annotations
@@ -33,8 +42,8 @@ from repro.config import ModelConfig
 from repro.core.scheduler import Decision, ReqState, SchedEntry, select_batch
 from repro.serving.costmodel import CostModel, HardwareSpec
 from repro.serving.kv_cache import (BlockManager, PagedSlotPool, SlotPool,
-                                    bytes_for_context, page_bytes,
-                                    paged_bytes_for_context,
+                                    bytes_for_context, donating_jit,
+                                    page_bytes, paged_bytes_for_context,
                                     supports_page_retention)
 from repro.serving.predictors import OraclePredictor, PredictorBase
 from repro.serving.request import Request
@@ -49,7 +58,10 @@ class EngineConfig:
     prefill_chunk: int = 256        # per-iteration prefill token budget
     max_len: int = 1024             # cache slots per sequence
     probe_interval: int = 1         # refine every k-th token (paper Sec 6
-                                    # future work; k>1 cuts probe cost k x)
+                                    # future work; k>1 cuts probe cost k x).
+                                    # real mode: also the decode MEGASTEP
+                                    # length — k tokens per row stay on
+                                    # device between scheduling points
     oom_mode: str = "discard"       # "discard" (paper's choice: recompute)
                                     # | "swap" (KV to host; sim mode only)
     kv_layout: str = "contig"       # "contig" (slot cache) | "paged"
@@ -115,6 +127,10 @@ class Engine:
             raise ValueError("swap OOM mode is a cost-model study (sim only);"
                              " the real engine uses the paper's"
                              " discard-and-recompute")
+        # megastep length: real mode decodes k = probe_interval tokens per
+        # row per engine iteration without host round-trips; sim mode stays
+        # per-token (probe_interval only throttles refinement there).
+        self._k = max(1, ecfg.probe_interval) if ecfg.mode == "real" else 1
         if ecfg.mode == "real":
             assert model is not None and params is not None
             if self.paged:
@@ -124,9 +140,22 @@ class Engine:
                 self.blocks = self.pool.blocks
             else:
                 self.pool = SlotPool(model, ecfg.max_batch, ecfg.max_len)
-            import jax
-            self._decode_fn = jax.jit(model.decode_step)
-            self._prefill_fn = jax.jit(model.prefill_chunk)
+            # cache donated in both phases: XLA writes KV in place instead
+            # of copying the whole cache pytree every generated token. The
+            # jit wrappers live on the model so that repeated Engine
+            # constructions over the same model (benchmark sweeps, repeated
+            # run_policy calls) reuse the compiled executables instead of
+            # recompiling every phase per engine.
+            jit_cache = getattr(model, "_engine_jit_cache", None)
+            if jit_cache is None:
+                jit_cache = model._engine_jit_cache = {
+                    "decode_multi": donating_jit(
+                        model.decode_multi,
+                        static_argnames=("k", "eos_id")),
+                    "prefill_chunk": donating_jit(model.prefill_chunk),
+                }
+            self._decode_fn = jit_cache["decode_multi"]
+            self._prefill_fn = jit_cache["prefill_chunk"]
         elif self.paged:
             # sim mode: unbounded id space — capacity pressure is enforced
             # in bytes against mem_budget by the reclamation loop
@@ -171,11 +200,15 @@ class Engine:
                 now = pending[p_idx].arrival     # idle: jump to next arrival
                 continue
 
+            # admission charges each candidate's bytes at the END of the
+            # upcoming megastep (context + k), so a k-token megastep can
+            # never outgrow the budget mid-flight
             decision = select_batch(
                 entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
                 mem_budget=ecfg.mem_budget,
                 bytes_fn=lambda e: self._bytes_for(
-                    pool_reqs[e.rid].context_len + 1))
+                    pool_reqs[e.rid].context_len + self._k),
+                lookahead=self._k)
 
             self._apply_preemptions(decision, pool_reqs, stats)
             if self.paged:
@@ -213,21 +246,28 @@ class Engine:
 
             if self.paged:
                 # allocate pages ahead of the writes this iteration performs
+                # (decode rows pre-reserve their whole megastep budget: the
+                # block table is frozen while the k steps run on device)
                 for r, take in pf_plan:
                     self._ensure_pages(r, r.entry.prefill_done + take, entries)
                 for r in decoding:
-                    self._ensure_pages(r, r.context_len, entries)
+                    self._ensure_pages(
+                        r, r.context_len + self._row_budget(r) - 1, entries)
 
+            # capture per-row decode contexts before tokens are appended:
+            # the cost model charges context c+1..c+n for a row emitting n
+            dec_ctxs = [r.context_len + 1 for r in decoding]
             if ecfg.mode == "real":
-                self._device_step(pf_plan, decoding)
+                emitted = self._device_step(pf_plan, decoding)
             else:
-                self._sim_step(pf_plan, decoding)
+                emitted = self._sim_step(pf_plan, decoding)
 
             # ---- bookkeeping / clock -------------------------------------
             pf_tokens = sum(t for _, t in pf_plan)
             pf_ctx = max((r.context_len for r, _ in pf_plan), default=0)
-            dt = self.cost.iteration_time(
-                [r.context_len for r in decoding], pf_tokens, pf_ctx)
+            dt = self.cost.megastep_time(
+                dec_ctxs, [emitted.get(r.rid, 0) for r in decoding],
+                pf_tokens, pf_ctx)
             dt += self._swap_pending_s              # DMA stalls the batch
             self._swap_pending_s = 0.0
             now_next = now + dt
@@ -239,10 +279,11 @@ class Engine:
                 r._kv_written = max(getattr(r, "_kv_written", 0),
                                     r.entry.prefill_done)
             for r in decoding:
+                n = emitted.get(r.rid, 0)
                 r._kv_written = max(getattr(r, "_kv_written", 0),
                                     r.context_len - 1)
-                r.entry.age += 1
-                if r.first_token_time < 0:
+                r.entry.age += n
+                if r.first_token_time < 0 and n > 0:
                     r.first_token_time = now_next
                 if (len(r.generated) >= r.true_out_len
                         or len(r.generated) >= r.max_new_tokens):
@@ -362,7 +403,7 @@ class Engine:
     def _reclaim_pages(self, decision: Decision, pool_reqs, entries, stats):
         """Evict (discard) or swap out suspended pages, tail-first from the
         least-urgent victim, until scheduled + suspended bytes fit."""
-        need = sum(self._bytes_for(pool_reqs[rid].context_len + 1)
+        need = sum(self._bytes_for(pool_reqs[rid].context_len + self._k)
                    for rid in decision.scheduled)
         sched = set(decision.scheduled)
         susp = self._suspended(entries, exclude=sched)
@@ -414,6 +455,11 @@ class Engine:
             else:
                 self.blocks.evict_tail(victim.rid, shortfall)
 
+    def _row_budget(self, r) -> int:
+        """Decode tokens this row may emit in the upcoming megastep."""
+        rem = min(r.true_out_len, r.max_new_tokens) - len(r.generated)
+        return max(1, min(self._k, rem))
+
     # ------------------------------------------------------------------
     # sim mode: oracle probe statistics, no device math
     # ------------------------------------------------------------------
@@ -422,22 +468,39 @@ class Engine:
             if r.entry.prefill_done + take >= r.context_len - 1:
                 pred = self.predictor.on_prefill(r)
                 r.entry.pred_remaining = pred
-        for r in decoding:
-            r.generated.append(int(self._rng.integers(1, self.cfg.vocab_size)))
-            if len(r.generated) % self.ecfg.probe_interval == 0:
-                r.entry.pred_remaining = self.predictor.on_token(r)
-            else:   # between probes: predictions age deterministically
-                r.entry.pred_remaining = max(r.entry.pred_remaining - 1.0, 0.0)
+        if decoding:
+            # one vectorized draw per iteration (stream-identical to the
+            # old per-request scalar draws, ~10x less RNG overhead)
+            toks = self._rng.integers(1, self.cfg.vocab_size,
+                                      size=len(decoding))
+            for r, tok in zip(decoding, toks):
+                r.generated.append(int(tok))
+                if len(r.generated) % self.ecfg.probe_interval == 0:
+                    r.entry.pred_remaining = self.predictor.on_token(r)
+                else:   # between probes: predictions age deterministically
+                    r.entry.pred_remaining = max(
+                        r.entry.pred_remaining - 1.0, 0.0)
+        return {r.rid: 1 for r in decoding}
 
     # ------------------------------------------------------------------
-    # real mode: batched device calls over the slot pool
+    # real mode: batched device megasteps over the slot pool
     # ------------------------------------------------------------------
-    def _device_step(self, pf_plan, decoding):
+    def _device_step(self, pf_plan, decoding) -> dict[int, int]:
+        """Dispatch one prefill chunk + one decode megastep; returns the
+        tokens emitted per rid.
+
+        Both device calls are dispatched before any output is fetched, so
+        (on an async backend) the host runs the prefill-side probe
+        bookkeeping while the k-step decode megastep is still executing.
+        The only decode-side host transfer is O(B*k) token ids plus
+        O(B*k*num_bins) probe posteriors — never the (B, vocab) logits.
+        """
         import jax.numpy as jnp
         pool = self.pool
         B = pool.n_slots
+        pool.flush_resets()
+        pf_out = None
         if pf_plan:
-            pool.flush_resets()
             # bucketize the chunk width (powers of two) to bound recompiles
             need = max(take for _, take in pf_plan)
             chunk = 8
@@ -451,11 +514,28 @@ class Engine:
                 seg = full[r.entry.prefill_done:r.entry.prefill_done + take]
                 tokens[r.slot, :len(seg)] = seg
                 valid[r.slot, :len(seg)] = True
-            logits, pool.cache, tap_sum, n_new = self._prefill_fn(
+            _, pool.cache, tap_sum, n_new = self._prefill_fn(
                 self.params, pool.cache, jnp.asarray(tokens),
                 valid=jnp.asarray(valid))
-            tap_sum = np.asarray(tap_sum)
-            n_new = np.asarray(n_new)
+            pf_out = (tap_sum, n_new)
+        dec_out = None
+        if decoding:
+            tokens = np.zeros((B, 1), np.int32)
+            active = np.zeros((B,), bool)
+            budget = np.zeros((B,), np.int32)
+            for r in decoding:
+                tokens[r.slot, 0] = (r.generated[-1] if r.generated
+                                     else (r.prompt[-1] if r.prompt else 1))
+                active[r.slot] = True
+                budget[r.slot] = self._row_budget(r)
+            toks, pool.cache, probs, n_emit = self._decode_fn(
+                self.params, pool.cache, jnp.asarray(tokens),
+                jnp.asarray(active), jnp.asarray(budget), k=self._k)
+            dec_out = (toks, probs, n_emit)
+
+        if pf_out is not None:
+            tap_sum = np.asarray(pf_out[0])
+            n_new = np.asarray(pf_out[1])
             for r, take in pf_plan:
                 if r.tap_sum is None:
                     r.tap_sum = np.zeros(self.cfg.d_model, np.float32)
@@ -465,28 +545,24 @@ class Engine:
                     tap_mean = r.tap_sum / max(r.tap_cnt, 1)
                     pred = self.predictor.on_prefill(r, tap_mean)
                     r.entry.pred_remaining = pred
-        if decoding:
-            pool.flush_resets()
-            tokens = np.zeros((B, 1), np.int32)
-            active = np.zeros((B,), bool)
+        emitted: dict[int, int] = {}
+        if dec_out is not None:
+            toks_np = np.asarray(dec_out[0])
+            probs_np = np.asarray(dec_out[1])
+            n_np = np.asarray(dec_out[2])
             for r in decoding:
-                tokens[r.slot, 0] = (r.generated[-1] if r.generated
-                                     else (r.prompt[-1] if r.prompt else 1))
-                active[r.slot] = True
-            logits, pool.cache, tap, probe_logits = self._decode_fn(
-                self.params, pool.cache, jnp.asarray(tokens),
-                active=jnp.asarray(active))
-            logits_np = np.asarray(logits)
-            pl = np.asarray(probe_logits)
-            for r in decoding:
-                r.generated.append(int(np.argmax(logits_np[r.slot])))
-                if len(r.generated) % self.ecfg.probe_interval == 0:
-                    p = np.exp(pl[r.slot] - pl[r.slot].max())
-                    p /= p.sum()
-                    r.entry.pred_remaining = self.predictor.on_token(r, p)
-                else:
-                    r.entry.pred_remaining = max(
-                        r.entry.pred_remaining - 1.0, 0.0)
+                n = int(n_np[r.slot])
+                for t in range(n):
+                    r.generated.append(int(toks_np[r.slot, t]))
+                    if len(r.generated) % self.ecfg.probe_interval == 0:
+                        # device-side softmax posterior at the probe boundary
+                        r.entry.pred_remaining = self.predictor.on_token(
+                            r, probs_np[r.slot, t])
+                    else:   # between probes: deterministic aging
+                        r.entry.pred_remaining = max(
+                            r.entry.pred_remaining - 1.0, 0.0)
+                emitted[r.rid] = n
+        return emitted
 
 
 def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import functools
 import math
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,29 @@ import numpy as np
 from repro.config import (KIND_ATTN, KIND_HYBRID, KIND_LOCAL, KIND_MOE,
                           KIND_SSM, ModelConfig)
 from repro.models.ssm import ssm_dims
+
+
+def _silence_cpu_donation_warning():
+    """Buffer donation lets XLA update the KV cache in place instead of
+    copying the whole pytree every jit call. The CPU backend (this
+    container / the CI runner) can never honor donation and warns once per
+    compiled function with identical semantics either way, so the warning
+    is pure noise there — but ONLY there: on GPU/TPU an unexpectedly
+    undonatable buffer means XLA is back to copying the cache every
+    megastep, and the warning is the signal. Install the filter lazily
+    (first donating jit / pool construction) and only on CPU."""
+    if jax.default_backend() == "cpu":
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+
+
+def donating_jit(fn, donate: tuple[str, ...] = ("cache",), **jit_kwargs):
+    """jit with the cache pytree donated: XLA may alias the input buffers
+    into the outputs (in-place KV update). Callers MUST drop every
+    reference to the donated argument and use the returned cache — the
+    engine's single-owner ``pool.cache`` reassignment pattern."""
+    _silence_cpu_donation_warning()
+    return jax.jit(fn, donate_argnames=donate, **jit_kwargs)
 
 
 def dtype_bytes(cfg: ModelConfig) -> int:
@@ -62,8 +86,13 @@ def ssm_state_bytes(cfg: ModelConfig) -> int:
     return 4 * (nh * cfg.ssm_head_dim * n) + 4 * (cfg.ssm_conv - 1) * conv_ch
 
 
+@functools.lru_cache(maxsize=1 << 16)
 def bytes_for_context(cfg: ModelConfig, context_len: int) -> int:
-    """Total per-request cache bytes at a given context length."""
+    """Total per-request cache bytes at a given context length.
+
+    Memoized on the (hashable, frozen) config and length: ``select_batch``
+    evaluates this per candidate per iteration, and at large request
+    counts the layer_kinds walk dominated sim-mode scheduling cost."""
     total = 0
     for kind in cfg.layer_kinds:
         per_tok = bytes_per_token_kind(cfg, kind)
@@ -83,6 +112,7 @@ def pages_for_tokens(tokens: int, page_size: int) -> int:
     return max(0, math.ceil(tokens / page_size))
 
 
+@functools.lru_cache(maxsize=4096)
 def page_bytes(cfg: ModelConfig, page_size: int) -> int:
     """KV bytes of one page across all non-SSM layers (window layers too:
     their ring buffers are page-sized in the accounting model)."""
@@ -90,11 +120,14 @@ def page_bytes(cfg: ModelConfig, page_size: int) -> int:
     return per_tok * page_size
 
 
+@functools.lru_cache(maxsize=1 << 16)
 def paged_bytes_for_context(cfg: ModelConfig, context_len: int,
                             page_size: int) -> int:
     """Page-granular m(age): like ``bytes_for_context`` but every token
     count rounds up to whole pages, exposing allocation fragmentation.
-    SSM state and cross-attention caches are unpaged (fixed-size)."""
+    SSM state and cross-attention caches are unpaged (fixed-size).
+    Memoized like ``bytes_for_context`` (same per-entry-per-iteration
+    call pattern in the scheduler's bytes_fn)."""
     rounded = pages_for_tokens(context_len, page_size) * page_size
     total = 0
     for kind in cfg.layer_kinds:
@@ -263,6 +296,7 @@ class SlotPool:
     """Host-side slot bookkeeping + device-side cache reset."""
 
     def __init__(self, model, slots: int, max_len: int):
+        _silence_cpu_donation_warning()    # covers the donating reset jits
         self.model = model
         self.cfg = model.cfg
         self.n_slots = slots
@@ -315,6 +349,7 @@ class PagedSlotPool(SlotPool):
 
     def __init__(self, model, slots: int, max_len: int, page_size: int = 16,
                  retain: bool | None = None):
+        _silence_cpu_donation_warning()    # covers the donating reset jits
         self.page_size = page_size
         self.pages_per_seq = pages_for_tokens(max_len, page_size)
         self.model = model
@@ -400,9 +435,12 @@ class PagedSlotPool(SlotPool):
             self.cfg, min(context_len, self.max_len), self.page_size)
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnames=("cache",))
 def _reset_pages(cache, page_mask):
-    """Invalidate freed pages: pkpos=-1 so stale entries never attend."""
+    """Invalidate freed pages: pkpos=-1 so stale entries never attend.
+    The cache is donated (reset queue is donation-safe): the pool holds
+    the only live reference and immediately replaces it with the result,
+    so XLA can flip pkpos in place instead of copying the page pool."""
     new = dict(cache)
     for key, run in cache.items():
         if not key.startswith("run_"):
@@ -418,9 +456,10 @@ def _reset_pages(cache, page_mask):
     return new
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnames=("cache",))
 def _reset_slots(cache, mask):
-    """Invalidate slots: kpos=-1, lengths=0, SSM state zeroed."""
+    """Invalidate slots: kpos=-1, lengths=0, SSM state zeroed.
+    Donates the cache like ``_reset_pages`` (see note there)."""
 
     def reset_sub(r):
         r = dict(r)

@@ -161,6 +161,20 @@ def test_slot_pool_assign_release_invariant(ops):
     assert set(pool.slot_of) == held
 
 
+def test_bytes_for_context_memoized():
+    """bytes accounting is lru_cached on the frozen config: repeat lookups
+    (one per entry per select_batch call) must hit the cache, and the
+    cached value must match a fresh computation."""
+    from repro.serving.kv_cache import paged_bytes_for_context
+    v1 = bytes_for_context(CFG, 12345)
+    h0 = bytes_for_context.cache_info().hits
+    assert bytes_for_context(CFG, 12345) == v1
+    assert bytes_for_context.cache_info().hits == h0 + 1
+    p1 = paged_bytes_for_context(CFG, 12345, 16)
+    assert paged_bytes_for_context(CFG, 12345, 16) == p1
+    assert p1 >= v1        # page round-up can only add bytes (dense arch)
+
+
 def test_bytes_for_context_arch_awareness():
     dense = get_config("granite-3-8b")
     ssm = get_config("mamba2-370m")

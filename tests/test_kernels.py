@@ -11,7 +11,8 @@ from repro.core.smoothing import transition_matrix
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention, paged_decode_attention_multi)
 from repro.kernels.probe import probe_update
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -114,6 +115,46 @@ def test_paged_decode_attention(B, H, KH, hd, ps, pmax, win, cap, dtype):
     assert o.dtype == q.dtype
     err = jnp.max(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)))
     assert float(err) < max(TOL[dtype], 1e-4), float(err)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,KH,hd,ps,pmax,win,cap", [
+    (2, 4, 4, 2, 32, 16, 4, 0, 0.0),
+    (3, 2, 4, 1, 64, 8, 6, 0, 0.0),    # MQA, small pages
+    (2, 8, 8, 8, 32, 16, 3, 24, 0.0),  # MHA + sliding window
+    (1, 3, 4, 2, 32, 8, 5, 0, 50.0),   # softcap
+])
+def test_paged_decode_attention_multi(B, T, H, KH, hd, ps, pmax, win, cap,
+                                      dtype):
+    """Multi-query variant (decode megasteps / chunked prefill): the last
+    T cached positions of each sequence attend over its pages together."""
+    key = jax.random.fold_in(KEY, B * 999 + T * 31 + ps)
+    q1, k, v, kpos, bt, last_pos = _paged_fixture(key, B, H, KH, hd, ps,
+                                                  pmax, dtype)
+    q = rand(jax.random.fold_in(key, 7), (B, T, H, hd), dtype)
+    # query positions: the T trailing tokens (clamped >= 0 via fixture
+    # lengths >= 1; earlier-than-start rows mask to inactive -1)
+    q_pos = last_pos[:, None] - jnp.arange(T - 1, -1, -1, dtype=jnp.int32)
+    q_pos = jnp.where(q_pos >= 0, q_pos, -1)
+    o = paged_decode_attention_multi(q, k, v, kpos, bt, q_pos, window=win,
+                                     softcap=cap, interpret=True)
+    r = ref.paged_decode_attention_multi_ref(q, k, v, kpos, bt, q_pos,
+                                             window=win, softcap=cap)
+    assert o.dtype == q.dtype
+    err = jnp.max(jnp.abs(o.astype(jnp.float32) - r.astype(jnp.float32)))
+    assert float(err) < max(TOL[dtype], 1e-4), float(err)
+
+
+def test_paged_multi_t1_matches_single_query():
+    """T=1 multi-query degenerates to the single-query kernel exactly."""
+    B, H, KH, hd, ps, pmax = 2, 4, 2, 32, 8, 4
+    q, k, v, kpos, bt, q_pos = _paged_fixture(
+        jax.random.fold_in(KEY, 123), B, H, KH, hd, ps, pmax, jnp.float32)
+    o_multi = paged_decode_attention_multi(q[:, None], k, v, kpos, bt,
+                                           q_pos[:, None], interpret=True)
+    o_single = paged_decode_attention(q, k, v, kpos, bt, q_pos,
+                                      interpret=True)
+    assert float(jnp.max(jnp.abs(o_multi[:, 0] - o_single))) == 0.0
 
 
 def test_paged_matches_contiguous_decode():

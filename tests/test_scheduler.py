@@ -75,6 +75,34 @@ def test_trail_preempts_preemptable_running():
     assert d.admitted == [1]
 
 
+def test_megastep_lookahead_pins_finishing_jobs():
+    """k-token lookahead (engine decode megasteps): a RUNNING job whose
+    predicted remaining length fits inside the upcoming megastep is never
+    preempted — it would have finished within k tokens. lookahead=1 (the
+    per-token loop) keeps the old decision exactly."""
+    def fresh():
+        return {
+            0: mk(0, arrival=0.0, state=ReqState.RUNNING, r0=100, age=1,
+                  pred=3.0),     # would finish within a k=4 megastep
+            1: mk(1, arrival=1.0, state=ReqState.WAITING, r0=2, pred=2.0),
+        }
+    d = select_batch(fresh(), policy="trail", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn)
+    assert d.preempted == [0]           # per-token: rank 2.0 < 3.0 wins
+    d = select_batch(fresh(), policy="trail", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn, lookahead=4)
+    assert 0 in d.scheduled and d.preempted == []
+    # the pin claims its slot FIRST: the better-ranked waiting job must
+    # not be admitted alongside it past max_batch (slot pool would burst)
+    assert d.scheduled == [0] and d.admitted == []
+    # a job that cannot finish within the megastep is still preemptable
+    entries = fresh()
+    entries[0].pred_remaining = 9.0
+    d = select_batch(entries, policy="trail", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn, lookahead=4)
+    assert d.preempted == [0]
+
+
 states = st.sampled_from([ReqState.WAITING, ReqState.RUNNING,
                           ReqState.PREEMPTED])
 
