@@ -1,0 +1,152 @@
+"""Cluster serving curves: completion time vs aggregate rate, per router
+policy x scenario x replica count.
+
+Replicas run the TRAIL engine (SPRPT-LP, ``policy="trail"``) under a
+**compute-bound** hardware point (2 bf16 TFLOP/s per replica): iteration
+time then scales with batch tokens, so each replica behaves like the
+processor-sharing single server of the companion queueing analysis
+(Mitzenmacher & Shahout, arXiv:2503.07545) and dispatch quality is visible
+in completion time. (On the memory-bound TPU-v5e point, decode iteration
+time is nearly occupancy-independent — every balanced-count policy ties
+and routing is uninteresting.)
+
+Grid: scenarios (poisson, bursty MMPP) x aggregate rates x replica counts
+(1/2/4) x router policies (round-robin, jsq, pow2, jspw), each cell
+averaged over workload seeds. Writes ``experiments/results/
+cluster_curves.json`` and the headline ``BENCH_cluster.json`` at the repo
+root: at matched aggregate rate on the bursty scenario, jspw (predicted
+work, SRPT-truncated) must beat round-robin on mean completion time, and
+2 replicas must beat 1.
+
+    PYTHONPATH=src python -m benchmarks.cluster_curves --quick
+    PYTHONPATH=src python -m benchmarks.cluster_curves --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import emit, save_json
+from repro.cluster import run_cluster
+from repro.config import get_config
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.workload import generate, scenario_config
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# compute-bound replica: 2 bf16 TFLOP/s (capacity ~1 req/s on the Alpaca
+# shape) — the regime where replica service rate is throughput-bound
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  dma_bw=32e9, overhead_s=2e-4)
+
+POLICIES = ("round-robin", "jsq", "pow2", "jspw")
+HEADLINE = ("bursty", 0.9, 2)       # scenario, aggregate rate, replicas
+
+
+def _cell(cfg, reqs_by_seed, policy, n_replicas, max_batch):
+    """Average one grid cell over the workload seeds."""
+    means, p99s, ttfts, fins = [], [], [], []
+    for reqs in reqs_by_seed:
+        s = run_cluster(cfg, reqs, router_policy=policy,
+                        n_replicas=n_replicas, policy="trail", seed=5,
+                        max_batch=max_batch, hardware=HW)
+        d = s.summary()
+        means.append(d["mean_latency"])
+        p99s.append(d["p99_latency"])
+        ttfts.append(d["mean_ttft"])
+        fins.append(d["finished"])
+    return {"mean_latency": float(np.mean(means)),
+            "p99_latency": float(np.mean(p99s)),
+            "mean_ttft": float(np.mean(ttfts)),
+            "finished": int(np.sum(fins)),
+            "per_seed_mean": [float(m) for m in means]}
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Run the grid; returns the results dict (also written to disk)."""
+    cfg = get_config("granite-3-8b")
+    if smoke:
+        scenarios, rates, replicas = ("bursty",), (0.9,), (1, 2)
+        policies, seeds, n = ("round-robin", "jspw"), (3,), 100
+    elif quick:
+        scenarios, rates, replicas = ("poisson", "bursty"), (0.9, 1.5), (1, 2, 4)
+        policies, seeds, n = POLICIES, (3, 11, 23), 300
+    else:
+        scenarios, rates, replicas = ("poisson", "bursty"), (0.6, 0.9, 1.2, 1.5), (1, 2, 4)
+        policies, seeds, n = POLICIES, (3, 11, 23, 42, 57), 500
+
+    results = {}
+    for scen in scenarios:
+        for rate in rates:
+            reqs_by_seed = [
+                generate(scenario_config(scen, n_requests=n,
+                                         request_rate=rate, seed=s,
+                                         vocab=cfg.vocab_size))
+                for s in seeds]
+            for nr in replicas:
+                # with one replica every policy routes identically
+                pols = ("round-robin",) if nr == 1 else policies
+                for pol in pols:
+                    cell = _cell(cfg, reqs_by_seed, pol, nr, max_batch=16)
+                    key = f"{scen}@{rate}.R{nr}.{pol}"
+                    results[key] = cell
+                    emit(f"cluster.{key}", cell["mean_latency"] * 1e6,
+                         f"p99={cell['p99_latency']:.2f};"
+                         f"ttft={cell['mean_ttft']:.2f};"
+                         f"finished={cell['finished']}")
+
+    scen, rate, nr = HEADLINE
+    rr = results.get(f"{scen}@{rate}.R{nr}.round-robin")
+    jspw = results.get(f"{scen}@{rate}.R{nr}.jspw")
+    r1 = results.get(f"{scen}@{rate}.R1.round-robin")
+    headline = None
+    if rr and jspw and r1:
+        headline = {
+            "operating_point": f"{scen} @ {rate} aggregate req/s, "
+                               f"{nr} replicas, compute-bound 2 TFLOP/s",
+            "rr_mean": rr["mean_latency"],
+            "jspw_mean": jspw["mean_latency"],
+            "jspw_vs_rr": rr["mean_latency"] / jspw["mean_latency"],
+            "r1_mean": r1["mean_latency"],
+            "r2_rr_mean": rr["mean_latency"],
+            "scaleup_2x": r1["mean_latency"] / rr["mean_latency"],
+            "jspw_beats_rr": jspw["mean_latency"] < rr["mean_latency"],
+            "two_replicas_beat_one": rr["mean_latency"] < r1["mean_latency"],
+        }
+        emit("cluster.headline", 0.0,
+             f"jspw_vs_rr={headline['jspw_vs_rr']:.2f}x;"
+             f"scaleup_2x={headline['scaleup_2x']:.2f}x")
+
+    save_json("cluster_curves", results)
+    payload = {
+        "config": {"model": "granite-3-8b", "engine_policy": "trail",
+                   "hardware": HW.name, "peak_flops": HW.peak_flops,
+                   "max_batch": 16, "n_requests": n,
+                   "seeds": list(seeds)},
+        "headline": headline,
+        "grid": results,
+    }
+    if quick and not smoke:
+        # the checked-in artifact is the --quick grid (3 seeds, 2 rates);
+        # smoke never writes it, and the full grid goes to
+        # experiments/results only so a no-flag run can't clobber the
+        # artifact with a differently-shaped grid
+        with open(os.path.join(ROOT, "BENCH_cluster.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="3 seeds, 2 rates (the checked-in artifact)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI smoke (no artifact rewrite)")
+    args = ap.parse_args()
+    out = run(quick=args.quick, smoke=args.smoke)
+    if out["headline"]:
+        print(json.dumps(out["headline"], indent=1))

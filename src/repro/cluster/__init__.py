@@ -1,0 +1,16 @@
+"""Multi-replica cluster serving: a router dispatching a shared arrival
+stream across N independent `Engine` replicas in virtual time.
+
+The paper evaluates SPRPT-LP on a single instance; its companion work
+(Mitzenmacher & Shahout, arXiv:2503.07545) frames prediction-based
+scheduling as a multi-server queueing problem. This package supplies the
+multi-server half: `Router` (dispatch policies, including
+join-shortest-predicted-work over live TRAIL predictions) and
+`run_cluster` (the `run_policy` analogue for N replicas).
+"""
+
+from repro.cluster.router import (ROUTER_POLICIES, ClusterStats, Router,
+                                  RouterConfig, run_cluster)
+
+__all__ = ["ROUTER_POLICIES", "ClusterStats", "Router", "RouterConfig",
+           "run_cluster"]

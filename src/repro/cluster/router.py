@@ -1,0 +1,245 @@
+"""Cluster router: dispatch streaming arrivals across N replica engines.
+
+Each replica is a full `Engine` (its own SPRPT-LP scheduler, KV
+accounting, and virtual clock) driven through the incremental
+``submit()``/``step()`` API. The router runs a virtual-time event loop:
+
+* a pending arrival is dispatched once every busy replica's clock has
+  reached its arrival time (so the routing decision observes replica
+  state *at* — never before — the arrival);
+* otherwise the replica furthest behind in virtual time executes one
+  engine step, advancing the cluster frontier.
+
+Dispatch policies (``RouterConfig.policy``):
+
+* ``round-robin`` — cyclic, state-blind (the baseline).
+* ``jsq``         — join-shortest-queue by unfinished request count.
+* ``pow2``        — power-of-two-choices: sample two replicas, join the
+                    shorter queue (Mitzenmacher's classic load balancer).
+* ``jspw``        — join-shortest-predicted-work over each replica's live
+                    TRAIL per-token remaining-length predictions plus
+                    remaining prefill work (`Engine.backlog`). This is the
+                    paper's probe signal lifted to the cluster layer (cf.
+                    proxy-model routing, arXiv:2404.08509). Because every
+                    replica schedules with SPRPT internally, longer jobs
+                    yield to a new arrival — so when the router has a
+                    ``size_predictor`` (prompt-only r0 estimate, the
+                    paper's BERT/probe signal), each replica's predictions
+                    are truncated at the arrival's own size estimate:
+                    join-shortest *interfering* predicted work. Without a
+                    size predictor the raw backlog sum is used (the
+                    FCFS-replica signal).
+"""
+
+from __future__ import annotations
+
+import copy
+import random
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request
+
+#: Dispatch policies understood by `Router`.
+ROUTER_POLICIES = ("round-robin", "jsq", "pow2", "jspw")
+
+
+@dataclass
+class RouterConfig:
+    """Cluster-level knobs.
+
+    Attributes:
+        n_replicas: number of replica engines.
+        policy: dispatch policy — one of `ROUTER_POLICIES`.
+        seed: RNG seed for the ``pow2`` replica sampler (dispatch is
+            deterministic given the seed and the arrival stream).
+    """
+
+    n_replicas: int = 2
+    policy: str = "round-robin"
+    seed: int = 0
+
+
+@dataclass
+class ClusterStats:
+    """Aggregated results of one cluster run.
+
+    Attributes:
+        latencies: completion times (finish - arrival) across all replicas.
+        ttfts: time-to-first-token across all replicas.
+        dispatch_counts: requests dispatched per replica.
+        replica_summaries: each replica's `EngineStats.summary()` dict.
+        makespan: max replica virtual clock at drain.
+    """
+
+    latencies: list = field(default_factory=list)
+    ttfts: list = field(default_factory=list)
+    dispatch_counts: list = field(default_factory=list)
+    replica_summaries: list = field(default_factory=list)
+    makespan: float = 0.0
+
+    def summary(self) -> dict:
+        """Aggregate cluster metrics into the benchmark-facing dict."""
+        lat = sorted(self.latencies)
+        tt = sorted(self.ttfts)
+        return {
+            "mean_latency": float(np.mean(lat)) if lat else 0.0,
+            "median_latency": lat[len(lat) // 2] if lat else 0.0,
+            "p99_latency": lat[int(len(lat) * 0.99)] if lat else 0.0,
+            "mean_ttft": float(np.mean(tt)) if tt else 0.0,
+            "median_ttft": tt[len(tt) // 2] if tt else 0.0,
+            "finished": len(lat),
+            "dispatch_counts": list(self.dispatch_counts),
+            "preemptions": sum(s["preemptions"]
+                               for s in self.replica_summaries),
+            "peak_batch": max((s["peak_batch"]
+                               for s in self.replica_summaries), default=0),
+            "makespan": self.makespan,
+        }
+
+
+class Router:
+    """Dispatches a request stream across replica engines in virtual time.
+
+    The router owns nothing about scheduling *within* a replica — that is
+    the engine's SPRPT-LP job. It only decides *which* replica an arrival
+    joins, then keeps all replica clocks loosely synchronized by always
+    stepping the laggard.
+    """
+
+    def __init__(self, replicas: list[Engine], rc: RouterConfig,
+                 size_predictor=None):
+        """Wrap pre-built replica engines under one dispatch policy.
+
+        Args:
+            replicas: the engines (length must equal ``rc.n_replicas``).
+            rc: cluster-level configuration.
+            size_predictor: optional predictor whose ``initial(req)``
+                gives a prompt-only output-length estimate for ``jspw``
+                truncation (see module docstring). It must be a separate
+                instance from any replica's predictor so router draws
+                never perturb engine prediction streams.
+        """
+        if rc.policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {rc.policy!r}; "
+                             f"choose from {ROUTER_POLICIES}")
+        if len(replicas) != rc.n_replicas:
+            raise ValueError(f"{len(replicas)} replicas != "
+                             f"n_replicas={rc.n_replicas}")
+        self.replicas = replicas
+        self.rc = rc
+        self.size_predictor = size_predictor
+        self._rr_next = 0
+        self._rng = random.Random(rc.seed)
+        self.dispatch_counts = [0] * rc.n_replicas
+        self.dispatch_log: list[tuple[int, int]] = []   # (rid, replica)
+
+    # -- dispatch policies ------------------------------------------------
+    def _queue_key(self, i: int) -> tuple:
+        return (self.replicas[i].queue_len(), i)
+
+    def _pick(self, req: Request) -> int:
+        """Choose the replica index for one arrival (policy decision)."""
+        pol = self.rc.policy
+        n = len(self.replicas)
+        if pol == "round-robin":
+            i = self._rr_next
+            self._rr_next = (self._rr_next + 1) % n
+            return i
+        if pol == "jsq":
+            return min(range(n), key=self._queue_key)
+        if pol == "pow2":
+            if n == 1:
+                return 0
+            a, b = self._rng.sample(range(n), 2)
+            return min(a, b, key=self._queue_key)
+        # jspw: live predicted-work backlog — truncated at the arrival's
+        # own size estimate when available (SRPT-interfering work) — with
+        # queue length then index as tie-breaks
+        r_hat = (self.size_predictor.initial(req)
+                 if self.size_predictor is not None else None)
+        return min(range(n),
+                   key=lambda i: (self.replicas[i].backlog(truncate=r_hat),
+                                  self.replicas[i].queue_len(), i))
+
+    def dispatch(self, req: Request) -> int:
+        """Route one arrival to a replica and submit it there."""
+        i = self._pick(req)
+        self.replicas[i].submit(req)
+        self.dispatch_counts[i] += 1
+        self.dispatch_log.append((req.rid, i))
+        return i
+
+    # -- virtual-time event loop ------------------------------------------
+    def run(self, requests: list[Request]) -> ClusterStats:
+        """Drive the whole arrival stream to completion.
+
+        Arrivals are consumed in time order; between dispatches, the busy
+        replica with the smallest virtual clock steps. The loop ends when
+        every replica is drained.
+        """
+        pending = sorted(requests, key=lambda r: r.arrival)
+        q = 0
+        while True:
+            busy = [e for e in self.replicas if e.has_work()]
+            if q < len(pending):
+                t_arr = pending[q].arrival
+                frontier = min((e.now for e in busy), default=t_arr)
+                if t_arr <= frontier:
+                    self.dispatch(pending[q])
+                    q += 1
+                    continue
+            if not busy:
+                break
+            lag = min(busy, key=lambda e: e.now)
+            lag.step()
+
+        stats = ClusterStats(dispatch_counts=list(self.dispatch_counts))
+        for eng in self.replicas:
+            stats.latencies.extend(eng.stats.latencies)
+            stats.ttfts.extend(eng.stats.ttfts)
+            stats.replica_summaries.append(eng.stats.summary())
+            stats.makespan = max(stats.makespan, eng.now)
+        return stats
+
+
+def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
+                n_replicas: int = 2, seed: int = 0,
+                predictor_factory=None, size_predictor=None,
+                **engine_kwargs) -> ClusterStats:
+    """Serve ``requests`` on an N-replica cluster (the `run_policy` twin).
+
+    Args:
+        cfg: the `ModelConfig` every replica serves.
+        requests: the shared arrival stream (deep-copied, as in
+            ``run_policy``).
+        router_policy: one of `ROUTER_POLICIES`.
+        n_replicas: replica count.
+        seed: base seed; replica i uses ``seed + i`` so sim-mode RNG and
+            oracle-probe noise streams are independent across replicas.
+        predictor_factory: optional ``f(replica_index) -> PredictorBase``;
+            default gives each replica its own oracle predictor.
+        size_predictor: router-side prompt-only size estimator for the
+            ``jspw`` policy. Defaults to a fresh `OraclePredictor` on a
+            dedicated seed (sim mode's stand-in for the paper's
+            prompt-phase probe); pass a `ProbePredictor` in real mode.
+        **engine_kwargs: forwarded to `EngineConfig` (policy, c_limit,
+            max_batch, mem_budget, kv_layout, ...).
+
+    Returns:
+        The aggregated `ClusterStats`.
+    """
+    replicas = []
+    for i in range(n_replicas):
+        ecfg = EngineConfig(seed=seed + i, **engine_kwargs)
+        pred = predictor_factory(i) if predictor_factory else None
+        replicas.append(Engine(cfg, ecfg, predictor=pred))
+    if size_predictor is None and router_policy == "jspw":
+        from repro.serving.predictors import OraclePredictor
+        size_predictor = OraclePredictor(cfg.probe, seed=seed + 4242)
+    router = Router(replicas, RouterConfig(n_replicas=n_replicas,
+                                           policy=router_policy, seed=seed),
+                    size_predictor=size_predictor)
+    return router.run(copy.deepcopy(requests))

@@ -1,8 +1,16 @@
-"""Serving launcher: run the TRAIL engine over a workload.
+"""Serving launcher: run the TRAIL engine (or an N-replica cluster) over a
+workload.
 
     # paper-scale policy comparison under the roofline cost model
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --policy trail --rate 14 --n 300
+
+    # named workload scenario (see serving/workload.py SCENARIOS)
+    PYTHONPATH=src python -m repro.launch.serve --scenario bursty --rate 14
+
+    # 2-replica cluster with predicted-work routing
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 --router jspw \
+        --scenario bursty --rate 2.0 --compute-bound
 
     # real end-to-end on a CPU-sized model (trains briefly first)
     PYTHONPATH=src python -m repro.launch.serve --arch trail-llama \
@@ -14,10 +22,13 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.cluster import ROUTER_POLICIES, run_cluster
 from repro.config import ARCH_IDS, get_config, get_smoke_config
 from repro.core.scheduler import POLICIES
+from repro.serving.costmodel import HardwareSpec
 from repro.serving.engine import run_policy
-from repro.serving.workload import WorkloadConfig, generate
+from repro.serving.workload import (SCENARIOS, WorkloadConfig, generate,
+                                    scenario_config)
 
 
 def main():
@@ -26,12 +37,22 @@ def main():
                     choices=ARCH_IDS + ("trail-llama",))
     ap.add_argument("--policy", default="trail", choices=POLICIES)
     ap.add_argument("--c", type=float, default=0.8)
-    ap.add_argument("--rate", type=float, default=14.0)
+    ap.add_argument("--rate", type=float, default=14.0,
+                    help="aggregate request rate (req/s)")
     ap.add_argument("--n", type=int, default=300)
     ap.add_argument("--burst", action="store_true")
+    ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
+                    help="named workload scenario preset")
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--mem-gb", type=float, default=0.0,
                     help="KV memory budget (0 = unlimited)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="cluster mode: number of replica engines (sim)")
+    ap.add_argument("--router", default="jspw", choices=ROUTER_POLICIES,
+                    help="cluster dispatch policy")
+    ap.add_argument("--compute-bound", action="store_true",
+                    help="compute-bound hardware point (2 TFLOP/s) where "
+                         "routing quality is visible; default is tpu-v5e")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--real", action="store_true",
                     help="actually run the model (CPU-sized configs)")
@@ -39,15 +60,39 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    wc = WorkloadConfig(n_requests=args.n, request_rate=args.rate,
-                        burst=args.burst, vocab=cfg.vocab_size,
-                        seed=args.seed)
-    if args.real:
+    # real mode shrinks lengths to CPU scale; with a --scenario preset the
+    # arrival process is kept and only the length mix is downsized
+    real_sizes = dict(prompt_mean=10.0, out_median=8.0, max_out=32,
+                      tenants=())
+    if args.scenario:
+        wc = scenario_config(args.scenario, n_requests=args.n,
+                             request_rate=args.rate, seed=args.seed,
+                             vocab=cfg.vocab_size,
+                             **(real_sizes if args.real else {}))
+    else:
         wc = WorkloadConfig(n_requests=args.n, request_rate=args.rate,
                             burst=args.burst, vocab=cfg.vocab_size,
-                            prompt_mean=10.0, out_median=8.0, max_out=32,
-                            seed=args.seed)
+                            seed=args.seed,
+                            **(real_sizes if args.real else {}))
     reqs = generate(wc)
+    hardware = (HardwareSpec(name="compute-bound-2tf", peak_flops=2e12,
+                             hbm_bw=819e9, overhead_s=2e-4)
+                if args.compute_bound else HardwareSpec())
+    mem_budget = int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62
+
+    if args.replicas > 1:
+        if args.real:
+            raise SystemExit("cluster mode is sim-only (one device pool)")
+        stats = run_cluster(
+            cfg, reqs, router_policy=args.router,
+            n_replicas=args.replicas, policy=args.policy,
+            c_limit=args.c, max_batch=args.max_batch,
+            mem_budget=mem_budget, hardware=hardware, seed=args.seed)
+        print(json.dumps({"arch": cfg.name, "policy": args.policy,
+                          "router": args.router, "replicas": args.replicas,
+                          "scenario": args.scenario or "poisson",
+                          "rate": args.rate, **stats.summary()}, indent=1))
+        return
 
     model = params = None
     mode = "sim"
@@ -64,11 +109,12 @@ def main():
 
     stats = run_policy(
         cfg, args.policy, reqs, c_limit=args.c, max_batch=args.max_batch,
-        mem_budget=int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62,
-        mode=mode, predictor=predictor, model=model, params=params,
-        seed=args.seed)
+        mem_budget=mem_budget, mode=mode, predictor=predictor, model=model,
+        params=params, hardware=hardware, seed=args.seed)
     print(json.dumps({"arch": cfg.name, "policy": args.policy,
                       "c": args.c, "rate": args.rate,
+                      "scenario": args.scenario or
+                      ("burst" if args.burst else "poisson"),
                       **stats.summary()}, indent=1))
 
 

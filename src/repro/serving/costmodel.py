@@ -27,6 +27,18 @@ from repro.serving.kv_cache import bytes_for_context, paged_bytes_for_context
 
 @dataclass(frozen=True)
 class HardwareSpec:
+    """Roofline constants for one accelerator (drives the simulated clock).
+
+    Attributes:
+        name: identifier recorded in benchmark artifacts.
+        peak_flops: peak bf16 FLOP/s; the compute-roofline term. Lowering
+            it models compute-bound serving, where iteration time scales
+            with batch tokens (see benchmarks/cluster_curves.py).
+        hbm_bw: HBM bytes/s; the memory-roofline term (params + KV).
+        dma_bw: device<->host bytes/s (the KV swap path).
+        overhead_s: fixed per-iteration dispatch overhead in seconds.
+    """
+
     name: str = "tpu-v5e"
     peak_flops: float = 197e12        # bf16
     hbm_bw: float = 819e9             # bytes/s
@@ -39,6 +51,8 @@ A100 = HardwareSpec(name="a100-80g", peak_flops=312e12, hbm_bw=2039e9,
 
 
 class CostModel:
+    """Evaluates the three-term roofline for engine iterations/megasteps."""
+
     def __init__(self, cfg: ModelConfig, hw: HardwareSpec = HardwareSpec(),
                  weight_dtype_bytes: int = 2, page_size: int = 0):
         self.cfg = cfg

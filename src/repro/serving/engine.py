@@ -33,6 +33,7 @@ Two execution modes:
 
 from __future__ import annotations
 
+import bisect
 import time
 from dataclasses import dataclass, field
 
@@ -51,6 +52,32 @@ from repro.serving.request import Request
 
 @dataclass
 class EngineConfig:
+    """Knobs for one serving engine (one replica in cluster mode).
+
+    Attributes:
+        policy: scheduling policy — ``fcfs`` | ``sjf`` | ``srpt`` |
+            ``trail`` | ``trail-bert`` | ``mlfq`` (see core/scheduler.py).
+        c_limit: the paper's C — preemption budget fraction; a request is
+            preemptable only for its first ``floor(C * r0)`` output tokens.
+        max_batch: batch slot count (max concurrently running requests).
+        mem_budget: KV-cache byte budget enforced at admission time.
+        prefill_chunk: per-iteration chunked-prefill token budget shared by
+            all prefilling requests in rank order.
+        max_len: cache capacity per sequence, in tokens.
+        probe_interval: refine predictions every k-th token (paper Sec 6);
+            in real mode also the decode megastep length — k tokens per
+            row stay on device between scheduling points.
+        oom_mode: ``discard`` (paper's discard-and-recompute) | ``swap``
+            (KV to host over DMA; sim-mode cost study only).
+        kv_layout: ``contig`` (slot cache) | ``paged`` (block-table pages;
+            preemption frees / retains / swaps at page granularity).
+        page_size: tokens per KV page (paged layout only).
+        mode: ``sim`` (cost-model clock, oracle-noise probe) | ``real``
+            (JAX model actually prefills/decodes).
+        hardware: roofline constants that drive the simulated clock.
+        seed: seed for the engine's decode-token RNG (sim mode).
+    """
+
     policy: str = "trail"           # fcfs | sjf | srpt | trail | trail-bert
     c_limit: float = 0.8            # the paper's C
     max_batch: int = 16             # slot count
@@ -75,16 +102,20 @@ class EngineConfig:
 
 @dataclass
 class EngineStats:
+    """Counters accumulated over an engine run (or a `step()` stream)."""
+
     latencies: list = field(default_factory=list)
     ttfts: list = field(default_factory=list)
     n_preemptions: int = 0
     recomputed_tokens: int = 0
     swapped_bytes: int = 0
     peak_mem_bytes: int = 0
+    peak_batch: int = 0
     iterations: int = 0
     sim_time: float = 0.0
 
     def summary(self) -> dict:
+        """Aggregate the counters into the benchmark-facing dict."""
         lat = sorted(self.latencies)
         tt = sorted(self.ttfts)
         med = lambda v: v[len(v) // 2] if v else 0.0
@@ -99,11 +130,55 @@ class EngineStats:
             "swapped_gb": self.swapped_bytes / 1e9,
             "peak_mem_gb": self.peak_mem_bytes / 1e9,
             "iterations": self.iterations,
+            "peak_batch": self.peak_batch,
             "makespan": self.sim_time,
         }
 
 
+class StepResult:
+    """Outcome of one `Engine.step()` call.
+
+    Attributes:
+        completed: requests that reached FINISHED during this step.
+        now: the engine's virtual clock after the step.
+        backlog: predicted remaining work (tokens) still queued/running —
+            the join-shortest-predicted-work routing signal. Computed
+            lazily on first access (an O(live requests) pass), so the
+            batch ``run()`` loop, which never reads it, pays nothing.
+        ran: False for idle steps (clock jump to the next arrival, or a
+            fully drained engine); no device/sim work was performed.
+    """
+
+    __slots__ = ("completed", "now", "ran", "_backlog_fn", "_backlog")
+
+    def __init__(self, completed=None, now=0.0, ran=False, backlog_fn=None):
+        self.completed = completed if completed is not None else []
+        self.now = now
+        self.ran = ran
+        self._backlog_fn = backlog_fn
+        self._backlog = None
+
+    @property
+    def backlog(self) -> float:
+        """Predicted-work backlog at the end of the step (lazy, cached)."""
+        if self._backlog is None:
+            self._backlog = self._backlog_fn() if self._backlog_fn else 0.0
+        return self._backlog
+
+
 class Engine:
+    """Iteration-level serving engine (one replica).
+
+    Two entry styles share one state machine:
+
+    * batch — ``run(requests)`` drives the whole trace to completion
+      (the original API; byte-identical results).
+    * incremental — ``submit(req)`` enqueues an arrival at any time and
+      ``step()`` executes exactly one engine iteration (one decode
+      megastep + prefill chunk), returning a `StepResult`. The cluster
+      `Router` uses this to interleave N replicas in virtual time.
+    """
+
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
                  predictor: PredictorBase | None = None,
                  model=None, params=None):
@@ -161,6 +236,20 @@ class Engine:
             # in bytes against mem_budget by the reclamation loop
             self.blocks = BlockManager(0, ecfg.page_size)
         self._rng = np.random.default_rng(ecfg.seed)
+        self._reset_stream()
+
+    def _reset_stream(self):
+        """(Re)initialize the incremental-loop state: empty request pool,
+        clock at zero, fresh stats. Called by ``__init__`` and ``run()``."""
+        self.stats = EngineStats()
+        self._pending: list[Request] = []       # sorted by arrival
+        self._p_idx = 0                         # next pending to admit
+        self._pool_reqs: dict[int, Request] = {}
+        self._entries: dict[int, SchedEntry] = {}
+        self._now = 0.0
+        self._r0_sum = 0.0                      # running mean of initial
+        self._r0_cnt = 0                        # predictions (backlog prior)
+        self._wall0 = time.perf_counter()
 
     def _bytes_for(self, context_len: int) -> int:
         if self.paged:
@@ -169,155 +258,251 @@ class Engine:
         return bytes_for_context(self.cfg, context_len)
 
     # ------------------------------------------------------------------
-    def run(self, requests: list[Request]) -> EngineStats:
-        ecfg = self.ecfg
-        stats = EngineStats()
-        pending = sorted(requests, key=lambda r: r.arrival)
-        pool_reqs: dict[int, Request] = {}
-        entries: dict[int, SchedEntry] = {}
-        now = 0.0
-        p_idx = 0
-        wall0 = time.perf_counter()
+    # incremental API: submit / step / accessors
+    # ------------------------------------------------------------------
+    @property
+    def now(self) -> float:
+        """The engine's virtual clock (seconds; sim-clock in sim mode)."""
+        return self._now
 
-        def admit_arrivals(t):
-            nonlocal p_idx
-            while p_idx < len(pending) and pending[p_idx].arrival <= t:
-                req = pending[p_idx]
-                r0 = self.predictor.initial(req)
-                req.entry.r0 = r0
-                req.entry.pred_remaining = r0
-                req.entry.c_limit = ecfg.c_limit
-                req.entry.finish_len = req.true_out_len
-                pool_reqs[req.rid] = req
-                entries[req.rid] = req.entry
-                p_idx += 1
+    def has_work(self) -> bool:
+        """True while any submitted request has not yet finished."""
+        return self._p_idx < len(self._pending) or any(
+            e.state is not ReqState.FINISHED for e in self._entries.values())
 
-        while p_idx < len(pending) or any(
-                e.state is not ReqState.FINISHED for e in entries.values()):
-            admit_arrivals(now)
-            live = [r for r in pool_reqs.values() if not r.done]
-            if not live:
-                now = pending[p_idx].arrival     # idle: jump to next arrival
+    def queue_len(self) -> int:
+        """Number of unfinished requests known to this engine.
+
+        Counts admitted-but-unfinished requests plus submitted arrivals
+        not yet admitted — the join-shortest-queue routing signal.
+        """
+        n = sum(1 for e in self._entries.values()
+                if e.state is not ReqState.FINISHED)
+        return n + (len(self._pending) - self._p_idx)
+
+    def backlog(self, truncate: float | None = None) -> float:
+        """Predicted remaining work, in tokens, across unfinished requests.
+
+        For admitted requests this is the live TRAIL prediction
+        (``pred_remaining``, refined every probe boundary) plus the
+        remaining prefill tokens. Submitted-but-unadmitted arrivals have
+        no probe output yet, so they are charged their prompt length plus
+        a workload-adaptive prior: the running mean of the initial
+        predictions seen so far (falling back to ``max_len / 2``, the same
+        uninformative prior `ProbePredictor.initial` uses). A fixed large
+        prior would swamp the live-prediction signal during bursts and
+        collapse join-shortest-predicted-work into round-robin.
+
+        Args:
+            truncate: if given, each job's predicted remaining tokens are
+                clipped to this value before summing. With SPRPT inside
+                every replica, the work a new job actually waits behind is
+                the work *shorter than itself* — longer jobs yield to it —
+                so the router truncates at the incoming job's own size
+                estimate (SRPT-interfering work) instead of summing raw
+                backlog, which is the right signal only for FCFS replicas.
+        """
+        cap = float("inf") if truncate is None else truncate
+        tot = 0.0
+        for rid, e in self._entries.items():
+            if e.state is ReqState.FINISHED:
                 continue
+            req = self._pool_reqs[rid]
+            tot += min(max(e.pred_remaining, 0.0), cap)
+            tot += max(req.context_len - 1 - e.prefill_done, 0)
+        prior = (self._r0_sum / self._r0_cnt if self._r0_cnt
+                 else self.predictor.pc.max_len / 2.0)
+        for req in self._pending[self._p_idx:]:
+            tot += len(req.prompt) + min(prior, cap)
+        return tot
 
-            # admission charges each candidate's bytes at the END of the
-            # upcoming megastep (context + k), so a k-token megastep can
-            # never outgrow the budget mid-flight
-            decision = select_batch(
-                entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
-                mem_budget=ecfg.mem_budget,
-                bytes_fn=lambda e: self._bytes_for(
-                    pool_reqs[e.rid].context_len + self._k),
-                lookahead=self._k)
+    def submit(self, req: Request):
+        """Enqueue one arrival; it is admitted once the clock reaches
+        ``req.arrival``. Arrivals may be submitted in any order, but never
+        earlier than an already-admitted arrival (the router's virtual-time
+        frontier guarantees this)."""
+        i = bisect.bisect_right(self._pending, req.arrival,
+                                lo=self._p_idx, key=lambda r: r.arrival)
+        self._pending.insert(i, req)
 
-            self._apply_preemptions(decision, pool_reqs, stats)
-            if self.paged:
-                # page-granular memory pressure: suspended (preempted but
-                # resident) pages yield before any admitted request starts
-                self._reclaim_pages(decision, pool_reqs, entries, stats)
-            self._apply_admissions(decision, pool_reqs, stats)
+    def _admit_arrivals(self, t: float):
+        ecfg = self.ecfg
+        while (self._p_idx < len(self._pending)
+               and self._pending[self._p_idx].arrival <= t):
+            req = self._pending[self._p_idx]
+            r0 = self.predictor.initial(req)
+            req.entry.r0 = r0
+            req.entry.pred_remaining = r0
+            req.entry.c_limit = ecfg.c_limit
+            req.entry.finish_len = req.true_out_len
+            self._r0_sum += r0
+            self._r0_cnt += 1
+            self._pool_reqs[req.rid] = req
+            self._entries[req.rid] = req.entry
+            self._p_idx += 1
 
-            # Prefill covers context_len - 1 tokens; the final known token is
-            # always consumed by decode_step (which emits the next one). This
-            # keeps fresh and preemption-resumed requests on one code path.
-            sched = [pool_reqs[rid] for rid in decision.scheduled]
-            prefilling = [r for r in sched
-                          if r.entry.prefill_done < r.context_len - 1]
-            decoding = [r for r in sched
-                        if r.entry.prefill_done >= r.context_len - 1]
+    def step(self) -> StepResult:
+        """Execute one engine iteration (one megastep) and return it.
 
-            if not sched:
-                if p_idx < len(pending):
-                    now = max(now, pending[p_idx].arrival)
-                    continue
-                raise RuntimeError(
-                    "scheduler deadlock: nothing fits the memory budget")
+        Admits due arrivals, consults the scheduler once, runs one prefill
+        chunk + one decode megastep, and advances the clock. If no request
+        is live the clock jumps to the next pending arrival (an idle step,
+        ``ran=False``); a drained engine returns immediately.
+        """
+        ecfg = self.ecfg
+        stats = self.stats
+        pool_reqs = self._pool_reqs
+        entries = self._entries
+        now = self._now
 
-            # ---- chunked prefill (shared token budget, rank order) --------
-            budget = ecfg.prefill_chunk
-            pf_plan: list[tuple[Request, int]] = []
-            for r in prefilling:
-                if budget <= 0:
-                    break
-                todo = (r.context_len - 1) - r.entry.prefill_done
-                take = min(todo, budget)
-                pf_plan.append((r, take))
-                budget -= take
+        self._admit_arrivals(now)
+        live = [r for r in pool_reqs.values() if not r.done]
+        if not live:
+            if self._p_idx < len(self._pending):
+                # idle: jump to next arrival
+                self._now = self._pending[self._p_idx].arrival
+            return StepResult(now=self._now, backlog_fn=self.backlog)
 
-            if self.paged:
-                # allocate pages ahead of the writes this iteration performs
-                # (decode rows pre-reserve their whole megastep budget: the
-                # block table is frozen while the k steps run on device)
-                for r, take in pf_plan:
-                    self._ensure_pages(r, r.entry.prefill_done + take, entries)
-                for r in decoding:
-                    self._ensure_pages(
-                        r, r.context_len + self._row_budget(r) - 1, entries)
+        # admission charges each candidate's bytes at the END of the
+        # upcoming megastep (context + k), so a k-token megastep can
+        # never outgrow the budget mid-flight
+        decision = select_batch(
+            entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
+            mem_budget=ecfg.mem_budget,
+            bytes_fn=lambda e: self._bytes_for(
+                pool_reqs[e.rid].context_len + self._k),
+            lookahead=self._k)
 
-            # capture per-row decode contexts before tokens are appended:
-            # the cost model charges context c+1..c+n for a row emitting n
-            dec_ctxs = [r.context_len + 1 for r in decoding]
-            if ecfg.mode == "real":
-                emitted = self._device_step(pf_plan, decoding)
-            else:
-                emitted = self._sim_step(pf_plan, decoding)
+        self._apply_preemptions(decision, pool_reqs, stats)
+        if self.paged:
+            # page-granular memory pressure: suspended (preempted but
+            # resident) pages yield before any admitted request starts
+            self._reclaim_pages(decision, pool_reqs, entries, stats)
+        self._apply_admissions(decision, pool_reqs, stats)
 
-            # ---- bookkeeping / clock -------------------------------------
-            pf_tokens = sum(t for _, t in pf_plan)
-            pf_ctx = max((r.context_len for r, _ in pf_plan), default=0)
-            dt = self.cost.megastep_time(
-                dec_ctxs, [emitted.get(r.rid, 0) for r in decoding],
-                pf_tokens, pf_ctx)
-            dt += self._swap_pending_s              # DMA stalls the batch
-            self._swap_pending_s = 0.0
-            now_next = now + dt
+        # Prefill covers context_len - 1 tokens; the final known token is
+        # always consumed by decode_step (which emits the next one). This
+        # keeps fresh and preemption-resumed requests on one code path.
+        sched = [pool_reqs[rid] for rid in decision.scheduled]
+        prefilling = [r for r in sched
+                      if r.entry.prefill_done < r.context_len - 1]
+        decoding = [r for r in sched
+                    if r.entry.prefill_done >= r.context_len - 1]
+
+        if not sched:
+            if self._p_idx < len(self._pending):
+                self._now = max(now, self._pending[self._p_idx].arrival)
+                return StepResult(now=self._now, backlog_fn=self.backlog)
+            raise RuntimeError(
+                "scheduler deadlock: nothing fits the memory budget")
+        stats.peak_batch = max(stats.peak_batch, len(sched))
+
+        # ---- chunked prefill (shared token budget, rank order) --------
+        budget = ecfg.prefill_chunk
+        pf_plan: list[tuple[Request, int]] = []
+        for r in prefilling:
+            if budget <= 0:
+                break
+            todo = (r.context_len - 1) - r.entry.prefill_done
+            take = min(todo, budget)
+            pf_plan.append((r, take))
+            budget -= take
+
+        if self.paged:
+            # allocate pages ahead of the writes this iteration performs
+            # (decode rows pre-reserve their whole megastep budget: the
+            # block table is frozen while the k steps run on device)
             for r, take in pf_plan:
-                r.entry.prefill_done += take
-                # tokens actually materialized in the cache (never credited
-                # past what was written: a mid-prefill preemption must not
-                # mark unwritten positions as retained)
-                r._kv_written = max(getattr(r, "_kv_written", 0),
-                                    r.entry.prefill_done)
+                self._ensure_pages(r, r.entry.prefill_done + take, entries)
             for r in decoding:
-                n = emitted.get(r.rid, 0)
-                r._kv_written = max(getattr(r, "_kv_written", 0),
-                                    r.context_len - 1)
-                r.entry.age += n
-                if r.first_token_time < 0 and n > 0:
-                    r.first_token_time = now_next
-                if (len(r.generated) >= r.true_out_len
-                        or len(r.generated) >= r.max_new_tokens):
-                    r.entry.state = ReqState.FINISHED
-                    r.finish_time = now_next
-                    stats.latencies.append(r.latency())
-                    stats.ttfts.append(r.ttft())
-                    if self.pool is not None:
-                        self.pool.release(r.rid)
-                    elif r.slot >= 0:
-                        r.slot = -1
-                    if self.blocks is not None and self.pool is None:
-                        # sim mode only: real-mode release() freed the pages
-                        self.blocks.free_request(r.rid)
+                self._ensure_pages(
+                    r, r.context_len + self._row_budget(r) - 1, entries)
 
-            if self.blocks is not None:
-                for rid in decision.scheduled:
-                    r = pool_reqs[rid]
-                    if not r.done:
-                        self.blocks.note_cached(
-                            rid, getattr(r, "_kv_written", 0))
+        # capture per-row decode contexts before tokens are appended:
+        # the cost model charges context c+1..c+n for a row emitting n
+        dec_ctxs = [r.context_len + 1 for r in decoding]
+        if ecfg.mode == "real":
+            emitted = self._device_step(pf_plan, decoding)
+        else:
+            emitted = self._sim_step(pf_plan, decoding)
 
-            mem = sum(self._bytes_for(pool_reqs[rid].context_len)
-                      for rid in decision.scheduled)
-            if self.blocks is not None:
-                mem += self._page_bytes * sum(
-                    self.blocks.resident_pages(e.rid)
-                    for e in entries.values()
-                    if e.state is ReqState.PREEMPTED)
-            stats.peak_mem_bytes = max(stats.peak_mem_bytes, mem)
-            stats.iterations += 1
-            now = now_next
+        # ---- bookkeeping / clock -------------------------------------
+        pf_tokens = sum(t for _, t in pf_plan)
+        pf_ctx = max((r.context_len for r, _ in pf_plan), default=0)
+        dt = self.cost.megastep_time(
+            dec_ctxs, [emitted.get(r.rid, 0) for r in decoding],
+            pf_tokens, pf_ctx)
+        dt += self._swap_pending_s              # DMA stalls the batch
+        self._swap_pending_s = 0.0
+        now_next = now + dt
+        completed: list[Request] = []
+        for r, take in pf_plan:
+            r.entry.prefill_done += take
+            # tokens actually materialized in the cache (never credited
+            # past what was written: a mid-prefill preemption must not
+            # mark unwritten positions as retained)
+            r._kv_written = max(getattr(r, "_kv_written", 0),
+                                r.entry.prefill_done)
+        for r in decoding:
+            n = emitted.get(r.rid, 0)
+            r._kv_written = max(getattr(r, "_kv_written", 0),
+                                r.context_len - 1)
+            r.entry.age += n
+            if r.first_token_time < 0 and n > 0:
+                r.first_token_time = now_next
+            if (len(r.generated) >= r.true_out_len
+                    or len(r.generated) >= r.max_new_tokens):
+                r.entry.state = ReqState.FINISHED
+                r.finish_time = now_next
+                stats.latencies.append(r.latency())
+                stats.ttfts.append(r.ttft())
+                completed.append(r)
+                if self.pool is not None:
+                    self.pool.release(r.rid)
+                elif r.slot >= 0:
+                    r.slot = -1
+                if self.blocks is not None and self.pool is None:
+                    # sim mode only: real-mode release() freed the pages
+                    self.blocks.free_request(r.rid)
 
-        stats.sim_time = now if ecfg.mode == "sim" else time.perf_counter() - wall0
+        if self.blocks is not None:
+            for rid in decision.scheduled:
+                r = pool_reqs[rid]
+                if not r.done:
+                    self.blocks.note_cached(
+                        rid, getattr(r, "_kv_written", 0))
+
+        mem = sum(self._bytes_for(pool_reqs[rid].context_len)
+                  for rid in decision.scheduled)
+        if self.blocks is not None:
+            mem += self._page_bytes * sum(
+                self.blocks.resident_pages(e.rid)
+                for e in entries.values()
+                if e.state is ReqState.PREEMPTED)
+        stats.peak_mem_bytes = max(stats.peak_mem_bytes, mem)
+        stats.iterations += 1
+        self._now = now_next
+        stats.sim_time = (self._now if ecfg.mode == "sim"
+                          else time.perf_counter() - self._wall0)
+        return StepResult(completed=completed, now=self._now,
+                          backlog_fn=self.backlog, ran=True)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> EngineStats:
+        """Drive a whole request trace to completion (the batch API).
+
+        Reimplemented on top of ``submit()``/``step()``: results are
+        byte-identical to the original monolithic loop. Resets any prior
+        incremental state — an engine is either batch- or step-driven.
+        """
+        self._reset_stream()
+        for req in sorted(requests, key=lambda r: r.arrival):
+            self.submit(req)
+        while self.has_work():
+            self.step()
+        stats = self.stats
+        stats.sim_time = (self._now if self.ecfg.mode == "sim"
+                          else time.perf_counter() - self._wall0)
         return stats
 
     # ------------------------------------------------------------------
@@ -571,6 +756,8 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                hardware: HardwareSpec | None = None, seed=0,
                probe_interval=1, oom_mode="discard", kv_layout="contig",
                page_size=16, max_len=1024) -> EngineStats:
+    """One-shot convenience: build an `Engine` and run a (deep-copied)
+    request trace under the given policy, returning its `EngineStats`."""
     ecfg = EngineConfig(policy=policy, c_limit=c_limit, max_batch=max_batch,
                         mem_budget=mem_budget, mode=mode, seed=seed,
                         probe_interval=probe_interval, oom_mode=oom_mode,

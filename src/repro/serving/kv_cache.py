@@ -68,6 +68,7 @@ def donating_jit(fn, donate: tuple[str, ...] = ("cache",), **jit_kwargs):
 
 
 def dtype_bytes(cfg: ModelConfig) -> int:
+    """Bytes per element of the cache dtype."""
     return jnp.dtype(cfg.dtype).itemsize
 
 
@@ -81,6 +82,7 @@ def bytes_per_token_kind(cfg: ModelConfig, kind: str) -> int:
 
 
 def ssm_state_bytes(cfg: ModelConfig) -> int:
+    """Fixed per-request SSM recurrent-state bytes (f32 state + conv)."""
     d_in, nh, conv_ch = ssm_dims(cfg)
     n = cfg.ssm_groups * cfg.ssm_state
     return 4 * (nh * cfg.ssm_head_dim * n) + 4 * (cfg.ssm_conv - 1) * conv_ch
@@ -109,6 +111,7 @@ def bytes_for_context(cfg: ModelConfig, context_len: int) -> int:
 
 
 def pages_for_tokens(tokens: int, page_size: int) -> int:
+    """Whole pages needed to hold ``tokens`` tokens."""
     return max(0, math.ceil(tokens / page_size))
 
 
@@ -195,6 +198,7 @@ class BlockManager:
         return None
 
     def free_pages(self) -> int:
+        """Unallocated page count (effectively infinite when unbounded)."""
         return len(self.free) if self.bounded else 1 << 30
 
     def ensure(self, rid: int, tokens: int) -> bool:
@@ -218,16 +222,20 @@ class BlockManager:
 
     # -- queries ---------------------------------------------------------
     def block_table(self, rid: int) -> list[int]:
+        """The request's ordered resident physical page ids (a copy)."""
         return list(self.pages.get(rid, ()))
 
     def resident_pages(self, rid: int) -> int:
+        """Number of device-resident pages held by ``rid``."""
         return len(self.pages.get(rid, ()))
 
     def resident_tokens(self, rid: int) -> int:
+        """Materialized prefix tokens covered by device-resident pages."""
         return min(self.cached_tokens.get(rid, 0),
                    self.resident_pages(rid) * self.page_size)
 
     def total_resident_pages(self) -> int:
+        """Device-resident pages across all requests."""
         return sum(len(p) for p in self.pages.values())
 
     # -- eviction / swap (tail-first) -----------------------------------
@@ -284,6 +292,7 @@ class BlockManager:
         return self.resident_tokens(rid)
 
     def free_request(self, rid: int) -> list[int]:
+        """Drop all of ``rid``'s pages and bookkeeping; returns freed ids."""
         freed = self.pages.pop(rid, [])
         if self.bounded:
             self.free.extend(freed)
@@ -308,11 +317,13 @@ class SlotPool:
 
     # -- allocation ------------------------------------------------------
     def assign(self, rid: int) -> int:
+        """Claim a free slot for ``rid``; returns the slot index."""
         slot = self.free.pop()
         self.slot_of[rid] = slot
         return slot
 
     def release(self, rid: int) -> int:
+        """Return ``rid``'s slot to the free list, queueing a device reset."""
         slot = self.slot_of.pop(rid)
         self.free.append(slot)
         self._dirty.append(slot)
@@ -329,9 +340,11 @@ class SlotPool:
 
     # -- accounting --------------------------------------------------------
     def bytes_for(self, context_len: int) -> int:
+        """Cache bytes this pool charges a context (clamped to max_len)."""
         return bytes_for_context(self.cfg, min(context_len, self.max_len))
 
     def used_slots(self) -> int:
+        """Slots currently assigned."""
         return self.n_slots - len(self.free)
 
 
@@ -372,6 +385,7 @@ class PagedSlotPool(SlotPool):
 
     # -- allocation ------------------------------------------------------
     def assign(self, rid: int) -> int:
+        """Claim a slot and re-link any retained pages (copy-on-admit)."""
         slot = super().assign(rid)
         self._write_table_row(slot, self.blocks.block_table(rid))
         retained = self.blocks.resume(rid)
@@ -385,6 +399,7 @@ class PagedSlotPool(SlotPool):
         return slot
 
     def release(self, rid: int, retain: bool = False) -> int:
+        """Release the slot; with ``retain`` the pages stay for resumption."""
         slot = self.slot_of[rid]
         if not retain:
             self._dirty_pages.extend(self.blocks.free_request(rid))
@@ -403,6 +418,7 @@ class PagedSlotPool(SlotPool):
         return ok
 
     def evict_tail(self, rid: int, n_pages: int) -> list[int]:
+        """Tail-evict pages and queue their device invalidation."""
         freed = self.blocks.evict_tail(rid, n_pages)
         self._dirty_pages.extend(freed)
         if rid in self.slot_of:
@@ -418,6 +434,7 @@ class PagedSlotPool(SlotPool):
 
     # -- device sync -----------------------------------------------------
     def flush_resets(self):
+        """Apply pending slot/page resets and sync the device block table."""
         super().flush_resets()
         if self._dirty_pages:
             n_pages = 1 + self.blocks.num_pages
@@ -431,6 +448,7 @@ class PagedSlotPool(SlotPool):
 
     # -- accounting ------------------------------------------------------
     def bytes_for(self, context_len: int) -> int:
+        """Page-rounded cache bytes for a context (clamped to max_len)."""
         return paged_bytes_for_context(
             self.cfg, min(context_len, self.max_len), self.page_size)
 
@@ -462,6 +480,7 @@ def _reset_slots(cache, mask):
     Donates the cache like ``_reset_pages`` (see note there)."""
 
     def reset_sub(r):
+        """Wipe one layer's per-slot recurrent leaves under the mask."""
         r = dict(r)
         if "kpos" in r:
             r["kpos"] = jnp.where(mask[None, :, None], -1, r["kpos"])

@@ -30,12 +30,15 @@ from repro.core.smoothing import bayes_update, transition_matrix
 
 
 class PredictorBase:
+    """Shared Bayesian-filter plumbing for all prediction providers."""
+
     def __init__(self, pc: ProbeConfig):
         self.pc = pc
         self.T = np.asarray(transition_matrix(pc))
         self.means = bin_means(pc)
 
     def expected(self, q) -> float:
+        """Expected remaining length under a bin posterior ``q``."""
         return float(np.dot(np.asarray(q), self.means))
 
     def _filter(self, req, p_t):
@@ -48,6 +51,9 @@ class PredictorBase:
 
 
 class OraclePredictor(PredictorBase):
+    """Sim-mode stand-in: models a trained probe's *statistics* around the
+    ground-truth remaining length (see module docstring)."""
+
     def __init__(self, pc: ProbeConfig, *, temp: float = 1.0,
                  bert_sigma: float = 0.9, flip_prob: float = 0.1,
                  seed: int = 0, refine: bool = True):
@@ -59,6 +65,7 @@ class OraclePredictor(PredictorBase):
         self.rng = random.Random(seed)
 
     def initial(self, req) -> float:
+        """Prompt-only r0 estimate (the paper's one-shot "BERT" regime)."""
         # prompt-only "BERT" prediction: multiplicative lognormal error
         err = self.rng.lognormvariate(0.0, self.bert_sigma)
         r0 = min(max(req.true_out_len * err, 1.0), self.pc.max_len)
@@ -66,12 +73,14 @@ class OraclePredictor(PredictorBase):
         return float(r0)
 
     def on_prefill(self, req, tap_mean=None) -> float:
+        """Prompt-phase probe posterior at the end of prefill."""
         # prefill-phase probe: sharper than BERT (paper Figure 3, t=0 point)
         rem = req.true_out_len
         req.posterior = self._probs_around(self._noisy(rem))
         return self.expected(req.posterior)
 
     def on_token(self, req, probe_probs=None) -> float:
+        """Per-token refinement (or r0 - age when refinement is off)."""
         if not self.refine:
             return max(float(req.entry.r0) - req.entry.age, 0.0)
         rem = max(req.true_out_len - len(req.generated), 0)
@@ -100,6 +109,7 @@ class ProbePredictor(PredictorBase):
         self.embed_table = embed_table     # for the pre-forward r0 estimate
 
     def initial(self, req) -> float:
+        """Pre-forward r0 from mean prompt embeddings through the probe."""
         if self.probe_params is None or self.embed_table is None:
             return self.pc.max_len / 2.0       # uninformative prior
         emb = np.asarray(self.embed_table)[np.asarray(req.prompt)].mean(0)
@@ -110,6 +120,7 @@ class ProbePredictor(PredictorBase):
         return self.expected(p)
 
     def on_prefill(self, req, tap_mean) -> float:
+        """Posterior from the prompt-phase tap mean (real probe output)."""
         logits = np.asarray(probe_mod.apply_probe(self.probe_params,
                                                   np.asarray(tap_mean)))
         p = np.exp(logits - logits.max())
@@ -118,4 +129,5 @@ class ProbePredictor(PredictorBase):
         return self.expected(p)
 
     def on_token(self, req, probe_probs) -> float:
+        """Bayes-update with the device-computed probe posterior."""
         return self._filter(req, np.asarray(probe_probs))

@@ -9,12 +9,15 @@ from repro.core.scheduler import ReqState, SchedEntry
 
 @dataclass
 class Request:
+    """One request's full lifecycle state (identity, progress, metrics)."""
+
     rid: int
     arrival: float
     prompt: list[int]
     max_new_tokens: int = 512
     # oracle ground truth (sim mode / synthetic EOS): output length in tokens
     true_out_len: int = 0
+    tenant: str = ""                              # multi-tenant workload tag
 
     generated: list[int] = field(default_factory=list)
     entry: SchedEntry = None                      # scheduling metadata
@@ -35,14 +38,18 @@ class Request:
 
     @property
     def context_len(self) -> int:
+        """Prompt + generated tokens (the KV footprint driver)."""
         return len(self.prompt) + len(self.generated)
 
     @property
     def done(self) -> bool:
+        """True once the scheduler marked the request FINISHED."""
         return self.entry.state is ReqState.FINISHED
 
     def latency(self) -> float:
+        """Completion time: finish minus arrival (engine-clock seconds)."""
         return self.finish_time - self.arrival
 
     def ttft(self) -> float:
+        """Time to first token (engine-clock seconds)."""
         return self.first_token_time - self.arrival

@@ -1,4 +1,4 @@
-"""Workload generation: Alpaca-like request streams.
+"""Workload generation: Alpaca-like request streams and a scenario library.
 
 The Alpaca dataset (the paper's workload) is not available offline, so we
 generate a synthetic stream whose *shape* matches its published statistics:
@@ -7,24 +7,102 @@ tensor is [1, 44, 4096]) and right-skewed output lengths clipped to the
 paper's 512-token prediction range (lognormal; most responses < 100 tokens,
 a long tail up to 512 — the regime where SRPT-style policies shine).
 
-Arrival processes: Poisson at a configurable request rate, or the paper's
-burst scenario (everything at t=0, Figure 7).
+Arrival processes:
+
+* ``poisson`` — homogeneous Poisson at ``request_rate`` (the paper's
+  Figures 5-6 setting).
+* ``burst``   — everything at t=0 (the paper's Figure 7).
+* ``mmpp``    — 2-state Markov-modulated Poisson (bursty on/off traffic):
+  a high-rate ON state and a low-rate OFF state with exponential dwell
+  times, normalized so the long-run mean rate equals ``request_rate``.
+* ``diurnal`` — non-homogeneous Poisson with a sinusoidal rate curve
+  (thinning), mean rate ``request_rate``.
+
+Named presets combining arrivals with length mixes live in ``SCENARIOS``
+and are built with `scenario_config` — reachable from ``launch/serve.py
+--scenario`` and ``benchmarks/cluster_curves.py``.
+
+RNG streams: historically one ``random.Random(seed)`` drove arrivals,
+lengths, *and* prompt-token content, so any arrival-process change
+(toggling ``burst``, or an arrival distribution that consumes a
+data-dependent number of draws, like MMPP) reshuffled every length and
+content draw. With ``split_streams=True`` (the default for every scenario
+preset) arrivals, lengths, tenant assignment, and token content each draw
+from an independent stream seeded from ``seed`` — the job-size sequence
+is invariant under arrival-process and rate changes. The legacy coupled
+stream remains the ``WorkloadConfig`` default so experiment JSONs
+produced by earlier revisions stay reproducible.
 """
 
 from __future__ import annotations
 
 import math
 import random
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 from repro.serving.request import Request
 
 
 @dataclass(frozen=True)
+class TenantSpec:
+    """One tenant in a multi-tenant mix.
+
+    Attributes:
+        name: tenant tag stamped onto each generated `Request`.
+        weight: sampling weight (normalized over the mix).
+        prompt_mean: lognormal location for prompt lengths (tokens).
+        prompt_sigma: lognormal sigma for prompt lengths.
+        out_median: lognormal median for output lengths (tokens).
+        out_sigma: lognormal sigma for output lengths.
+    """
+
+    name: str
+    weight: float
+    prompt_mean: float = 44.0
+    prompt_sigma: float = 0.6
+    out_median: float = 48.0
+    out_sigma: float = 1.0
+
+
+@dataclass(frozen=True)
 class WorkloadConfig:
+    """Parameters for one synthetic request stream.
+
+    Attributes:
+        n_requests: number of requests to generate.
+        request_rate: long-run mean arrival rate (req/s) for every
+            arrival process except ``burst``.
+        burst: legacy flag — everything arrives at t=0 (same as
+            ``arrival="burst"``; kept for config compatibility).
+        arrival: arrival process — ``poisson`` | ``burst`` | ``mmpp`` |
+            ``diurnal`` (see module docstring).
+        prompt_mean: lognormal location for prompt lengths (tokens).
+        prompt_sigma: lognormal sigma for prompt lengths.
+        out_median: lognormal median of output lengths (tokens).
+        out_sigma: lognormal sigma of output lengths.
+        max_out: output-length clip — the paper's 512-token range.
+        min_out: lower output-length clip.
+        vocab: vocabulary size for random prompt-token content.
+        seed: master seed (all streams derive from it).
+        split_streams: draw arrivals / lengths / tenants / content from
+            independent per-purpose streams (see module docstring). Off
+            by default for byte-compatibility with old experiments.
+        mmpp_burst_factor: ON-state rate multiplier (mmpp). The OFF rate
+            is derived so the long-run mean equals ``request_rate``;
+            requires ``mmpp_duty * mmpp_burst_factor <= 1``.
+        mmpp_duty: long-run fraction of time spent in the ON state.
+        mmpp_cycle: mean ON+OFF cycle length in seconds.
+        diurnal_amp: relative amplitude of the sinusoidal rate curve
+            (0 = flat Poisson, 1 = rate touches zero at the trough).
+        diurnal_period: period of the rate curve in seconds.
+        tenants: optional `TenantSpec` mix; empty = single-tenant using
+            the top-level length parameters.
+    """
+
     n_requests: int = 256
     request_rate: float = 14.0       # the paper's Figure 5 operating point
     burst: bool = False
+    arrival: str = "poisson"         # poisson | burst | mmpp | diurnal
     prompt_mean: float = 44.0        # tokens (paper's profiling shape)
     prompt_sigma: float = 0.6        # lognormal sigma
     out_median: float = 48.0
@@ -33,29 +111,222 @@ class WorkloadConfig:
     min_out: int = 1
     vocab: int = 32000
     seed: int = 0
+    split_streams: bool = False
+    mmpp_burst_factor: float = 3.0
+    mmpp_duty: float = 0.25
+    mmpp_cycle: float = 8.0
+    diurnal_amp: float = 0.8
+    diurnal_period: float = 60.0
+    tenants: tuple = ()
 
 
-def sample_output_length(rng: random.Random, wc: WorkloadConfig) -> int:
-    v = rng.lognormvariate(math.log(wc.out_median), wc.out_sigma)
+def sample_output_length(rng: random.Random, wc,
+                         spec: TenantSpec | None = None) -> int:
+    """Draw one lognormal output length, clipped to [min_out, max_out]."""
+    med = spec.out_median if spec is not None else wc.out_median
+    sig = spec.out_sigma if spec is not None else wc.out_sigma
+    v = rng.lognormvariate(math.log(med), sig)
     return max(wc.min_out, min(int(v), wc.max_out))
 
 
-def sample_prompt_length(rng: random.Random, wc: WorkloadConfig) -> int:
-    v = rng.lognormvariate(math.log(wc.prompt_mean), wc.prompt_sigma)
+def sample_prompt_length(rng: random.Random, wc,
+                         spec: TenantSpec | None = None) -> int:
+    """Draw one lognormal prompt length, clipped to [4, 2048]."""
+    mean = spec.prompt_mean if spec is not None else wc.prompt_mean
+    sig = spec.prompt_sigma if spec is not None else wc.prompt_sigma
+    v = rng.lognormvariate(math.log(mean), sig)
     return max(4, min(int(v), 2048))
 
 
-def generate(wc: WorkloadConfig) -> list[Request]:
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def _poisson_arrivals(rng: random.Random, wc: WorkloadConfig) -> list[float]:
+    t, out = 0.0, []
+    for _ in range(wc.n_requests):
+        t += rng.expovariate(wc.request_rate)
+        out.append(t)
+    return out
+
+
+def _mmpp_arrivals(rng: random.Random, wc: WorkloadConfig) -> list[float]:
+    """2-state MMPP: exponential ON/OFF dwells, mean rate = request_rate.
+
+    Memorylessness makes discard-and-redraw at state switches exact: an
+    exponential inter-arrival that crosses the switch time is simply
+    abandoned and redrawn at the new state's rate.
+    """
+    duty, fb = wc.mmpp_duty, wc.mmpp_burst_factor
+    if duty * fb > 1.0:
+        raise ValueError("mmpp_duty * mmpp_burst_factor must be <= 1 "
+                         "(OFF-state rate would be negative)")
+    rate_on = wc.request_rate * fb
+    rate_off = wc.request_rate * (1.0 - duty * fb) / (1.0 - duty)
+    mean_on = duty * wc.mmpp_cycle
+    mean_off = (1.0 - duty) * wc.mmpp_cycle
+    t, on, out = 0.0, True, []
+    t_switch = rng.expovariate(1.0 / mean_on)
+    while len(out) < wc.n_requests:
+        rate = rate_on if on else rate_off
+        dt = rng.expovariate(rate) if rate > 0 else float("inf")
+        if t + dt < t_switch:
+            t += dt
+            out.append(t)
+        else:
+            t = t_switch
+            on = not on
+            t_switch = t + rng.expovariate(
+                1.0 / (mean_on if on else mean_off))
+    return out
+
+
+def _diurnal_arrivals(rng: random.Random, wc: WorkloadConfig) -> list[float]:
+    """Non-homogeneous Poisson via thinning against the peak rate."""
+    base, amp, period = wc.request_rate, wc.diurnal_amp, wc.diurnal_period
+    rate_max = base * (1.0 + amp)
+    t, out = 0.0, []
+    while len(out) < wc.n_requests:
+        t += rng.expovariate(rate_max)
+        rate_t = base * (1.0 + amp * math.sin(2.0 * math.pi * t / period))
+        if rng.random() * rate_max < rate_t:
+            out.append(t)
+    return out
+
+
+_ARRIVALS = {"poisson": _poisson_arrivals, "mmpp": _mmpp_arrivals,
+             "diurnal": _diurnal_arrivals}
+
+
+def _pick_tenant(rng: random.Random, wc: WorkloadConfig) -> TenantSpec | None:
+    if not wc.tenants:
+        return None
+    total = sum(s.weight for s in wc.tenants)
+    u = rng.random() * total
+    acc = 0.0
+    for spec in wc.tenants:
+        acc += spec.weight
+        if u < acc:
+            return spec
+    return wc.tenants[-1]
+
+
+# ---------------------------------------------------------------------------
+# generation
+# ---------------------------------------------------------------------------
+
+def _generate_legacy(wc: WorkloadConfig, burst: bool) -> list[Request]:
+    """The original coupled-RNG path (arrivals+lengths+content share one
+    stream); kept byte-identical so old experiment JSONs reproduce."""
     rng = random.Random(wc.seed)
     t = 0.0
     reqs = []
     for rid in range(wc.n_requests):
-        if not wc.burst:
+        if not burst:
             t += rng.expovariate(wc.request_rate)
         plen = sample_prompt_length(rng, wc)
         olen = sample_output_length(rng, wc)
         prompt = [rng.randrange(1, wc.vocab) for _ in range(plen)]
-        reqs.append(Request(rid=rid, arrival=t if not wc.burst else 0.0,
+        reqs.append(Request(rid=rid, arrival=t if not burst else 0.0,
                             prompt=prompt, true_out_len=olen,
                             max_new_tokens=wc.max_out))
     return reqs
+
+
+def generate(wc: WorkloadConfig) -> list[Request]:
+    """Generate the request stream described by ``wc``.
+
+    With ``split_streams=False`` and a plain poisson/burst arrival this is
+    the legacy coupled-RNG generator (byte-identical to earlier
+    revisions). Every other combination uses four independent streams
+    derived from ``wc.seed`` — ``arrivals``, ``lengths``, ``tenants`` and
+    ``content`` — so the job-size sequence is invariant under
+    ``request_rate`` (and arrival-process) changes.
+    """
+    arrival = "burst" if wc.burst else wc.arrival
+    if arrival not in ("poisson", "burst", "mmpp", "diurnal"):
+        raise ValueError(f"unknown arrival process {wc.arrival!r}")
+    if not wc.split_streams and arrival in ("poisson", "burst"):
+        if wc.tenants:
+            raise ValueError("tenant mixes require split_streams=True")
+        return _generate_legacy(wc, burst=arrival == "burst")
+
+    # string seeding is deterministic across processes (hashed via sha512
+    # by random.seed, not PYTHONHASHSEED)
+    arr_rng = random.Random(f"{wc.seed}:arrivals")
+    len_rng = random.Random(f"{wc.seed}:lengths")
+    ten_rng = random.Random(f"{wc.seed}:tenants")
+    tok_rng = random.Random(f"{wc.seed}:content")
+
+    if arrival == "burst":
+        arrivals = [0.0] * wc.n_requests
+    else:
+        arrivals = _ARRIVALS[arrival](arr_rng, wc)
+
+    reqs = []
+    for rid, t in enumerate(arrivals):
+        spec = _pick_tenant(ten_rng, wc)
+        plen = sample_prompt_length(len_rng, wc, spec)
+        olen = sample_output_length(len_rng, wc, spec)
+        prompt = [tok_rng.randrange(1, wc.vocab) for _ in range(plen)]
+        reqs.append(Request(rid=rid, arrival=t, prompt=prompt,
+                            true_out_len=olen, max_new_tokens=wc.max_out,
+                            tenant=spec.name if spec else ""))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# scenario library
+# ---------------------------------------------------------------------------
+
+#: Named presets: scenario name -> WorkloadConfig field overrides. All
+#: presets use split RNG streams so job sizes are rate-invariant.
+SCENARIOS: dict[str, dict] = {
+    # the paper's settings
+    "poisson": dict(arrival="poisson"),
+    "burst": dict(arrival="burst"),
+    # bursty on/off traffic: 3x rate spikes a quarter of the time
+    "bursty": dict(arrival="mmpp", mmpp_burst_factor=3.0, mmpp_duty=0.25,
+                   mmpp_cycle=8.0),
+    # slow sinusoidal load curve (compressed diurnal cycle)
+    "diurnal": dict(arrival="diurnal", diurnal_amp=0.8, diurnal_period=60.0),
+    # chat-heavy multi-tenant mix: interactive chat, code completion with
+    # longer prompts/outputs, and a small batch-summarization tenant with
+    # big prompts and short outputs
+    "multi-tenant": dict(arrival="poisson", tenants=(
+        TenantSpec("chat", 0.6, prompt_mean=44.0, out_median=48.0),
+        TenantSpec("code", 0.3, prompt_mean=120.0, prompt_sigma=0.5,
+                   out_median=128.0, out_sigma=0.8),
+        TenantSpec("summarize", 0.1, prompt_mean=400.0, prompt_sigma=0.4,
+                   out_median=24.0, out_sigma=0.5),
+    )),
+    # long-context-heavy: big prompts, moderate outputs — stresses KV
+    # memory and chunked prefill rather than decode
+    "long-context": dict(arrival="poisson", prompt_mean=400.0,
+                         prompt_sigma=0.8, out_median=96.0),
+}
+
+
+def scenario_config(name: str, *, n_requests: int, request_rate: float,
+                    seed: int = 0, vocab: int = 32000,
+                    **overrides) -> WorkloadConfig:
+    """Build the `WorkloadConfig` for a named scenario preset.
+
+    Args:
+        name: a key of ``SCENARIOS``.
+        n_requests: number of requests.
+        request_rate: long-run mean arrival rate (req/s).
+        seed: master RNG seed.
+        vocab: vocabulary size for prompt content.
+        **overrides: any further `WorkloadConfig` field overrides.
+
+    Returns:
+        A frozen `WorkloadConfig` with ``split_streams=True``.
+    """
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r}; "
+                         f"choose from {sorted(SCENARIOS)}")
+    wc = WorkloadConfig(n_requests=n_requests, request_rate=request_rate,
+                        seed=seed, vocab=vocab, split_streams=True,
+                        **SCENARIOS[name])
+    return replace(wc, **overrides) if overrides else wc

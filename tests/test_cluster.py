@@ -1,0 +1,215 @@
+"""Cluster-router tests: incremental engine API equivalence, router
+invariants (batch bounds, determinism), and prediction-driven dispatch."""
+
+import copy
+
+import pytest
+
+from repro.cluster import ROUTER_POLICIES, Router, RouterConfig, run_cluster
+from repro.config import get_config
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig, run_policy
+from repro.serving.predictors import OraclePredictor
+from repro.serving.workload import generate, scenario_config
+
+CFG = get_config("granite-3-8b")
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  overhead_s=2e-4)
+
+
+def workload(n=60, rate=2.0, seed=0, scenario="bursty"):
+    wc = scenario_config(scenario, n_requests=n, request_rate=rate,
+                         seed=seed, vocab=CFG.vocab_size)
+    return generate(wc)
+
+
+# ---------------------------------------------------------------------------
+# incremental engine API (the tentpole refactor)
+# ---------------------------------------------------------------------------
+
+def test_run_equals_submit_step_loop():
+    """run() is a thin wrapper: manual submit()+step() must reproduce it."""
+    reqs = workload(n=40)
+    batch = run_policy(CFG, "trail", reqs, mode="sim", seed=1)
+
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=1))
+    for r in sorted(copy.deepcopy(reqs), key=lambda r: r.arrival):
+        eng.submit(r)
+    completed = []
+    while eng.has_work():
+        res = eng.step()
+        completed.extend(res.completed)
+    assert len(completed) == len(reqs)
+    assert eng.stats.latencies == batch.latencies
+    assert eng.stats.ttfts == batch.ttfts
+    assert eng.stats.iterations == batch.iterations
+    assert eng.now == batch.sim_time
+
+
+def test_step_result_fields():
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=2))
+    assert not eng.has_work() and eng.backlog() == 0.0
+    res = eng.step()                        # drained engine: idle no-op
+    assert not res.ran and res.now == 0.0
+    for r in workload(n=4, rate=100.0, seed=3):
+        eng.submit(r)
+    assert eng.queue_len() == 4 and eng.backlog() > 0.0
+    ran_any = False
+    while eng.has_work():
+        res = eng.step()
+        ran_any = ran_any or res.ran
+        assert res.now == eng.now
+    assert ran_any and eng.backlog() == 0.0
+
+
+def test_single_replica_cluster_equals_run_policy():
+    """A 1-replica cluster is exactly the single-engine simulation."""
+    reqs = workload(n=50, seed=4)
+    single = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                        hardware=HW).summary()
+    clus = run_cluster(CFG, reqs, router_policy="round-robin", n_replicas=1,
+                       policy="trail", seed=5, hardware=HW).summary()
+    assert clus["mean_latency"] == pytest.approx(single["mean_latency"])
+    assert clus["finished"] == len(reqs)
+
+
+# ---------------------------------------------------------------------------
+# router invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ROUTER_POLICIES)
+def test_all_requests_finish_every_router_policy(policy):
+    reqs = workload(n=60, seed=6)
+    s = run_cluster(CFG, reqs, router_policy=policy, n_replicas=3,
+                    policy="trail", seed=7, hardware=HW)
+    d = s.summary()
+    assert d["finished"] == len(reqs)
+    assert sum(d["dispatch_counts"]) == len(reqs)
+    assert all(v > 0 for v in s.latencies)
+
+
+@pytest.mark.parametrize("policy", ROUTER_POLICIES)
+def test_no_replica_exceeds_max_batch(policy):
+    mb = 4
+    reqs = workload(n=60, rate=8.0, seed=8)
+    s = run_cluster(CFG, reqs, router_policy=policy, n_replicas=2,
+                    policy="trail", seed=9, max_batch=mb, hardware=HW)
+    for summ in s.replica_summaries:
+        assert 0 < summ["peak_batch"] <= mb
+
+
+@pytest.mark.parametrize("policy", ROUTER_POLICIES)
+def test_dispatch_deterministic_per_seed(policy):
+    reqs = workload(n=50, seed=10)
+
+    def once():
+        replicas = [Engine(CFG, EngineConfig(policy="trail", seed=11 + i,
+                                             hardware=HW))
+                    for i in range(2)]
+        router = Router(replicas, RouterConfig(n_replicas=2, policy=policy,
+                                               seed=13),
+                        size_predictor=OraclePredictor(CFG.probe, seed=99))
+        stats = router.run(copy.deepcopy(reqs))
+        return router.dispatch_log, stats.summary()["mean_latency"]
+
+    log1, lat1 = once()
+    log2, lat2 = once()
+    assert log1 == log2
+    assert lat1 == lat2
+
+
+def test_round_robin_is_cyclic():
+    reqs = workload(n=30, seed=12)
+    replicas = [Engine(CFG, EngineConfig(policy="trail", seed=i,
+                                         hardware=HW)) for i in range(3)]
+    router = Router(replicas, RouterConfig(n_replicas=3,
+                                           policy="round-robin", seed=0))
+    router.run(copy.deepcopy(reqs))
+    assert [i for _, i in router.dispatch_log] == \
+        [k % 3 for k in range(len(reqs))]
+
+
+def test_router_validation():
+    replicas = [Engine(CFG, EngineConfig(seed=0))]
+    with pytest.raises(ValueError):
+        Router(replicas, RouterConfig(n_replicas=1, policy="magic"))
+    with pytest.raises(ValueError):
+        Router(replicas, RouterConfig(n_replicas=2, policy="jsq"))
+
+
+# ---------------------------------------------------------------------------
+# jspw uses live predictions
+# ---------------------------------------------------------------------------
+
+def _engine_with_jobs(out_lens, seed):
+    """An engine holding admitted jobs with ~oracle-accurate predictions,
+    stepped past prefill so backlog is dominated by pred_remaining."""
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=seed, hardware=HW),
+                 predictor=OraclePredictor(CFG.probe, seed=seed,
+                                           bert_sigma=1e-6, flip_prob=0.0,
+                                           temp=1e-3))
+    reqs = workload(n=len(out_lens), rate=1e9, seed=seed)
+    for r, olen in zip(reqs, out_lens):
+        r.true_out_len = olen
+        r.prompt = r.prompt[:8]
+        eng.submit(r)
+    eng.step()        # admit + prefill
+    eng.step()        # first decode: on_prefill predictions live
+    return eng
+
+
+def test_jspw_routes_by_live_predictions():
+    """Untruncated jspw joins the replica with the smaller predicted
+    backlog, regardless of queue counts."""
+    e_long = _engine_with_jobs([400], seed=1)       # 1 job, huge backlog
+    e_short = _engine_with_jobs([30, 30, 30], seed=2)   # 3 jobs, small
+    assert e_long.backlog() > e_short.backlog()
+    assert e_long.queue_len() < e_short.queue_len()
+    router = Router([e_long, e_short],
+                    RouterConfig(n_replicas=2, policy="jspw", seed=0))
+    req = workload(n=1, rate=1e9, seed=3)[0]
+    assert router._pick(req) == 1                   # smaller backlog wins
+    # jsq would have picked the other replica
+    router_q = Router([e_long, e_short],
+                      RouterConfig(n_replicas=2, policy="jsq", seed=0))
+    assert router_q._pick(req) == 0
+
+
+def test_jspw_truncation_ignores_longer_jobs():
+    """With a size predictor, predicted work longer than the arrival is
+    discounted (SRPT-interfering work): one 400-token job interferes less
+    with a 10-token arrival than three 30-token jobs."""
+    e_long = _engine_with_jobs([400], seed=1)
+    e_short = _engine_with_jobs([30, 30, 30], seed=2)
+    size_pred = OraclePredictor(CFG.probe, seed=5, bert_sigma=1e-6,
+                                flip_prob=0.0)
+    router = Router([e_long, e_short],
+                    RouterConfig(n_replicas=2, policy="jspw", seed=0),
+                    size_predictor=size_pred)
+    req = workload(n=1, rate=1e9, seed=3)[0]
+    req.true_out_len = 10
+    assert router._pick(req) == 0                   # long job yields anyway
+
+
+def test_jspw_beats_round_robin_on_bursty():
+    """The BENCH_cluster.json headline, at reduced scale: predicted-work
+    routing beats state-blind round-robin at the matched aggregate rate."""
+    means = {}
+    for pol in ("round-robin", "jspw"):
+        vals = []
+        for seed in (3, 11, 23):
+            reqs = workload(n=150, rate=0.9, seed=seed)
+            s = run_cluster(CFG, reqs, router_policy=pol, n_replicas=2,
+                            policy="trail", seed=5, hardware=HW)
+            vals.append(s.summary()["mean_latency"])
+        means[pol] = sum(vals) / len(vals)
+    assert means["jspw"] < means["round-robin"]
+
+
+def test_two_replicas_beat_one_at_matched_rate():
+    reqs = workload(n=120, rate=0.9, seed=3)
+    r1 = run_cluster(CFG, reqs, router_policy="round-robin", n_replicas=1,
+                     policy="trail", seed=5, hardware=HW).summary()
+    r2 = run_cluster(CFG, reqs, router_policy="round-robin", n_replicas=2,
+                     policy="trail", seed=5, hardware=HW).summary()
+    assert r2["mean_latency"] < r1["mean_latency"]

@@ -1,0 +1,136 @@
+"""Scenario-library tests: seed determinism, empirical arrival rates,
+tenant mixes, RNG-stream decoupling, and legacy byte-compatibility."""
+
+import math
+import random
+
+import pytest
+
+from repro.serving.workload import (SCENARIOS, TenantSpec, WorkloadConfig,
+                                    generate, scenario_config)
+
+
+def _sig(reqs):
+    return [(r.arrival, len(r.prompt), r.true_out_len, r.tenant,
+             tuple(r.prompt[:4])) for r in reqs]
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_seed_determinism(name):
+    wc = scenario_config(name, n_requests=64, request_rate=10.0, seed=9,
+                         vocab=500)
+    assert _sig(generate(wc)) == _sig(generate(wc))
+    # a different seed must actually change the stream
+    wc2 = scenario_config(name, n_requests=64, request_rate=10.0, seed=10,
+                          vocab=500)
+    assert _sig(generate(wc2)) != _sig(generate(wc))
+
+
+@pytest.mark.parametrize("name,tol", [("poisson", 0.10), ("bursty", 0.25),
+                                      ("diurnal", 0.25)])
+def test_empirical_arrival_rate(name, tol):
+    rate = 12.0
+    wc = scenario_config(name, n_requests=3000, request_rate=rate, seed=2,
+                         vocab=100)
+    reqs = generate(wc)
+    arr = [r.arrival for r in reqs]
+    assert arr == sorted(arr)
+    emp = (len(arr) - 1) / (arr[-1] - arr[0])
+    assert abs(emp - rate) / rate < tol, emp
+
+
+def test_mmpp_is_burstier_than_poisson():
+    """Squared coefficient of variation of inter-arrivals: MMPP > Poisson
+    (which has CV^2 = 1)."""
+    def cv2(name):
+        reqs = generate(scenario_config(name, n_requests=4000,
+                                        request_rate=10.0, seed=5,
+                                        vocab=100))
+        gaps = [b.arrival - a.arrival for a, b in zip(reqs, reqs[1:])]
+        mu = sum(gaps) / len(gaps)
+        var = sum((g - mu) ** 2 for g in gaps) / len(gaps)
+        return var / (mu * mu)
+    assert cv2("bursty") > 1.3 > cv2("poisson")
+
+
+def test_tenant_mix_proportions():
+    wc = scenario_config("multi-tenant", n_requests=3000, request_rate=10.0,
+                         seed=1, vocab=100)
+    reqs = generate(wc)
+    weights = {s.name: s.weight for s in wc.tenants}
+    total = sum(weights.values())
+    for name, w in weights.items():
+        frac = sum(1 for r in reqs if r.tenant == name) / len(reqs)
+        assert abs(frac - w / total) < 0.05, (name, frac)
+    # tenant length params actually apply: summarize prompts >> chat prompts
+    mean_plen = lambda t: (sum(len(r.prompt) for r in reqs if r.tenant == t)
+                           / max(sum(1 for r in reqs if r.tenant == t), 1))
+    assert mean_plen("summarize") > 3 * mean_plen("chat")
+
+
+def test_split_streams_decouple_rate_from_sizes():
+    """The satellite fix: changing request_rate must not reshuffle length
+    or content draws when streams are split."""
+    a = generate(scenario_config("poisson", n_requests=80, request_rate=5.0,
+                                 seed=7, vocab=300))
+    b = generate(scenario_config("poisson", n_requests=80, request_rate=50.0,
+                                 seed=7, vocab=300))
+    assert [r.arrival for r in a] != [r.arrival for r in b]
+    assert all(x.prompt == y.prompt and x.true_out_len == y.true_out_len
+               for x, y in zip(a, b))
+
+
+def test_legacy_rng_is_coupled_and_byte_stable():
+    """The default (compat) path keeps the historical coupled stream: the
+    same draws as random.Random(seed) interleaved arrival->lengths->
+    content, so old experiment artifacts stay reproducible."""
+    wc = WorkloadConfig(n_requests=3, request_rate=10.0, seed=0, vocab=50)
+    reqs = generate(wc)
+    rng = random.Random(0)
+    t = 0.0
+    for r in reqs:
+        t += rng.expovariate(10.0)
+        plen = max(4, min(int(rng.lognormvariate(math.log(44.0), 0.6)), 2048))
+        olen = max(1, min(int(rng.lognormvariate(math.log(48.0), 1.0)), 512))
+        prompt = [rng.randrange(1, 50) for _ in range(plen)]
+        assert (r.arrival, len(r.prompt), r.true_out_len, r.prompt) == \
+            (t, plen, olen, prompt)
+    # and changing the arrival process DOES reshuffle sizes on the legacy
+    # path (burst skips the expovariate draws, shifting every later draw)
+    reqs2 = generate(WorkloadConfig(n_requests=3, request_rate=10.0, seed=0,
+                                    vocab=50, burst=True))
+    assert [r.true_out_len for r in reqs2] != [r.true_out_len for r in reqs]
+    # ...while the split-stream path is invariant to it
+    a = generate(WorkloadConfig(n_requests=3, seed=0, vocab=50,
+                                split_streams=True))
+    b = generate(WorkloadConfig(n_requests=3, seed=0, vocab=50, burst=True,
+                                split_streams=True))
+    assert [r.true_out_len for r in a] == [r.true_out_len for r in b]
+
+
+def test_burst_scenario_arrives_at_zero():
+    wc = scenario_config("burst", n_requests=16, request_rate=10.0, seed=3,
+                         vocab=100)
+    assert all(r.arrival == 0.0 for r in generate(wc))
+    # legacy burst flag still works
+    assert all(r.arrival == 0.0 for r in
+               generate(WorkloadConfig(n_requests=16, burst=True)))
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        scenario_config("nope", n_requests=4, request_rate=1.0)
+    with pytest.raises(ValueError):
+        generate(WorkloadConfig(arrival="weibull", split_streams=True))
+    with pytest.raises(ValueError):        # OFF rate would go negative
+        generate(WorkloadConfig(arrival="mmpp", split_streams=True,
+                                mmpp_duty=0.5, mmpp_burst_factor=3.0,
+                                n_requests=4))
+    with pytest.raises(ValueError):        # tenants need split streams
+        generate(WorkloadConfig(tenants=(TenantSpec("a", 1.0),)))
+
+
+def test_scenario_config_overrides():
+    wc = scenario_config("bursty", n_requests=8, request_rate=2.0,
+                         mmpp_cycle=99.0)
+    assert wc.mmpp_cycle == 99.0 and wc.split_streams

@@ -1,0 +1,82 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the repo docs (CI gate).
+
+Verifies, for every ``[text](target)`` in the given markdown files:
+
+* relative file targets exist (resolved against the file's directory);
+* ``#anchor`` fragments resolve to a heading in the target file, using
+  GitHub's slug rules (lowercase, strip punctuation, spaces -> hyphens);
+* bare ``#anchor`` targets resolve within the same file.
+
+External (``http(s)://``) links are skipped — CI has no network.
+
+    python tools/check_links.py README.md docs/ARCHITECTURE.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->hyphens."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip())
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", h)       # linked headings
+    h = h.lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    return {github_slug(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    text = CODE_FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        dest = path if not target else (path.parent / target).resolve()
+        if not dest.exists():
+            errors.append(f"{path}: broken link -> {m.group(1)}")
+            continue
+        if frag is not None:
+            if dest.is_dir() or dest.suffix.lower() not in (".md", ".markdown"):
+                continue            # can't anchor-check non-markdown
+            if github_slug(frag) not in anchors_of(dest):
+                errors.append(f"{path}: missing anchor -> {m.group(1)}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check_file(p))
+    for e in errors:
+        print(e)
+    if not errors:
+        print(f"link-check OK ({len(argv)} files)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
