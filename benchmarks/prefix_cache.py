@@ -1,0 +1,201 @@
+"""Cross-request KV prefix caching: hit-rate x policy sweep.
+
+Serves the ``shared-prefix`` tenant mix (per-tenant system prompts:
+192/384/96 tokens for chat/code/summarize) on a 2-replica cluster at the
+PR-3 compute-bound operating point (2 bf16 TFLOP/s per replica, 0.9
+aggregate req/s) — the regime where prefill compute is the bottleneck, so
+serving a prompt prefix from the cache (block-table link, no compute)
+shows up directly in completion time.
+
+Grid: prefix hit rate (the workload dial) x {no-sharing baseline,
+prefix_cache under round-robin / jspw / prefix-affinity routing}, each
+cell averaged over workload seeds. A small real-mode section runs the
+actual model (CPU-sized ``trail_llama``) with identical prompts through
+the paged engine and checks the prefilled-token drop end to end.
+
+Writes ``experiments/results/prefix_cache.json`` and the headline
+``BENCH_prefix_cache.json``: at hit rate 1.0, prefix caching must cut
+mean completion time by >= 1.3x vs the no-sharing baseline (it lands far
+above that), with prefilled tokens/request dropping accordingly.
+
+    PYTHONPATH=src python -m benchmarks.prefix_cache --quick
+    PYTHONPATH=src python -m benchmarks.prefix_cache --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from benchmarks.cluster_curves import HW       # the PR-3 compute-bound
+from benchmarks.common import emit, save_json  # operating point, shared so
+from repro.cluster import run_cluster          # the benchmarks cannot drift
+from repro.config import get_config, get_smoke_config
+from repro.serving.workload import generate, scenario_config
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+RATE = 0.9                  # aggregate req/s (the PR-3 headline rate)
+N_REPLICAS = 2
+ROUTERS = ("round-robin", "jspw", "prefix-affinity")
+HEADLINE_HIT = 1.0
+
+
+def _cell(cfg, reqs_by_seed, *, router, prefix_cache):
+    """Average one grid cell over the workload seeds."""
+    means, p99s, pf, hits, fins = [], [], [], [], []
+    for reqs in reqs_by_seed:
+        s = run_cluster(cfg, reqs, router_policy=router,
+                        n_replicas=N_REPLICAS, policy="trail", seed=5,
+                        max_batch=16, hardware=HW, kv_layout="paged",
+                        prefix_cache=prefix_cache)
+        d = s.summary()
+        means.append(d["mean_latency"])
+        p99s.append(d["p99_latency"])
+        pf.append(d["prefilled_tokens"] / max(d["finished"], 1))
+        hits.append(d["prefix_hit_tokens"] / max(d["finished"], 1))
+        fins.append(d["finished"])
+    return {"mean_latency": float(np.mean(means)),
+            "p99_latency": float(np.mean(p99s)),
+            "prefilled_tokens_per_req": float(np.mean(pf)),
+            "prefix_hit_tokens_per_req": float(np.mean(hits)),
+            "finished": int(np.sum(fins)),
+            "per_seed_mean": [float(m) for m in means]}
+
+
+def run_real(n: int = 8, seed: int = 1) -> dict:
+    """Real-mode check on a CPU-sized model: identical shared prompts
+    through the paged device pool, prefix caching off vs on. The clock is
+    real wall time on whatever machine runs this, so the comparison that
+    matters is prefilled tokens (the compute actually spent), not
+    latency."""
+    import jax
+
+    from repro.models.model import Model
+    from repro.serving.engine import run_policy
+    from repro.serving.predictors import ProbePredictor
+    from repro.serving.workload import WorkloadConfig
+
+    cfg = get_smoke_config("trail-llama")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    wc = WorkloadConfig(n_requests=n, request_rate=50.0, seed=seed,
+                        vocab=cfg.vocab_size, prompt_mean=6.0,
+                        out_median=6.0, max_out=12, split_streams=True,
+                        prefix_len=16, prefix_hit=1.0)
+    reqs = generate(wc)
+    out = {}
+    for flag in (False, True):
+        pred = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                              embed_table=params["embed"])
+        s = run_policy(cfg, "trail", reqs, max_batch=4, mode="real",
+                       model=m, params=params, predictor=pred,
+                       kv_layout="paged", page_size=8, max_len=64,
+                       prefix_cache=flag)
+        key = "prefix_cache" if flag else "baseline"
+        out[key] = {"finished": len(s.latencies),
+                    "prefilled_tokens": s.prefilled_tokens,
+                    "prefix_hit_tokens": s.prefix_hit_tokens}
+        emit(f"prefix_cache.real.{key}", float(s.prefilled_tokens),
+             f"hits={s.prefix_hit_tokens};finished={len(s.latencies)}")
+    out["prefill_drop"] = (
+        out["baseline"]["prefilled_tokens"]
+        - out["prefix_cache"]["prefilled_tokens"])
+    return out
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Run the grid; returns the results dict (also written to disk)."""
+    cfg = get_config("granite-3-8b")
+    if smoke:
+        hit_rates, seeds, n, routers = (1.0,), (3,), 60, ("round-robin",)
+        real = False
+    elif quick:
+        hit_rates, seeds, n = (0.0, 0.5, 1.0), (3, 11, 23), 150
+        routers, real = ROUTERS, True
+    else:
+        hit_rates, seeds, n = (0.0, 0.25, 0.5, 0.75, 1.0), (3, 11, 23, 42), 300
+        routers, real = ROUTERS, True
+
+    results = {}
+    for hr in hit_rates:
+        reqs_by_seed = [
+            generate(scenario_config("shared-prefix", n_requests=n,
+                                     request_rate=RATE, seed=s,
+                                     vocab=cfg.vocab_size, prefix_hit=hr))
+            for s in seeds]
+        cells = {"no-sharing": _cell(cfg, reqs_by_seed,
+                                     router="round-robin",
+                                     prefix_cache=False)}
+        for router in routers:
+            cells[router] = _cell(cfg, reqs_by_seed, router=router,
+                                  prefix_cache=True)
+        for name, cell in cells.items():
+            key = f"hit={hr}.{name}"
+            results[key] = cell
+            emit(f"prefix_cache.{key}", cell["mean_latency"] * 1e6,
+                 f"p99={cell['p99_latency']:.2f};"
+                 f"pf/req={cell['prefilled_tokens_per_req']:.0f};"
+                 f"hit/req={cell['prefix_hit_tokens_per_req']:.0f}")
+
+    base = results.get(f"hit={HEADLINE_HIT}.no-sharing")
+    cached_cells = {r: results[f"hit={HEADLINE_HIT}.{r}"] for r in routers
+                    if f"hit={HEADLINE_HIT}.{r}" in results}
+    headline = None
+    if base and cached_cells:
+        best_router = min(cached_cells,
+                          key=lambda r: cached_cells[r]["mean_latency"])
+        cached = cached_cells[best_router]
+        headline = {
+            "operating_point": f"shared-prefix @ {RATE} aggregate req/s, "
+                               f"hit rate {HEADLINE_HIT}, {N_REPLICAS} "
+                               f"replicas, compute-bound 2 TFLOP/s",
+            "router": best_router,
+            "no_sharing_mean": base["mean_latency"],
+            "prefix_cache_mean": cached["mean_latency"],
+            "speedup": base["mean_latency"] / cached["mean_latency"],
+            "prefilled_per_req_no_sharing":
+                base["prefilled_tokens_per_req"],
+            "prefilled_per_req_prefix_cache":
+                cached["prefilled_tokens_per_req"],
+            "meets_1_3x": base["mean_latency"]
+                          >= 1.3 * cached["mean_latency"],
+        }
+        emit("prefix_cache.headline", 0.0,
+             f"speedup={headline['speedup']:.2f}x;"
+             f"pf/req={headline['prefilled_per_req_no_sharing']:.0f}->"
+             f"{headline['prefilled_per_req_prefix_cache']:.0f}")
+
+    real_out = run_real() if real else None
+    save_json("prefix_cache", results)
+    payload = {
+        "config": {"model": "granite-3-8b", "engine_policy": "trail",
+                   "scenario": "shared-prefix", "hardware": HW.name,
+                   "peak_flops": HW.peak_flops, "rate": RATE,
+                   "n_replicas": N_REPLICAS, "max_batch": 16,
+                   "n_requests": n, "seeds": list(seeds)},
+        "headline": headline,
+        "real_mode": real_out,
+        "grid": results,
+    }
+    if quick and not smoke:
+        # the checked-in artifact is the --quick grid; smoke never
+        # rewrites it (same convention as BENCH_cluster.json)
+        with open(os.path.join(ROOT, "BENCH_prefix_cache.json"), "w") as f:
+            json.dump(payload, f, indent=1)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="3 seeds, 3 hit rates (the checked-in artifact)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI smoke (no artifact rewrite)")
+    args = ap.parse_args()
+    out = run(quick=args.quick, smoke=args.smoke)
+    if out["headline"]:
+        print(json.dumps(out["headline"], indent=1))

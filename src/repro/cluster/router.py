@@ -28,7 +28,18 @@ Dispatch policies (``RouterConfig.policy``):
                     are truncated at the arrival's own size estimate:
                     join-shortest *interfering* predicted work. Without a
                     size predictor the raw backlog sum is used (the
-                    FCFS-replica signal).
+                    FCFS-replica signal). Backlog ties break on KV
+                    headroom (`Engine.kv_headroom`): a replica near its
+                    memory budget pays future preemptions for every
+                    long-context request it accepts.
+* ``prefix-affinity`` — join the replica whose KV prefix cache holds the
+                    longest prefix of the arrival's prompt
+                    (`Engine.cached_prefix_tokens`): the linked pages
+                    skip prefill compute entirely and shrink the shared
+                    footprint. Replicas tying on affinity (including the
+                    0-hit case) fall back to the full ``jspw`` rule, so
+                    with prefix caching disabled the policy degrades to
+                    exactly ``jspw``.
 """
 
 from __future__ import annotations
@@ -43,7 +54,7 @@ from repro.serving.engine import Engine, EngineConfig
 from repro.serving.request import Request
 
 #: Dispatch policies understood by `Router`.
-ROUTER_POLICIES = ("round-robin", "jsq", "pow2", "jspw")
+ROUTER_POLICIES = ("round-robin", "jsq", "pow2", "jspw", "prefix-affinity")
 
 
 @dataclass
@@ -96,6 +107,10 @@ class ClusterStats:
                                for s in self.replica_summaries),
             "peak_batch": max((s["peak_batch"]
                                for s in self.replica_summaries), default=0),
+            "prefilled_tokens": sum(s.get("prefilled_tokens", 0)
+                                    for s in self.replica_summaries),
+            "prefix_hit_tokens": sum(s.get("prefix_hit_tokens", 0)
+                                     for s in self.replica_summaries),
             "makespan": self.makespan,
         }
 
@@ -155,14 +170,29 @@ class Router:
                 return 0
             a, b = self._rng.sample(range(n), 2)
             return min(a, b, key=self._queue_key)
-        # jspw: live predicted-work backlog — truncated at the arrival's
-        # own size estimate when available (SRPT-interfering work) — with
-        # queue length then index as tie-breaks
+        # the size estimate is drawn once per dispatch (predictor streams
+        # are stateful), shared by every replica's key below
         r_hat = (self.size_predictor.initial(req)
                  if self.size_predictor is not None else None)
-        return min(range(n),
-                   key=lambda i: (self.replicas[i].backlog(truncate=r_hat),
-                                  self.replicas[i].queue_len(), i))
+        if pol == "prefix-affinity":
+            # longest cached prompt prefix wins; ties (notably 0-hit
+            # everywhere, or caching disabled) fall back to jspw
+            hits = [self.replicas[i].cached_prefix_tokens(req.prompt)
+                    for i in range(n)]
+            best = max(hits)
+            cands = [i for i in range(n) if hits[i] == best]
+            return min(cands, key=lambda i: self._jspw_key(i, r_hat))
+        # jspw: live predicted-work backlog — truncated at the arrival's
+        # own size estimate when available (SRPT-interfering work) — with
+        # KV headroom, queue length, then index as tie-breaks
+        return min(range(n), key=lambda i: self._jspw_key(i, r_hat))
+
+    def _jspw_key(self, i: int, r_hat: float | None) -> tuple:
+        """The jspw ordering for one replica: predicted interfering work,
+        then (on ties) most KV headroom, shortest queue, lowest index."""
+        return (self.replicas[i].backlog(truncate=r_hat),
+                -self.replicas[i].kv_headroom(),
+                self.replicas[i].queue_len(), i)
 
     def dispatch(self, req: Request) -> int:
         """Route one arrival to a replica and submit it there."""
@@ -236,7 +266,8 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
         ecfg = EngineConfig(seed=seed + i, **engine_kwargs)
         pred = predictor_factory(i) if predictor_factory else None
         replicas.append(Engine(cfg, ecfg, predictor=pred))
-    if size_predictor is None and router_policy == "jspw":
+    if size_predictor is None and router_policy in ("jspw",
+                                                    "prefix-affinity"):
         from repro.serving.predictors import OraclePredictor
         size_predictor = OraclePredictor(cfg.probe, seed=seed + 4242)
     router = Router(replicas, RouterConfig(n_replicas=n_replicas,

@@ -13,10 +13,12 @@ from repro.config import ProbeConfig
 
 
 def bin_edges(pc: ProbeConfig) -> np.ndarray:
+    """Equal-width bin edges b_0..b_k over [0, max_len]."""
     return np.linspace(0.0, pc.max_len, pc.num_bins + 1)
 
 
 def bin_means(pc: ProbeConfig) -> np.ndarray:
+    """Bin midpoints m_i = (b_i + b_{i+1}) / 2 (the prediction values)."""
     e = bin_edges(pc)
     return (e[:-1] + e[1:]) / 2.0
 
@@ -34,6 +36,7 @@ def log_bin_edges(pc: ProbeConfig) -> np.ndarray:
 
 
 def bin_index_log(lengths, pc: ProbeConfig):
+    """Map remaining-length values to logarithmic bin ids."""
     e = log_bin_edges(pc)
     idx = jnp.searchsorted(jnp.asarray(e[1:-1]), jnp.asarray(lengths),
                            side="right")

@@ -21,6 +21,7 @@ from repro.config import ProbeConfig
 
 
 def init_probe(key, d_model: int, pc: ProbeConfig) -> dict:
+    """Initialize the 2-layer MLP probe head (paper Section 3.1)."""
     k1, k2 = jax.random.split(key)
     s1, s2 = d_model ** -0.5, pc.hidden ** -0.5
     return {
@@ -38,6 +39,7 @@ def apply_probe(p, x) -> jax.Array:
 
 
 def probe_probs(p, x) -> jax.Array:
+    """Softmax bin posterior of the probe at embeddings ``x``."""
     return jax.nn.softmax(apply_probe(p, x), axis=-1)
 
 
@@ -50,4 +52,5 @@ def probe_loss(p, x, bin_labels) -> jax.Array:
 
 
 def probe_accuracy(p, x, bin_labels) -> jax.Array:
+    """Top-1 bin accuracy of the probe against gold labels."""
     return jnp.mean(jnp.argmax(apply_probe(p, x), -1) == bin_labels)

@@ -33,6 +33,8 @@ import numpy as np
 
 @dataclass(frozen=True)
 class MG1Config:
+    """Parameters of the Appendix-D M/G/1 SPRPT-LP closed form."""
+
     lam: float = 0.5            # Poisson arrival rate (rho = lam * E[X] < 1)
     C: float = 0.8              # preemption budget multiplier
     prediction: str = "exponential"   # "exponential" | "perfect"
@@ -70,9 +72,11 @@ class Lemma1:
 
     # -- interpolated terms -------------------------------------------------
     def rho_prime(self, r):
+        """Truncated load rho'(r) = lam * E[min(X, r)-ish mass below r]."""
         return self.cfg.lam * np.interp(r, self.xs, self._m1)
 
     def i1(self, r):
+        """Second moment of service mass below rank r (interpolated)."""
         return np.interp(r, self.xs, self._m2)
 
     def i2(self, r):
@@ -126,12 +130,14 @@ class Lemma1:
 
 
 def _cumtrapz(y, x):
+    """Cumulative trapezoidal integral of y over grid x."""
     out = np.zeros_like(y)
     out[1:] = np.cumsum((y[1:] + y[:-1]) / 2.0 * np.diff(x))
     return out
 
 
 def mean_response(cfg: MG1Config, n_xr: int = 32) -> float:
+    """Mean response time of the Lemma-1 closed form under ``cfg``."""
     return Lemma1(cfg).mean_response(n_xr)
 
 

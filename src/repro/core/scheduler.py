@@ -42,6 +42,7 @@ MLFQ_QUANTA = (16, 64, 256, 1024)
 
 
 def mlfq_level(age: int) -> int:
+    """MLFQ priority level for a job that has been served ``age`` tokens."""
     served = 0
     for lvl, q in enumerate(MLFQ_QUANTA):
         served += q
@@ -51,6 +52,8 @@ def mlfq_level(age: int) -> int:
 
 
 class ReqState(Enum):
+    """Request lifecycle states the scheduler distinguishes."""
+
     WAITING = "waiting"      # never started (no cache footprint)
     RUNNING = "running"      # in the current batch
     PREEMPTED = "preempted"  # started, kicked out, cache discarded
@@ -69,6 +72,13 @@ class SchedEntry:
     c_limit: float = 0.8          # the paper's C
     state: ReqState = ReqState.WAITING
     prefill_done: int = 0         # chunked-prefill progress (tokens)
+    prefill_left: float = 0.0     # remaining prefill work (tokens) counted
+                                  # into prediction-based ranks; the engine
+                                  # populates it only when cross-request
+                                  # prefix caching is on (a cached prefix
+                                  # shrinks remaining work, so SRPT-style
+                                  # ranks must see prefill too). Default 0
+                                  # keeps ranks byte-identical.
     finish_len: int = 0           # ground-truth output length (oracle/sim)
     preemptions: int = 0
     first_token_time: float = -1.0
@@ -76,24 +86,30 @@ class SchedEntry:
 
     @property
     def a0(self) -> int:
+        """The preemption budget floor(C * r0) (paper Section 3.3)."""
         return math.floor(self.c_limit * max(self.r0, 0.0))
 
     @property
     def preemptable(self) -> bool:
+        """True while the request is within its preemption budget."""
         return self.age < self.a0
 
     def rank(self, policy: str) -> float:
+        """Policy rank (lower runs first; -inf = pinned to the batch)."""
         if policy == "fcfs":
             return self.arrival
         if policy == "sjf":
             return self.r0
         if policy == "mlfq":
             return float(mlfq_level(self.age))     # FCFS tiebreak inside level
-        # prediction-based remaining-time ranks
+        # prediction-based remaining-time ranks; prefill_left folds the
+        # (cache-aware) remaining prefill work into "remaining time" so a
+        # request whose prompt prefix is already resident ranks ahead of
+        # an equal-output request that still owes its whole prefill
         if policy == "trail-bert":
-            r = self.r0 - self.age
+            r = self.r0 - self.age + self.prefill_left
         elif policy in ("trail", "srpt"):
-            r = self.pred_remaining
+            r = self.pred_remaining + self.prefill_left
         else:
             raise ValueError(f"unknown policy {policy!r}")
         if policy != "srpt" and self.state is ReqState.RUNNING and not self.preemptable:
@@ -103,6 +119,8 @@ class SchedEntry:
 
 @dataclass
 class Decision:
+    """One ``select_batch`` outcome: who runs, who yields, who starts."""
+
     scheduled: list[int] = field(default_factory=list)   # rids to run
     preempted: list[int] = field(default_factory=list)   # rids kicked out
     admitted: list[int] = field(default_factory=list)    # rids newly started

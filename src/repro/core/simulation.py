@@ -27,6 +27,8 @@ from dataclasses import dataclass, field
 
 @dataclass
 class SimJob:
+    """One job in the M/G/1 token-level simulation."""
+
     jid: int
     arrival: float
     size: float
@@ -35,9 +37,11 @@ class SimJob:
     done_at: float = -1.0
 
     def remaining(self) -> float:
+        """True remaining service (size minus served)."""
         return self.size - self.served
 
     def pred_remaining(self) -> float:
+        """Predicted remaining service (rank signal)."""
         # NOTE: unclamped, matching the analyzed rank r - a (an overrun job's
         # rank keeps falling, so it keeps its priority rather than ties at 0).
         return self.pred - self.served
@@ -45,6 +49,8 @@ class SimJob:
 
 @dataclass
 class SimResult:
+    """Aggregates of one simulate() run (response times, memory)."""
+
     mean_response: float
     median_response: float
     peak_memory: float
@@ -55,6 +61,7 @@ class SimResult:
 
 
 def _rank(job: SimJob, policy: str, C: float) -> float:
+    """Policy rank (lower = served first); Appendix C rank functions."""
     if policy == "fcfs":
         return job.arrival
     if policy in ("sjf", "spjf"):
@@ -71,6 +78,7 @@ def _rank(job: SimJob, policy: str, C: float) -> float:
 def simulate(policy: str, lam: float, *, C: float = 0.8, n_jobs: int = 20000,
              prediction: str = "exponential", seed: int = 0,
              warmup_frac: float = 0.1) -> SimResult:
+    """Event-driven M/G/1 simulation of one scheduling policy."""
     rng = random.Random(seed)
     # pre-generate arrivals
     jobs: list[SimJob] = []
@@ -99,9 +107,11 @@ def simulate(policy: str, lam: float, *, C: float = 0.8, n_jobs: int = 20000,
     non_preempt = policy in ("fcfs", "sjf", "spjf")
 
     def memory() -> float:
+        """Held state: served work across jobs in system (Appendix D)."""
         return sum(j.served for j in system)
 
     def pick() -> SimJob | None:
+        """Next job to serve under the policy rank (FCFS tiebreak)."""
         if not system:
             return None
         if non_preempt and current in system:
@@ -155,5 +165,6 @@ def simulate(policy: str, lam: float, *, C: float = 0.8, n_jobs: int = 20000,
 
 def sweep(policy: str, lams, *, C: float = 0.8, n_jobs: int = 20000,
           prediction: str = "exponential", seed: int = 0):
+    """simulate() across arrival rates; returns {lam: SimResult}."""
     return {lam: simulate(policy, lam, C=C, n_jobs=n_jobs,
                           prediction=prediction, seed=seed) for lam in lams}

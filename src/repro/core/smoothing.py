@@ -54,6 +54,7 @@ def refine_sequence(p_seq, pc: ProbeConfig) -> jax.Array:
     T = jnp.asarray(transition_matrix(pc))
 
     def step(q, p):
+        """One Bayes filter update over the scan carry."""
         qn = bayes_update(q, p, T)
         return qn, qn
 

@@ -53,6 +53,15 @@ def main():
     ap.add_argument("--compute-bound", action="store_true",
                     help="compute-bound hardware point (2 TFLOP/s) where "
                          "routing quality is visible; default is tpu-v5e")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical KV prefixes across requests "
+                         "(implies --kv-layout paged; pairs with the "
+                         "shared-prefix scenario and the prefix-affinity "
+                         "router)")
+    ap.add_argument("--kv-layout", default=None,
+                    choices=("contig", "paged"),
+                    help="KV cache layout (default contig; --prefix-cache "
+                         "forces paged)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--real", action="store_true",
                     help="actually run the model (CPU-sized configs)")
@@ -61,9 +70,14 @@ def main():
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     # real mode shrinks lengths to CPU scale; with a --scenario preset the
-    # arrival process is kept and only the length mix is downsized
+    # arrival process is kept and only the length mix is downsized. The
+    # tenant mix is dropped at this scale, so --prefix-cache keeps a small
+    # single-tenant system prompt instead (one KV page at page_size=16) —
+    # otherwise the downsizing would silently remove every shared prefix.
     real_sizes = dict(prompt_mean=10.0, out_median=8.0, max_out=32,
                       tenants=())
+    if args.prefix_cache:
+        real_sizes.update(prefix_len=16, split_streams=True)
     if args.scenario:
         wc = scenario_config(args.scenario, n_requests=args.n,
                              request_rate=args.rate, seed=args.seed,
@@ -79,6 +93,7 @@ def main():
                              hbm_bw=819e9, overhead_s=2e-4)
                 if args.compute_bound else HardwareSpec())
     mem_budget = int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62
+    kv_layout = args.kv_layout or ("paged" if args.prefix_cache else "contig")
 
     if args.replicas > 1:
         if args.real:
@@ -87,7 +102,8 @@ def main():
             cfg, reqs, router_policy=args.router,
             n_replicas=args.replicas, policy=args.policy,
             c_limit=args.c, max_batch=args.max_batch,
-            mem_budget=mem_budget, hardware=hardware, seed=args.seed)
+            mem_budget=mem_budget, hardware=hardware, seed=args.seed,
+            kv_layout=kv_layout, prefix_cache=args.prefix_cache)
         print(json.dumps({"arch": cfg.name, "policy": args.policy,
                           "router": args.router, "replicas": args.replicas,
                           "scenario": args.scenario or "poisson",
@@ -110,7 +126,8 @@ def main():
     stats = run_policy(
         cfg, args.policy, reqs, c_limit=args.c, max_batch=args.max_batch,
         mem_budget=mem_budget, mode=mode, predictor=predictor, model=model,
-        params=params, hardware=hardware, seed=args.seed)
+        params=params, hardware=hardware, seed=args.seed,
+        kv_layout=kv_layout, prefix_cache=args.prefix_cache)
     print(json.dumps({"arch": cfg.name, "policy": args.policy,
                       "c": args.c, "rate": args.rate,
                       "scenario": args.scenario or

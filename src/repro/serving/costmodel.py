@@ -22,7 +22,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.config import KIND_LOCAL, KIND_SSM, ModelConfig
-from repro.serving.kv_cache import bytes_for_context, paged_bytes_for_context
+from repro.serving.kv_cache import (bytes_for_context, page_bytes,
+                                    paged_bytes_for_context)
 
 
 @dataclass(frozen=True)
@@ -66,6 +67,16 @@ class CostModel:
         if self.page_size:
             return paged_bytes_for_context(self.cfg, ctx, self.page_size)
         return bytes_for_context(self.cfg, ctx)
+
+    def resident_page_bytes(self, n_unique_pages: int) -> int:
+        """Page-accurate resident KV footprint for ``n_unique_pages``
+        distinct physical pages. With cross-request prefix caching the
+        per-request sum over ``bytes_for`` double-counts shared pages;
+        the engine's memory accounting switches to this unique-page form
+        (refcounted pages counted once) whenever sharing is enabled."""
+        if not self.page_size:
+            raise ValueError("resident_page_bytes requires a paged layout")
+        return n_unique_pages * page_bytes(self.cfg, self.page_size)
 
     def _attn_flops_per_token(self, ctx: int) -> float:
         """Attention score+value FLOPs for one new token at context ctx."""

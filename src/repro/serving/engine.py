@@ -45,6 +45,7 @@ from repro.serving.costmodel import CostModel, HardwareSpec
 from repro.serving.kv_cache import (BlockManager, PagedSlotPool, SlotPool,
                                     bytes_for_context, donating_jit,
                                     page_bytes, paged_bytes_for_context,
+                                    pages_for_tokens,
                                     supports_page_retention)
 from repro.serving.predictors import OraclePredictor, PredictorBase
 from repro.serving.request import Request
@@ -72,6 +73,13 @@ class EngineConfig:
         kv_layout: ``contig`` (slot cache) | ``paged`` (block-table pages;
             preemption frees / retains / swaps at page granularity).
         page_size: tokens per KV page (paged layout only).
+        prefix_cache: share identical KV prefixes across requests (paged
+            layout, pure global-attention archs only): admission links
+            the longest content-hash-matched page chain instead of
+            prefilling it, ranks and admission bytes charge only uncached
+            work, and finished requests' prompt pages stay warm in a
+            reusable LRU pool. Off by default — disabled results are
+            byte-identical to the pre-prefix-cache engine.
         mode: ``sim`` (cost-model clock, oracle-noise probe) | ``real``
             (JAX model actually prefills/decodes).
         hardware: roofline constants that drive the simulated clock.
@@ -95,6 +103,8 @@ class EngineConfig:
                                     # (block-table pages; preemption frees /
                                     #  retains / swaps at page granularity)
     page_size: int = 16             # tokens per KV page (paged layout)
+    prefix_cache: bool = False      # share identical KV prefixes across
+                                    # requests (paged layout only)
     mode: str = "sim"               # "sim" | "real"
     hardware: HardwareSpec = field(default_factory=HardwareSpec)
     seed: int = 0
@@ -113,6 +123,8 @@ class EngineStats:
     peak_batch: int = 0
     iterations: int = 0
     sim_time: float = 0.0
+    prefilled_tokens: int = 0       # prefill tokens actually computed
+    prefix_hit_tokens: int = 0      # prompt tokens served from the cache
 
     def summary(self) -> dict:
         """Aggregate the counters into the benchmark-facing dict."""
@@ -132,6 +144,8 @@ class EngineStats:
             "iterations": self.iterations,
             "peak_batch": self.peak_batch,
             "makespan": self.sim_time,
+            "prefilled_tokens": self.prefilled_tokens,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
         }
 
 
@@ -147,14 +161,22 @@ class StepResult:
             batch ``run()`` loop, which never reads it, pays nothing.
         ran: False for idle steps (clock jump to the next arrival, or a
             fully drained engine); no device/sim work was performed.
+        kv_headroom: free-page fraction of the KV pool after the step
+            (1.0 = empty pool / effectively unlimited budget, 0.0 = full)
+            — the routing-under-memory-pressure signal: dispatching a
+            long-context arrival to a replica near its budget triggers
+            avoidable preemptions, so `jspw` tie-breaks on it.
     """
 
-    __slots__ = ("completed", "now", "ran", "_backlog_fn", "_backlog")
+    __slots__ = ("completed", "now", "ran", "kv_headroom",
+                 "_backlog_fn", "_backlog")
 
-    def __init__(self, completed=None, now=0.0, ran=False, backlog_fn=None):
+    def __init__(self, completed=None, now=0.0, ran=False, backlog_fn=None,
+                 kv_headroom=1.0):
         self.completed = completed if completed is not None else []
         self.now = now
         self.ran = ran
+        self.kv_headroom = kv_headroom
         self._backlog_fn = backlog_fn
         self._backlog = None
 
@@ -189,6 +211,15 @@ class Engine:
         self.paged = ecfg.kv_layout == "paged"
         if ecfg.kv_layout not in ("contig", "paged"):
             raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
+        self.prefix_cache = ecfg.prefix_cache
+        if self.prefix_cache:
+            if not self.paged:
+                raise ValueError("prefix_cache requires kv_layout='paged'")
+            if not supports_page_retention(cfg):
+                raise ValueError(
+                    "prefix_cache requires a pure global-attention arch: "
+                    "only there is the whole per-token state page-resident "
+                    "and position-consistent across requests")
         self.cost = CostModel(cfg, ecfg.hardware,
                               page_size=ecfg.page_size if self.paged else 0)
         self.model = model
@@ -211,7 +242,8 @@ class Engine:
             if self.paged:
                 self.pool = PagedSlotPool(model, ecfg.max_batch, ecfg.max_len,
                                           page_size=ecfg.page_size,
-                                          retain=self._retain)
+                                          retain=self._retain,
+                                          prefix_cache=self.prefix_cache)
                 self.blocks = self.pool.blocks
             else:
                 self.pool = SlotPool(model, ecfg.max_batch, ecfg.max_len)
@@ -233,8 +265,19 @@ class Engine:
             self._prefill_fn = jit_cache["prefill_chunk"]
         elif self.paged:
             # sim mode: unbounded id space — capacity pressure is enforced
-            # in bytes against mem_budget by the reclamation loop
-            self.blocks = BlockManager(0, ecfg.page_size)
+            # in bytes against mem_budget by the reclamation loop. The
+            # warm prefix pool is itself capped at budget-equivalent
+            # pages (or a large fixed cap under an effectively unlimited
+            # budget) so index/LRU bookkeeping cannot grow with every
+            # unique prompt ever served; admission charges hits at full
+            # bytes, so used pages stay budget-bounded independently.
+            cap = None
+            if self.prefix_cache:
+                cap = (ecfg.mem_budget // max(self._page_bytes, 1)
+                       if ecfg.mem_budget < (1 << 60) else 1 << 20)
+            self.blocks = BlockManager(0, ecfg.page_size,
+                                       prefix_cache=self.prefix_cache,
+                                       reusable_cap=cap)
         self._rng = np.random.default_rng(ecfg.seed)
         self._reset_stream()
 
@@ -249,6 +292,9 @@ class Engine:
         self._now = 0.0
         self._r0_sum = 0.0                      # running mean of initial
         self._r0_cnt = 0                        # predictions (backlog prior)
+        self._prefix_hint: dict[int, int] = {}  # rid -> prospective hit
+        self._hint_gen: dict[int, int] = {}     # index_gen the hint saw
+        self._last_mem = 0                      # bytes at last step end
         self._wall0 = time.perf_counter()
 
     def _bytes_for(self, context_len: int) -> int:
@@ -256,6 +302,35 @@ class Engine:
             return paged_bytes_for_context(self.cfg, context_len,
                                            self.ecfg.page_size)
         return bytes_for_context(self.cfg, context_len)
+
+    def _match_tokens(self, req) -> list[int]:
+        """Prompt tokens eligible for prefix matching: everything except
+        the final token, which decode always consumes fresh — so a full
+        hit still leaves the request one decode step of work and shared
+        pages are never written by the sharer."""
+        return req.prompt[:max(len(req.prompt) - 1, 0)]
+
+    def _sync_prefill_left(self, req, hint: int = 0):
+        """Refresh the entry's rank-visible remaining prefill work
+        (prefix-cache mode only): what is still uncached and unprefilled.
+        ``hint`` discounts a WAITING request's prospective cache hit."""
+        req.entry.prefill_left = float(max(
+            req.context_len - 1 - req.entry.prefill_done - hint, 0))
+
+    def kv_headroom(self) -> float:
+        """Free fraction of the KV capacity (1.0 = empty, 0.0 = full).
+
+        Real-mode paged pools report the free-page fraction of the
+        physical pool (`BlockManager.free_pages()`); sim-mode engines
+        report the unused fraction of ``mem_budget`` as of the last step
+        (1.0 under an effectively unlimited budget).
+        """
+        if self.blocks is not None and self.blocks.bounded:
+            return self.blocks.free_pages() / max(self.blocks.num_pages, 1)
+        budget = self.ecfg.mem_budget
+        if budget >= (1 << 60):
+            return 1.0
+        return max(0.0, 1.0 - self._last_mem / budget)
 
     # ------------------------------------------------------------------
     # incremental API: submit / step / accessors
@@ -309,12 +384,23 @@ class Engine:
                 continue
             req = self._pool_reqs[rid]
             tot += min(max(e.pred_remaining, 0.0), cap)
-            tot += max(req.context_len - 1 - e.prefill_done, 0)
+            hint = (self._prefix_hint.get(rid, 0)
+                    if self.prefix_cache and e.state is ReqState.WAITING
+                    else 0)
+            tot += max(req.context_len - 1 - e.prefill_done - hint, 0)
         prior = (self._r0_sum / self._r0_cnt if self._r0_cnt
                  else self.predictor.pc.max_len / 2.0)
         for req in self._pending[self._p_idx:]:
             tot += len(req.prompt) + min(prior, cap)
         return tot
+
+    def cached_prefix_tokens(self, prompt) -> int:
+        """Longest prompt prefix (tokens) resident in this engine's KV
+        prefix cache — the router's ``prefix-affinity`` signal. Zero when
+        prefix caching is off. Pure lookup: no refcounts or LRU moves."""
+        if not self.prefix_cache:
+            return 0
+        return self.blocks.match_len(prompt[:max(len(prompt) - 1, 0)])
 
     def submit(self, req: Request):
         """Enqueue one arrival; it is admitted once the clock reaches
@@ -337,6 +423,13 @@ class Engine:
             req.entry.finish_len = req.true_out_len
             self._r0_sum += r0
             self._r0_cnt += 1
+            if self.prefix_cache:
+                # prospective hit: lets the scheduler's ranks and the
+                # backlog signal see the cached prefix before admission
+                hint = self.blocks.match_len(self._match_tokens(req))
+                self._prefix_hint[req.rid] = hint
+                self._hint_gen[req.rid] = self.blocks.index_gen
+                self._sync_prefill_left(req, hint)
             self._pool_reqs[req.rid] = req
             self._entries[req.rid] = req.entry
             self._p_idx += 1
@@ -361,11 +454,19 @@ class Engine:
             if self._p_idx < len(self._pending):
                 # idle: jump to next arrival
                 self._now = self._pending[self._p_idx].arrival
-            return StepResult(now=self._now, backlog_fn=self.backlog)
+            return StepResult(now=self._now, backlog_fn=self.backlog,
+                              kv_headroom=self.kv_headroom())
 
         # admission charges each candidate's bytes at the END of the
         # upcoming megastep (context + k), so a k-token megastep can
-        # never outgrow the budget mid-flight
+        # never outgrow the budget mid-flight. A prefix-cache hit is NOT
+        # discounted here: linking flips warm (refcount-zero) pages into
+        # used pages, so the budget must cover them or resident memory
+        # could exceed what the mirrored physical pool holds. The cached
+        # win is charged where it belongs — zero prefill compute
+        # (costmodel) and a smaller remaining-work rank (prefill_left) —
+        # while the *memory* saving of sharing shows up in the
+        # unique-page accounting (shared pages counted once).
         decision = select_batch(
             entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
             mem_budget=ecfg.mem_budget,
@@ -392,7 +493,8 @@ class Engine:
         if not sched:
             if self._p_idx < len(self._pending):
                 self._now = max(now, self._pending[self._p_idx].arrival)
-                return StepResult(now=self._now, backlog_fn=self.backlog)
+                return StepResult(now=self._now, backlog_fn=self.backlog,
+                                  kv_headroom=self.kv_headroom())
             raise RuntimeError(
                 "scheduler deadlock: nothing fits the memory budget")
         stats.peak_batch = max(stats.peak_batch, len(sched))
@@ -417,6 +519,17 @@ class Engine:
             for r in decoding:
                 self._ensure_pages(
                     r, r.context_len + self._row_budget(r) - 1, entries)
+        if self.prefix_cache:
+            # COW guard: any shared page covering a position about to be
+            # written is replaced by a private copy first (a no-op in the
+            # standard flow — shared pages are full and writes land past
+            # them — but it makes the immutability invariant enforced)
+            make_writable = (self.pool.make_writable if self.pool is not None
+                             else self.blocks.make_writable)
+            for r, _take in pf_plan:
+                make_writable(r.rid, r.entry.prefill_done)
+            for r in decoding:
+                make_writable(r.rid, max(r.context_len - 1, 0))
 
         # capture per-row decode contexts before tokens are appended:
         # the cost model charges context c+1..c+n for a row emitting n
@@ -440,9 +553,15 @@ class Engine:
             r.entry.prefill_done += take
             # tokens actually materialized in the cache (never credited
             # past what was written: a mid-prefill preemption must not
-            # mark unwritten positions as retained)
-            r._kv_written = max(getattr(r, "_kv_written", 0),
-                                r.entry.prefill_done)
+            # mark unwritten positions as retained). The prefilled_tokens
+            # stat counts only the newly materialized portion: a decoded
+            # row re-enters the prefill classification to catch
+            # prefill_done up to its grown context, but those positions
+            # were already KV-written by decode and are not fresh prefill
+            # work.
+            kv_before = getattr(r, "_kv_written", 0)
+            stats.prefilled_tokens += max(r.entry.prefill_done - kv_before, 0)
+            r._kv_written = max(kv_before, r.entry.prefill_done)
         for r in decoding:
             n = emitted.get(r.rid, 0)
             r._kv_written = max(getattr(r, "_kv_written", 0),
@@ -457,6 +576,10 @@ class Engine:
                 stats.latencies.append(r.latency())
                 stats.ttfts.append(r.ttft())
                 completed.append(r)
+                if self.prefix_cache:
+                    # publish the finished request's prompt pages before
+                    # release parks them in the reusable pool
+                    self._register_prompt(r)
                 if self.pool is not None:
                     self.pool.release(r.rid)
                 elif r.slot >= 0:
@@ -471,21 +594,49 @@ class Engine:
                 if not r.done:
                     self.blocks.note_cached(
                         rid, getattr(r, "_kv_written", 0))
+                    if self.prefix_cache:
+                        self._register_prompt(r)
+        if self.prefix_cache:
+            gen = self.blocks.index_gen
+            for r in pool_reqs.values():
+                if r.done:
+                    continue
+                if r.entry.state is ReqState.WAITING:
+                    # refresh the prospective hit only when the index
+                    # actually changed (generation-gated): match_prefix
+                    # is O(prompt pages) and a long WAITING queue would
+                    # otherwise pay it every step for nothing
+                    if self._hint_gen.get(r.rid) != gen:
+                        self._prefix_hint[r.rid] = self.blocks.match_len(
+                            self._match_tokens(r))
+                        self._hint_gen[r.rid] = gen
+                    self._sync_prefill_left(
+                        r, self._prefix_hint.get(r.rid, 0))
+                else:
+                    self._sync_prefill_left(r)
 
-        mem = sum(self._bytes_for(pool_reqs[rid].context_len)
-                  for rid in decision.scheduled)
-        if self.blocks is not None:
-            mem += self._page_bytes * sum(
-                self.blocks.resident_pages(e.rid)
-                for e in entries.values()
-                if e.state is ReqState.PREEMPTED)
+        if self.prefix_cache:
+            # page-accurate under sharing: each physical page counts once
+            # however many block tables reference it, and reusable cache
+            # pages (refcount zero) are reclaimable, hence free
+            mem = self.cost.resident_page_bytes(self.blocks.used_pages())
+        else:
+            mem = sum(self._bytes_for(pool_reqs[rid].context_len)
+                      for rid in decision.scheduled)
+            if self.blocks is not None:
+                mem += self._page_bytes * sum(
+                    self.blocks.resident_pages(e.rid)
+                    for e in entries.values()
+                    if e.state is ReqState.PREEMPTED)
         stats.peak_mem_bytes = max(stats.peak_mem_bytes, mem)
+        self._last_mem = mem
         stats.iterations += 1
         self._now = now_next
         stats.sim_time = (self._now if ecfg.mode == "sim"
                           else time.perf_counter() - self._wall0)
         return StepResult(completed=completed, now=self._now,
-                          backlog_fn=self.backlog, ran=True)
+                          backlog_fn=self.backlog, ran=True,
+                          kv_headroom=self.kv_headroom())
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request]) -> EngineStats:
@@ -537,6 +688,9 @@ class Engine:
                 # discard-and-recompute: cache gone, re-prefill everything
                 stats.recomputed_tokens += req.entry.prefill_done
                 req.entry.prefill_done = 0
+                req._kv_written = 0     # nothing materialized any more: the
+                                        # re-prefill is fresh compute and
+                                        # counts as prefilled work again
                 if self.blocks is not None and self.pool is None:
                     # sim mode only: in real mode pool.release() below frees
                     # the pages itself (and queues their device reset)
@@ -548,11 +702,37 @@ class Engine:
                     self.pool.release(rid)
             req.slot = -1
 
+    def _register_prompt(self, req):
+        """Publish ``req``'s fully-written prompt pages to the hash index.
+        A per-request watermark skips the (O(prompt pages) hashing) walk
+        once everything registerable has been offered — the ratchet only
+        moves forward, so a rare eviction of already-offered pages just
+        forgoes re-registration, never corrupts the index."""
+        written = min(getattr(req, "_kv_written", 0), len(req.prompt))
+        pages = written // self.ecfg.page_size
+        if pages > getattr(req, "_reg_pages", 0):
+            self.blocks.register_prefix(req.rid, req.prompt, written)
+            req._reg_pages = pages
+
     def _apply_admissions(self, decision: Decision, pool_reqs, stats):
         for rid in decision.admitted:
             req = pool_reqs[rid]
             was_preempted = req.entry.state is ReqState.PREEMPTED
             req.entry.state = ReqState.RUNNING
+            if (self.prefix_cache and not was_preempted
+                    and req.entry.prefill_done == 0
+                    and not self.blocks.pages.get(rid)):
+                # link the longest cached prefix: block-table writes only,
+                # no prefill compute; the costmodel is charged just for
+                # the uncached tokens because prefill starts at the hit
+                hit = self.blocks.link_prefix(rid, self._match_tokens(req))
+                if hit:
+                    stats.prefix_hit_tokens += hit
+                    req.entry.prefill_done = hit
+                    req._kv_written = hit
+                self._prefix_hint.pop(rid, None)
+                self._hint_gen.pop(rid, None)
+                self._sync_prefill_left(req)
             if getattr(req, "_swapped", False):     # swap back in (whole seq)
                 nbytes = self._bytes_for(req.context_len)
                 stats.swapped_bytes += nbytes
@@ -585,18 +765,43 @@ class Engine:
                 if e.state is ReqState.PREEMPTED and e.rid not in exclude
                 and self.blocks.resident_pages(e.rid) > 0]
 
+    def _victim_key(self, e):
+        """Eviction-victim ordering: prefer victims that can actually
+        yield memory (an unshared tail page — shared pages free nothing
+        and would force recompute for their other owners), then the
+        least-urgent prediction. Without sharing every resident victim
+        has an unshared tail, so the order is unchanged."""
+        return (min(self.blocks.unshared_tail_pages(e.rid), 1),
+                e.pred_remaining, e.rid)
+
     def _reclaim_pages(self, decision: Decision, pool_reqs, entries, stats):
         """Evict (discard) or swap out suspended pages, tail-first from the
         least-urgent victim, until scheduled + suspended bytes fit."""
-        need = sum(self._bytes_for(pool_reqs[rid].context_len + self._k)
-                   for rid in decision.scheduled)
         sched = set(decision.scheduled)
         susp = self._suspended(entries, exclude=sched)
-        resident = sum(self.blocks.resident_pages(e.rid) for e in susp)
-        over = need + resident * self._page_bytes - self.ecfg.mem_budget
+        if self.prefix_cache:
+            # unique-page accounting: per-request byte sums would charge a
+            # shared prefix once per owner and trigger evictions the real
+            # footprint never required. Project end-of-megastep usage as
+            # pages held now (each counted once) plus the growth scheduled
+            # rows still need; a WAITING row's prospective hit counts as
+            # growth too — linking flips warm pages into used ones.
+            ps = self.ecfg.page_size
+            growth = sum(
+                max(pages_for_tokens(pool_reqs[rid].context_len + self._k,
+                                     ps)
+                    - self.blocks.resident_pages(rid), 0)
+                for rid in decision.scheduled)
+            over = ((self.blocks.used_pages() + growth) * self._page_bytes
+                    - self.ecfg.mem_budget)
+        else:
+            need = sum(self._bytes_for(pool_reqs[rid].context_len + self._k)
+                       for rid in decision.scheduled)
+            resident = sum(self.blocks.resident_pages(e.rid) for e in susp)
+            over = need + resident * self._page_bytes - self.ecfg.mem_budget
         swap = self.ecfg.oom_mode == "swap"
         while over > 0 and susp:
-            victim = max(susp, key=lambda e: (e.pred_remaining, e.rid))
+            victim = max(susp, key=self._victim_key)
             n_pages = -(-over // self._page_bytes)       # all we still need
             if swap:
                 freed = self.blocks.swap_out_tail(victim.rid, n_pages)
@@ -620,25 +825,30 @@ class Engine:
             # only the real device pool is max_len-bounded; sim-mode paged
             # accounting must track contexts as far as the contig baseline
             tokens = min(tokens, self.ecfg.max_len)
+        exhausted: set[int] = set()     # victims whose tail is all shared
         while True:
             ok = (self.pool.ensure_pages(req.rid, tokens)
                   if self.paged and self.pool is not None
                   else self.blocks.ensure(req.rid, tokens))
             if ok:
                 return
-            susp = self._suspended(entries, exclude=(req.rid,))
+            susp = self._suspended(entries, exclude=(req.rid, *exhausted))
             if not susp:
                 raise RuntimeError("paged KV pool exhausted: no suspended "
                                    "pages left to evict")
-            victim = max(susp, key=lambda e: (e.pred_remaining, e.rid))
+            victim = max(susp, key=self._victim_key)
             shortfall = max(
                 1, (-(-tokens // self.ecfg.page_size)
                     - self.blocks.resident_pages(req.rid)
                     - self.blocks.free_pages()))
             if self.pool is not None:
-                self.pool.evict_tail(victim.rid, shortfall)
+                freed = self.pool.evict_tail(victim.rid, shortfall)
             else:
-                self.blocks.evict_tail(victim.rid, shortfall)
+                freed = self.blocks.evict_tail(victim.rid, shortfall)
+            if not freed:
+                # every remaining tail page is shared: evicting it frees
+                # nothing — move on to the next victim
+                exhausted.add(victim.rid)
 
     def _row_budget(self, r) -> int:
         """Decode tokens this row may emit in the upcoming megastep."""
@@ -755,14 +965,15 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                predictor=None, model=None, params=None,
                hardware: HardwareSpec | None = None, seed=0,
                probe_interval=1, oom_mode="discard", kv_layout="contig",
-               page_size=16, max_len=1024) -> EngineStats:
+               page_size=16, max_len=1024,
+               prefix_cache=False) -> EngineStats:
     """One-shot convenience: build an `Engine` and run a (deep-copied)
     request trace under the given policy, returning its `EngineStats`."""
     ecfg = EngineConfig(policy=policy, c_limit=c_limit, max_batch=max_batch,
                         mem_budget=mem_budget, mode=mode, seed=seed,
                         probe_interval=probe_interval, oom_mode=oom_mode,
                         kv_layout=kv_layout, page_size=page_size,
-                        max_len=max_len,
+                        max_len=max_len, prefix_cache=prefix_cache,
                         hardware=hardware or HardwareSpec())
     import copy
     reqs = copy.deepcopy(requests)

@@ -20,6 +20,14 @@ Two layouts coexist behind the engine's ``kv_layout`` switch:
   This is the mechanism the paper's Section 3.3 preemption-cost discussion
   assumes away — paging makes the C-limit sweep's recompute term smaller.
 
+With ``prefix_cache=True`` the paged layout additionally shares identical
+KV *prefixes across requests*: full prompt pages are registered in a
+chained content-hash index, later requests link matching pages by
+refcount bump + block-table write (no prefill compute), writes into
+shared pages copy-on-write, and refcount-zero indexed pages park in a
+reusable LRU pool — warm for the next hit, reclaimable under pressure.
+See :class:`BlockManager` for the invariants.
+
 ``bytes_for_context`` is the arch-aware preemption-cost function m(age)
 from DESIGN.md section 4: dense KV grows linearly with context,
 sliding-window layers clamp at the window, SSM layers cost O(1) state.
@@ -34,6 +42,7 @@ from __future__ import annotations
 import functools
 import math
 import warnings
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -171,9 +180,40 @@ class BlockManager:
     swapped to host memory, and ``cached_tokens`` — how many prefix tokens
     the resident+host pages actually hold. Eviction and swap are tail-first
     so the retained portion is always a clean prefix.
+
+    With ``prefix_cache=True`` pages become shareable across requests:
+
+    * every allocated page carries a **refcount** (owners among live
+      requests); pages are physically reclaimed only at refcount zero;
+    * full prompt pages are registered in a **content-hash index** keyed
+      on ``(parent_physical_id, token_block)`` — a chained key, so a hit
+      on page *j* proves the whole prefix up to *j* matches;
+    * a request whose prompt matches a chain of cached pages **links**
+      them (block-table writes, refcount bumps) instead of re-prefilling;
+    * pages whose refcount drops to zero while still indexed move to a
+      **reusable** LRU pool: warm for future hits, yet counted as free
+      capacity — the allocator reclaims LRU-first (deregistering the page
+      and its now-unreachable descendants) when the free list runs dry;
+    * writes into a shared page go through **copy-on-write**
+      (`make_writable`): the writer gets a private copy, the shared page
+      is never mutated in place.
+
+    With the default ``prefix_cache=False`` nothing is indexed or shared
+    and every refcount is 1, so behaviour is exactly the pre-prefix-cache
+    manager. ``track_resets=True`` (set by :class:`PagedSlotPool`) logs
+    page ids whose device state must be invalidated or copied; sim-mode
+    managers leave it off so nothing accumulates.
     """
 
-    def __init__(self, num_pages: int, page_size: int, first_id: int = 1):
+    def __init__(self, num_pages: int, page_size: int, first_id: int = 1,
+                 prefix_cache: bool = False, track_resets: bool = False,
+                 reusable_cap: int | None = None):
+        """See the class docstring; ``reusable_cap`` bounds the reusable
+        pool (warm refcount-zero pages). A bounded pool is naturally
+        capped at ``num_pages``; unbounded (sim-mode) managers must pass
+        a cap or the index/LRU bookkeeping grows with every unique prompt
+        ever served — and, worse, models an infinitely large always-warm
+        cache no physical pool could provide."""
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         self.page_size = page_size
@@ -186,20 +226,93 @@ class BlockManager:
         self.pages: dict[int, list[int]] = {}
         self.host_pages: dict[int, int] = {}
         self.cached_tokens: dict[int, int] = {}
+        self.prefix_cache = prefix_cache
+        self.track_resets = track_resets
+        self.reusable_cap = reusable_cap
+        # refcount: physical id -> live owners (0 while parked in _reusable)
+        self.refcount: dict[int, int] = {}
+        self._used = 0              # pages with refcount > 0 (incremental:
+                                    # the refcount dict retains warm pages,
+                                    # so scanning it per step would cost
+                                    # O(pages ever registered))
+        self.index_gen = 0          # bumped whenever index contents change
+                                    # (register/deregister) — lets callers
+                                    # cache match_prefix results
+        self._index: dict[tuple, int] = {}     # (parent_pid, tokens) -> pid
+        self._key_of: dict[int, tuple] = {}    # pid -> its index key
+        self._kids: dict[int, set[int]] = {}   # pid -> registered children
+        self._reusable: OrderedDict[int, None] = OrderedDict()  # LRU order
+        self._reset_log: list[int] = []        # device invalidation queue
+        self._cow_log: list[tuple[int, int]] = []   # (src, dst) page copies
 
     # -- allocation ------------------------------------------------------
+    def available_pages(self) -> int:
+        """Pages allocatable right now: free-listed plus reusable (warm
+        refcount-zero cache pages, reclaimed on demand)."""
+        if not self.bounded:
+            return 1 << 30
+        return len(self.free) + len(self._reusable)
+
     def _take_page(self) -> int | None:
         if self.free:
-            return self.free.pop()
-        if not self.bounded:
+            pid = self.free.pop()
+        elif not self.bounded:
             pid = self._next_id
             self._next_id += 1
-            return pid
-        return None
+        elif self._reusable:
+            pid, _ = self._reusable.popitem(last=False)      # LRU reclaim
+            del self.refcount[pid]
+            self._deregister(pid)
+            if self.track_resets:
+                self._reset_log.append(pid)
+        else:
+            return None
+        self.refcount[pid] = 1
+        self._used += 1
+        return pid
+
+    def _take_pages(self, n: int) -> list[int] | None:
+        """Atomically allocate ``n`` pages: validates capacity first and
+        either returns all ``n`` or None, never a partial allocation."""
+        if self.bounded and self.available_pages() < n:
+            return None
+        return [self._take_page() for _ in range(n)]
+
+    def _release_ref(self, pid: int) -> bool:
+        """Drop one reference. Returns True when the page left the used
+        set (refcount hit zero) — whether free-listed or parked reusable."""
+        self.refcount[pid] -= 1
+        if self.refcount[pid] > 0:
+            return False
+        self._used -= 1
+        if self.prefix_cache and pid in self._key_of:
+            self._reusable[pid] = None          # stays warm, counts as free
+            self._reusable.move_to_end(pid)
+            if (self.reusable_cap is not None
+                    and len(self._reusable) > self.reusable_cap):
+                old, _ = self._reusable.popitem(last=False)   # LRU out
+                del self.refcount[old]
+                self._deregister(old)
+                if self.bounded:
+                    self.free.append(old)
+                if self.track_resets:
+                    self._reset_log.append(old)
+            return True
+        del self.refcount[pid]
+        if self.bounded:
+            self.free.append(pid)
+        if self.track_resets:
+            self._reset_log.append(pid)
+        return True
 
     def free_pages(self) -> int:
         """Unallocated page count (effectively infinite when unbounded)."""
-        return len(self.free) if self.bounded else 1 << 30
+        return self.available_pages() if self.bounded else 1 << 30
+
+    def used_pages(self) -> int:
+        """Unique physical pages referenced by at least one request.
+        Shared pages count once — the page-accurate resident footprint."""
+        return self._used
 
     def ensure(self, rid: int, tokens: int) -> bool:
         """Grow ``rid``'s resident page list to cover ``tokens`` prefix
@@ -208,10 +321,10 @@ class BlockManager:
         need = pages_for_tokens(tokens, self.page_size) - len(have)
         if need <= 0:
             return True
-        if self.bounded and len(self.free) < need:
+        got = self._take_pages(need)
+        if got is None:
             return False
-        for _ in range(need):
-            have.append(self._take_page())
+        have.extend(got)
         return True
 
     def note_cached(self, rid: int, tokens: int):
@@ -242,7 +355,11 @@ class BlockManager:
     def evict_tail(self, rid: int, n_pages: int) -> list[int]:
         """Discard up to ``n_pages`` tail pages (their tokens must be
         recomputed on resume). Host-swapped tail pages are dropped first —
-        they are beyond the resident prefix. Returns freed physical ids."""
+        they are beyond the resident prefix. Shared pages (refcount > 1)
+        stop the walk: reclaiming them frees no memory and would force a
+        recompute of tokens other requests still serve, so eviction
+        prefers — and only ever takes — unshared tail pages. Returns the
+        physical ids that actually left the used set."""
         dropped_host = min(self.host_pages.get(rid, 0), n_pages)
         if dropped_host:
             self.host_pages[rid] -= dropped_host
@@ -250,38 +367,53 @@ class BlockManager:
         have = self.pages.get(rid, [])
         freed = []
         for _ in range(min(n_pages, len(have))):
-            freed.append(have.pop())
-        if self.bounded:
-            self.free.extend(freed)
+            if self.refcount.get(have[-1], 1) > 1:
+                break                           # shared: not reclaimable
+            pid = have.pop()
+            if self._release_ref(pid):
+                freed.append(pid)
         self.note_cached(rid, self.cached_tokens.get(rid, 0))
         return freed
+
+    def unshared_tail_pages(self, rid: int) -> int:
+        """Contiguous run of evictable (refcount == 1) pages at the tail —
+        how much relief evicting this request can actually yield."""
+        n = 0
+        for pid in reversed(self.pages.get(rid, [])):
+            if self.refcount.get(pid, 1) > 1:
+                break
+            n += 1
+        return n
 
     def swap_out_tail(self, rid: int, n_pages: int) -> list[int]:
         """Move up to ``n_pages`` tail pages to host memory: physical pages
         are freed but their tokens stay cached (swap-in restores them).
-        Returns the freed physical ids."""
+        Shared pages stop the walk (their device copy serves other
+        requests). Returns the freed physical ids."""
         have = self.pages.get(rid, [])
         freed = []
         for _ in range(min(n_pages, len(have))):
-            freed.append(have.pop())
+            if self.refcount.get(have[-1], 1) > 1:
+                break
+            pid = have.pop()
+            if self._release_ref(pid):
+                freed.append(pid)
         if freed:
             self.host_pages[rid] = self.host_pages.get(rid, 0) + len(freed)
-            if self.bounded:
-                self.free.extend(freed)
         return freed
 
     def swap_in(self, rid: int) -> int:
         """Re-allocate physical pages for host-swapped tail pages.
         Returns the number of pages brought back (0 if none or if the pool
-        cannot hold them — caller must evict first)."""
+        cannot hold them — caller must evict first). Atomic: a failed
+        swap-in leaves ``pages``/``host_pages`` untouched."""
         n = self.host_pages.get(rid, 0)
         if not n:
             return 0
-        if self.bounded and len(self.free) < n:
+        got = self._take_pages(n)
+        if got is None:
             return 0
-        have = self.pages.setdefault(rid, [])
-        for _ in range(n):
-            have.append(self._take_page())
+        self.pages.setdefault(rid, []).extend(got)
         self.host_pages[rid] = 0
         return n
 
@@ -292,13 +424,158 @@ class BlockManager:
         return self.resident_tokens(rid)
 
     def free_request(self, rid: int) -> list[int]:
-        """Drop all of ``rid``'s pages and bookkeeping; returns freed ids."""
-        freed = self.pages.pop(rid, [])
-        if self.bounded:
-            self.free.extend(freed)
+        """Drop all of ``rid``'s references and bookkeeping. Returns the
+        physical ids that left the used set: shared pages stay with their
+        other owners (and are not returned), while indexed pages are
+        returned but park in the reusable pool — still warm for future
+        prefix hits, device-reset only if later reclaimed."""
+        freed = [pid for pid in self.pages.pop(rid, [])
+                 if self._release_ref(pid)]
         self.host_pages.pop(rid, None)
         self.cached_tokens.pop(rid, None)
         return freed
+
+    # -- cross-request prefix cache --------------------------------------
+    def match_prefix(self, tokens) -> tuple[list[int], int]:
+        """Longest chain of cached full pages matching ``tokens``.
+
+        Pure lookup (no refcount or LRU side effects): walks page-sized
+        blocks of ``tokens`` through the chained hash index and returns
+        ``(physical_ids, matched_token_count)``. The chained key — each
+        block hashed against its parent's *physical id* — makes a hit on
+        block j a proof that blocks 0..j all match, with one dict probe
+        per block.
+        """
+        if not self.prefix_cache:
+            return [], 0
+        ps = self.page_size
+        parent, pids = 0, []
+        for j in range(len(tokens) // ps):
+            pid = self._index.get((parent, tuple(tokens[j * ps:(j + 1) * ps])))
+            if pid is None:
+                break
+            pids.append(pid)
+            parent = pid
+        return pids, len(pids) * ps
+
+    def match_len(self, tokens) -> int:
+        """Matched-prefix token count only (the router's affinity probe)."""
+        return self.match_prefix(tokens)[1]
+
+    def link_prefix(self, rid: int, tokens) -> int:
+        """Link the longest cached prefix of ``tokens`` into ``rid``'s
+        block table: refcount bumps and table writes, no prefill compute.
+        Only valid before ``rid`` owns any pages (fresh admission).
+        Returns the number of prefix tokens now materialized for ``rid``.
+        """
+        if not self.prefix_cache or self.pages.get(rid):
+            return 0
+        pids, hit = self.match_prefix(tokens)
+        if not pids:
+            return 0
+        for pid in pids:
+            if self.refcount.get(pid, 0) == 0:
+                self._used += 1                 # warm page back in use
+            self.refcount[pid] = self.refcount.get(pid, 0) + 1
+            self._reusable.pop(pid, None)
+        self.pages[rid] = list(pids)
+        self.cached_tokens[rid] = hit
+        return hit
+
+    def register_prefix(self, rid: int, tokens, upto: int) -> int:
+        """Publish ``rid``'s materialized full prompt pages into the hash
+        index so later requests can link them. ``tokens`` is the prompt;
+        only pages fully covered by ``min(upto, len(tokens))`` written
+        tokens are registered (partial tail pages never enter the index,
+        so indexed pages are immutable by construction). Duplicate content
+        chains through the existing canonical page instead of forking the
+        index. Returns how many pages were newly registered."""
+        if not self.prefix_cache:
+            return 0
+        ps = self.page_size
+        have = self.pages.get(rid, ())
+        n_full = min(upto, len(tokens)) // ps
+        parent, registered = 0, 0
+        for j in range(min(n_full, len(have))):
+            pid = have[j]
+            if pid in self._key_of:             # already canonical
+                parent = pid
+                continue
+            key = (parent, tuple(tokens[j * ps:(j + 1) * ps]))
+            canon = self._index.get(key)
+            if canon is not None:               # duplicate content: chain
+                parent = canon                  # through the canonical page
+                continue
+            self._index[key] = pid
+            self._key_of[pid] = key
+            self._kids.setdefault(parent, set()).add(pid)
+            parent = pid
+            registered += 1
+        if registered:
+            self.index_gen += 1
+        return registered
+
+    def make_writable(self, rid: int, from_token: int) -> list[tuple[int, int]]:
+        """Copy-on-write guard: give ``rid`` private copies of any shared
+        (refcount > 1) pages covering positions >= ``from_token``, so the
+        upcoming KV writes never mutate a page other requests attend to.
+        Returns the ``(src, dst)`` page copies performed (also queued for
+        the device in the COW log). In the standard admission flow shared
+        pages are always full and writes land beyond them, so this is a
+        no-op backstop — but it is what makes the immutability invariant
+        enforced rather than emergent."""
+        if not self.prefix_cache:
+            return []
+        have = self.pages.get(rid, [])
+        ops = []
+        for j in range(from_token // self.page_size, len(have)):
+            pid = have[j]
+            if self.refcount.get(pid, 1) <= 1:
+                continue
+            new = self._take_page()
+            if new is None:
+                raise RuntimeError("paged KV pool exhausted during "
+                                   "copy-on-write")
+            self.refcount[pid] -= 1
+            have[j] = new
+            ops.append((pid, new))
+            if self.track_resets:
+                self._cow_log.append((pid, new))
+        return ops
+
+    def _deregister(self, pid: int):
+        """Remove ``pid`` from the hash index, cascading to registered
+        descendants: their chained keys name ``pid`` as parent, so once it
+        is reclaimed (and its id possibly reused for other content) they
+        must not be matchable. Unreferenced descendants move from the
+        reusable pool to the free list."""
+        key = self._key_of.pop(pid, None)
+        if key is None:
+            return
+        self.index_gen += 1
+        if self._index.get(key) == pid:
+            del self._index[key]
+        self._kids.get(key[0], set()).discard(pid)
+        for kid in list(self._kids.pop(pid, ())):
+            self._deregister(kid)
+            if self.refcount.get(kid) == 0:
+                del self._reusable[kid]
+                del self.refcount[kid]
+                if self.bounded:
+                    self.free.append(kid)
+                if self.track_resets:
+                    self._reset_log.append(kid)
+
+    def pop_resets(self) -> list[int]:
+        """Drain the device-invalidation queue (page ids whose content is
+        dead: freed outright or reclaimed from the reusable pool)."""
+        out, self._reset_log = self._reset_log, []
+        return out
+
+    def pop_cow_copies(self) -> list[tuple[int, int]]:
+        """Drain the pending (src, dst) device page copies from COW."""
+        out, self._cow_log = self._cow_log, []
+        return out
 
 
 class SlotPool:
@@ -361,7 +638,7 @@ class PagedSlotPool(SlotPool):
     """
 
     def __init__(self, model, slots: int, max_len: int, page_size: int = 16,
-                 retain: bool | None = None):
+                 retain: bool | None = None, prefix_cache: bool = False):
         _silence_cpu_donation_warning()    # covers the donating reset jits
         self.page_size = page_size
         self.pages_per_seq = pages_for_tokens(max_len, page_size)
@@ -377,7 +654,9 @@ class PagedSlotPool(SlotPool):
         self._dirty_pages: list[int] = []
         self._table_stale = True
         # physical ids 1..N; page 0 is the null page (pkpos stays -1)
-        self.blocks = BlockManager(slots * self.pages_per_seq, page_size)
+        self.blocks = BlockManager(slots * self.pages_per_seq, page_size,
+                                   prefix_cache=prefix_cache,
+                                   track_resets=True)
         self.table = np.zeros((slots, self.pages_per_seq), np.int32)
         if retain is None:
             retain = supports_page_retention(self.cfg)
@@ -399,10 +678,13 @@ class PagedSlotPool(SlotPool):
         return slot
 
     def release(self, rid: int, retain: bool = False) -> int:
-        """Release the slot; with ``retain`` the pages stay for resumption."""
+        """Release the slot; with ``retain`` the pages stay for resumption.
+        Device invalidation is driven by the block manager's reset log
+        (drained in ``flush_resets``), so pages parked in the reusable
+        prefix pool keep their contents."""
         slot = self.slot_of[rid]
         if not retain:
-            self._dirty_pages.extend(self.blocks.free_request(rid))
+            self.blocks.free_request(rid)
         self._write_table_row(slot, [])
         return super().release(rid)
 
@@ -418,13 +700,22 @@ class PagedSlotPool(SlotPool):
         return ok
 
     def evict_tail(self, rid: int, n_pages: int) -> list[int]:
-        """Tail-evict pages and queue their device invalidation."""
+        """Tail-evict pages (device invalidation queues via the reset
+        log); returns the ids that left the used set."""
         freed = self.blocks.evict_tail(rid, n_pages)
-        self._dirty_pages.extend(freed)
         if rid in self.slot_of:
             self._write_table_row(self.slot_of[rid],
                                   self.blocks.block_table(rid))
         return freed
+
+    def make_writable(self, rid: int, from_token: int) -> list:
+        """COW guard before KV writes (see `BlockManager.make_writable`);
+        refreshes the table row when pages were swapped for copies."""
+        ops = self.blocks.make_writable(rid, from_token)
+        if ops and rid in self.slot_of:
+            self._write_table_row(self.slot_of[rid],
+                                  self.blocks.block_table(rid))
+        return ops
 
     def _write_table_row(self, slot: int, pages: list[int]):
         row = np.zeros((self.pages_per_seq,), np.int32)
@@ -434,14 +725,23 @@ class PagedSlotPool(SlotPool):
 
     # -- device sync -----------------------------------------------------
     def flush_resets(self):
-        """Apply pending slot/page resets and sync the device block table."""
+        """Apply pending slot/page resets, COW page copies, and sync the
+        device block table. Resets run before copies so a page reclaimed
+        from the reusable pool and immediately used as a COW destination
+        ends up holding the copied content."""
         super().flush_resets()
+        self._dirty_pages.extend(self.blocks.pop_resets())
         if self._dirty_pages:
             n_pages = 1 + self.blocks.num_pages
             mask = jnp.zeros((n_pages,), bool).at[
                 jnp.asarray(self._dirty_pages, jnp.int32)].set(True)
             self.cache = _reset_pages(self.cache, mask)
             self._dirty_pages.clear()
+        cow = self.blocks.pop_cow_copies()
+        if cow:
+            src = jnp.asarray([s for s, _ in cow], jnp.int32)
+            dst = jnp.asarray([d for _, d in cow], jnp.int32)
+            self.cache = _copy_pages(self.cache, src, dst)
         if self._table_stale:
             self.cache["block_table"] = jnp.asarray(self.table)
             self._table_stale = False
@@ -469,6 +769,26 @@ def _reset_pages(cache, page_mask):
                 sub = dict(sub)
                 sub["pkpos"] = jnp.where(page_mask[None, :, None], -1,
                                          sub["pkpos"])
+            subs.append(sub)
+        new[key] = tuple(subs)
+    return new
+
+
+@functools.partial(jax.jit, donate_argnames=("cache",))
+def _copy_pages(cache, src, dst):
+    """Copy-on-write: duplicate physical pages ``src`` into ``dst`` (K/V
+    payload and pkpos) across every paged layer run. Donated like
+    ``_reset_pages`` — the pool holds the only live cache reference."""
+    new = dict(cache)
+    for key, run in cache.items():
+        if not key.startswith("run_"):
+            continue
+        subs = []
+        for sub in run:
+            if "pkpos" in sub:
+                sub = dict(sub)
+                for leaf in ("pk", "pv", "pkpos"):
+                    sub[leaf] = sub[leaf].at[:, dst].set(sub[leaf][:, src])
             subs.append(sub)
         new[key] = tuple(subs)
     return new

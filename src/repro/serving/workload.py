@@ -54,6 +54,11 @@ class TenantSpec:
         prompt_sigma: lognormal sigma for prompt lengths.
         out_median: lognormal median for output lengths (tokens).
         out_sigma: lognormal sigma for output lengths.
+        prefix_len: length (tokens) of the tenant's fixed system prompt,
+            prepended to every request of the tenant. All requests of one
+            tenant share the same prefix token content (drawn once from a
+            dedicated RNG stream), so cross-request KV prefix caching can
+            serve it after the first prefill. 0 = no shared prefix.
     """
 
     name: str
@@ -62,6 +67,7 @@ class TenantSpec:
     prompt_sigma: float = 0.6
     out_median: float = 48.0
     out_sigma: float = 1.0
+    prefix_len: int = 0
 
 
 @dataclass(frozen=True)
@@ -97,6 +103,14 @@ class WorkloadConfig:
         diurnal_period: period of the rate curve in seconds.
         tenants: optional `TenantSpec` mix; empty = single-tenant using
             the top-level length parameters.
+        prefix_len: single-tenant shared system-prompt length in tokens
+            (per-tenant prefixes come from ``TenantSpec.prefix_len``).
+            Requires ``split_streams=True``.
+        prefix_hit: probability that a request with a shared prefix
+            actually carries the *tenant's* prefix; misses get a fresh
+            random prefix of the same length (so footprints match but the
+            KV cache cannot serve it) — the hit-rate dial for prefix-cache
+            benchmarks.
     """
 
     n_requests: int = 256
@@ -118,6 +132,8 @@ class WorkloadConfig:
     diurnal_amp: float = 0.8
     diurnal_period: float = 60.0
     tenants: tuple = ()
+    prefix_len: int = 0
+    prefix_hit: float = 1.0
 
 
 def sample_output_length(rng: random.Random, wc,
@@ -246,9 +262,13 @@ def generate(wc: WorkloadConfig) -> list[Request]:
     arrival = "burst" if wc.burst else wc.arrival
     if arrival not in ("poisson", "burst", "mmpp", "diurnal"):
         raise ValueError(f"unknown arrival process {wc.arrival!r}")
+    has_prefix = wc.prefix_len > 0 or any(
+        s.prefix_len > 0 for s in wc.tenants)
     if not wc.split_streams and arrival in ("poisson", "burst"):
         if wc.tenants:
             raise ValueError("tenant mixes require split_streams=True")
+        if has_prefix:
+            raise ValueError("shared prefixes require split_streams=True")
         return _generate_legacy(wc, burst=arrival == "burst")
 
     # string seeding is deterministic across processes (hashed via sha512
@@ -263,12 +283,34 @@ def generate(wc: WorkloadConfig) -> list[Request]:
     else:
         arrivals = _ARRIVALS[arrival](arr_rng, wc)
 
+    # shared system prompts: one fixed token sequence per tenant, drawn
+    # from a stream keyed on the tenant name so the content is stable
+    # under any change to the mix, rates, or arrival process. The hit
+    # dial draws from its own stream for the same invariance.
+    hit_rng = random.Random(f"{wc.seed}:prefixhit") if has_prefix else None
+    prefixes: dict[str, list[int]] = {}
+
+    def _shared_prefix(name: str, plen: int) -> list[int]:
+        if name not in prefixes:
+            rng = random.Random(f"{wc.seed}:prefix:{name}")
+            prefixes[name] = [rng.randrange(1, wc.vocab)
+                              for _ in range(plen)]
+        return prefixes[name]
+
     reqs = []
     for rid, t in enumerate(arrivals):
         spec = _pick_tenant(ten_rng, wc)
         plen = sample_prompt_length(len_rng, wc, spec)
         olen = sample_output_length(len_rng, wc, spec)
         prompt = [tok_rng.randrange(1, wc.vocab) for _ in range(plen)]
+        pre_len = spec.prefix_len if spec is not None else wc.prefix_len
+        if pre_len > 0:
+            if hit_rng.random() < wc.prefix_hit:
+                prompt = _shared_prefix(spec.name if spec else "",
+                                        pre_len) + prompt
+            else:       # miss: same footprint, unshareable content
+                prompt = [tok_rng.randrange(1, wc.vocab)
+                          for _ in range(pre_len)] + prompt
         reqs.append(Request(rid=rid, arrival=t, prompt=prompt,
                             true_out_len=olen, max_new_tokens=wc.max_out,
                             tenant=spec.name if spec else ""))
@@ -304,6 +346,19 @@ SCENARIOS: dict[str, dict] = {
     # memory and chunked prefill rather than decode
     "long-context": dict(arrival="poisson", prompt_mean=400.0,
                          prompt_sigma=0.8, out_median=96.0),
+    # multi-tenant mix where every tenant carries a fixed system prompt
+    # (RAG preamble / tool schema / style guide): the cross-request
+    # prefix-cache scenario. Prefix lengths are page-aligned (multiples
+    # of 16) so a full prefix hit links cleanly; dial the hit rate with
+    # scenario_config("shared-prefix", ..., prefix_hit=0.5).
+    "shared-prefix": dict(arrival="poisson", tenants=(
+        TenantSpec("chat", 0.6, prompt_mean=44.0, out_median=48.0,
+                   prefix_len=192),
+        TenantSpec("code", 0.3, prompt_mean=120.0, prompt_sigma=0.5,
+                   out_median=128.0, out_sigma=0.8, prefix_len=384),
+        TenantSpec("summarize", 0.1, prompt_mean=400.0, prompt_sigma=0.4,
+                   out_median=24.0, out_sigma=0.5, prefix_len=96),
+    )),
 }
 
 

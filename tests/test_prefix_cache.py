@@ -1,0 +1,435 @@
+"""Cross-request prefix cache: BlockManager refcount/index/COW invariants,
+cached-aware engine behaviour, shared-prefix workloads, prefix-affinity
+routing, and real-mode token parity."""
+
+import copy
+
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro.cluster import Router, RouterConfig, run_cluster
+from repro.config import get_config, get_smoke_config
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig, run_policy
+from repro.serving.kv_cache import BlockManager
+from repro.serving.workload import (TenantSpec, WorkloadConfig, generate,
+                                    scenario_config)
+
+CFG = get_config("granite-3-8b")
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  overhead_s=2e-4)
+
+
+def shared_prompt_workload(n=40, rate=20.0, seed=4, prefix_len=64):
+    """Single-tenant stream where every prompt carries one shared prefix."""
+    wc = WorkloadConfig(n_requests=n, request_rate=rate, seed=seed,
+                        vocab=CFG.vocab_size, split_streams=True,
+                        prefix_len=prefix_len)
+    return generate(wc)
+
+
+# ---------------------------------------------------------------------------
+# BlockManager: match / link / register
+# ---------------------------------------------------------------------------
+
+def test_match_link_register_roundtrip():
+    bm = BlockManager(num_pages=16, page_size=4, prefix_cache=True)
+    toks = list(range(100, 116))            # 4 full pages
+    assert bm.ensure(1, 16)
+    bm.note_cached(1, 16)
+    assert bm.register_prefix(1, toks, 16) == 4
+    # a second request links the whole chain without allocating
+    free_before = bm.free_pages()
+    hit = bm.link_prefix(2, toks)
+    assert hit == 16
+    assert bm.block_table(2) == bm.block_table(1)
+    assert bm.free_pages() == free_before
+    for pid in bm.block_table(1):
+        assert bm.refcount[pid] == 2
+
+
+def test_match_is_chained_not_per_block():
+    """An identical second block under a different first block must not
+    match: the key chains through the parent's physical id."""
+    bm = BlockManager(num_pages=16, page_size=4, prefix_cache=True)
+    a = [1, 2, 3, 4, 9, 9, 9, 9]
+    b = [5, 6, 7, 8, 9, 9, 9, 9]            # same 2nd block, different 1st
+    bm.ensure(1, 8)
+    bm.register_prefix(1, a, 8)
+    pids, hit = bm.match_prefix(b)
+    assert hit == 0 and pids == []
+    pids, hit = bm.match_prefix(a)
+    assert hit == 8
+
+
+def test_partial_tail_page_never_indexed():
+    bm = BlockManager(num_pages=8, page_size=4, prefix_cache=True)
+    toks = list(range(10))                  # 2 full pages + 2 tokens
+    bm.ensure(1, 10)
+    assert bm.register_prefix(1, toks, 10) == 2
+    _, hit = bm.match_prefix(toks)
+    assert hit == 8                         # the partial page cannot match
+
+
+def test_finished_request_pages_stay_warm_and_lru_reclaims():
+    bm = BlockManager(num_pages=4, page_size=4, prefix_cache=True)
+    toks = list(range(50, 58))
+    bm.ensure(1, 8)
+    bm.register_prefix(1, toks, 8)
+    pages = bm.block_table(1)
+    freed = bm.free_request(1)
+    assert freed == pages                   # left the used set...
+    assert all(p in bm._reusable for p in pages)    # ...parked warm
+    assert all(p not in bm.free for p in pages)     # ...not reset-freed
+    assert bm.free_pages() == 4             # but counted as capacity
+    assert bm.used_pages() == 0
+    # still hittable
+    assert bm.link_prefix(2, toks) == 8
+    bm.free_request(2)
+    # demanding the full pool reclaims the warm pages LRU-first and
+    # deregisters them
+    assert bm.ensure(3, 16)
+    assert bm.match_prefix(toks)[1] == 0
+
+
+def test_reclaim_cascades_to_descendants():
+    """Reclaiming an indexed page must deregister its chained children:
+    their keys name its physical id, which may be reused for different
+    content."""
+    bm = BlockManager(num_pages=2, page_size=4, prefix_cache=True)
+    toks = list(range(70, 78))
+    bm.ensure(1, 8)
+    bm.register_prefix(1, toks, 8)
+    bm.free_request(1)
+    # take one page: reclaims the LRU (root) page and must cascade
+    assert bm.ensure(2, 4)
+    assert bm.match_prefix(toks)[1] == 0
+    assert not bm._index and not bm._key_of
+
+
+def test_cow_gives_private_copy_and_preserves_shared_page():
+    bm = BlockManager(num_pages=8, page_size=4, prefix_cache=True)
+    toks = list(range(30, 38))
+    bm.ensure(1, 8)
+    bm.register_prefix(1, toks, 8)
+    bm.link_prefix(2, toks)
+    shared = list(bm.block_table(2))
+    ops = bm.make_writable(2, 4)            # page 1 must be copied
+    assert len(ops) == 1 and ops[0][0] == shared[1]
+    assert bm.block_table(1) == shared      # owner's table untouched
+    assert bm.block_table(2)[0] == shared[0]
+    assert bm.block_table(2)[1] != shared[1]
+    assert bm.refcount[shared[1]] == 1      # back to sole ownership
+    assert bm.refcount[bm.block_table(2)[1]] == 1
+
+
+def test_eviction_stops_at_shared_pages():
+    bm = BlockManager(num_pages=8, page_size=4, prefix_cache=True)
+    toks = list(range(40, 48))
+    bm.ensure(1, 12)                        # 2 shared-able + 1 private page
+    bm.note_cached(1, 12)
+    bm.register_prefix(1, toks, 8)
+    bm.link_prefix(2, toks)
+    freed = bm.evict_tail(1, 3)
+    assert len(freed) == 1                  # only the unshared tail page
+    assert bm.resident_pages(1) == 2
+    assert bm.unshared_tail_pages(1) == 0
+    assert bm.evict_tail(1, 1) == []        # shared tail: nothing to take
+
+
+def test_swap_in_is_atomic_on_exhausted_pool():
+    bm = BlockManager(num_pages=4, page_size=4)
+    bm.ensure(1, 16)
+    bm.note_cached(1, 16)
+    bm.swap_out_tail(1, 2)
+    assert bm.host_pages[1] == 2
+    bm.ensure(2, 8)                         # eat the freed capacity
+    pages_before = list(bm.pages[1])
+    assert bm.swap_in(1) == 0               # cannot fit: must be a no-op
+    assert bm.pages[1] == pages_before
+    assert bm.host_pages[1] == 2
+    bm.free_request(2)
+    assert bm.swap_in(1) == 2
+    assert bm.resident_tokens(1) == 16
+
+
+# ---------------------------------------------------------------------------
+# refcount invariants under random interleavings (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _check_invariants(bm: BlockManager, n_pages: int):
+    owned = [p for ps in bm.pages.values() for p in ps]
+    # no page appears in two block-table positions
+    assert len(set(owned)) == len(owned) or bm.prefix_cache
+    # refcount of every owned page equals its number of owners
+    counts = {}
+    for ps in bm.pages.values():
+        for p in ps:
+            counts[p] = counts.get(p, 0) + 1
+    for p, c in counts.items():
+        assert bm.refcount[p] == c, f"page {p}: refcount != owners"
+    # every physical page is exactly one of: free-listed, reusable, owned
+    free, reusable = set(bm.free), set(bm._reusable)
+    used = set(counts)
+    assert len(bm.free) == len(free)                # free-listed once
+    assert not (free & reusable) and not (free & used)
+    assert not (reusable & used)
+    assert len(free) + len(reusable) + len(used) == n_pages
+    # reusable pages hold refcount 0; owned pages >= 1
+    for p in reusable:
+        assert bm.refcount[p] == 0
+    # indexed pages resolve back to themselves
+    for pid, key in bm._key_of.items():
+        assert bm._index[key] == pid
+
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 5),
+                          st.integers(1, 40)),
+                min_size=1, max_size=80))
+@settings(max_examples=60, deadline=None)
+def test_refcount_invariants_any_interleaving(ops):
+    """Any interleaving of admit/link/register/evict/swap/free keeps every
+    physical page either free-listed exactly once or referenced with
+    refcount >= 1 (or parked reusable at refcount 0), and COW never
+    mutates a shared page in place."""
+    n_pages = 12
+    bm = BlockManager(num_pages=n_pages, page_size=4, prefix_cache=True)
+    toks = [100 + i for i in range(48)]     # one shared prompt universe
+    frozen = {}                             # pid -> key when registered
+    for op, rid, amount in ops:
+        if op == 0:                         # admit/grow
+            if not bm.pages.get(rid):
+                bm.link_prefix(rid, toks[:amount])
+            bm.ensure(rid, amount)
+            bm.note_cached(rid, amount)
+        elif op == 1:                       # publish prompt pages
+            bm.register_prefix(rid, toks, min(amount,
+                                              bm.resident_tokens(rid)))
+        elif op == 2:
+            bm.evict_tail(rid, amount % 5)
+        elif op == 3:
+            try:
+                bm.make_writable(rid, amount % 8)
+            except RuntimeError:
+                pass                        # tiny pool exhausted mid-COW:
+                                            # partial COW must stay valid
+            bm.swap_out_tail(rid, amount % 3)
+            bm.swap_in(rid)
+        elif op == 4:
+            bm.free_request(rid)
+        else:
+            bm.free_request(rid)
+            bm.link_prefix(rid, toks[:amount])
+        # a page's registered identity never changes while indexed: COW
+        # and reuse must replace pages, not rewrite them
+        for pid, key in bm._key_of.items():
+            assert frozen.setdefault(pid, key) == key
+        for pid in list(frozen):
+            if pid not in bm._key_of:
+                del frozen[pid]             # deregistered: id reusable
+        _check_invariants(bm, n_pages)
+
+
+# ---------------------------------------------------------------------------
+# engine: cached-aware serving (sim mode)
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_requires_paged_pure_attention():
+    with pytest.raises(ValueError):
+        Engine(CFG, EngineConfig(kv_layout="contig", prefix_cache=True))
+    with pytest.raises(ValueError):
+        Engine(get_config("mamba2-370m"),
+               EngineConfig(kv_layout="paged", prefix_cache=True))
+
+
+def test_prefix_hits_cut_prefill_and_latency():
+    reqs = shared_prompt_workload(n=60, rate=0.9, prefix_len=256)
+    base = run_policy(CFG, "trail", copy.deepcopy(reqs), mode="sim", seed=5,
+                      kv_layout="paged", hardware=HW)
+    cached = run_policy(CFG, "trail", copy.deepcopy(reqs), mode="sim",
+                        seed=5, kv_layout="paged", hardware=HW,
+                        prefix_cache=True)
+    assert base.prefix_hit_tokens == 0
+    assert cached.prefix_hit_tokens > 0
+    assert cached.prefilled_tokens < base.prefilled_tokens
+    assert len(cached.latencies) == len(reqs)
+    mean = lambda v: sum(v) / len(v)
+    assert mean(cached.latencies) < mean(base.latencies)
+
+
+def test_zero_hit_dial_yields_no_sharing():
+    wc = WorkloadConfig(n_requests=30, request_rate=5.0, seed=7,
+                        vocab=CFG.vocab_size, split_streams=True,
+                        prefix_len=64, prefix_hit=0.0)
+    reqs = generate(wc)
+    s = run_policy(CFG, "trail", reqs, mode="sim", seed=5,
+                   kv_layout="paged", prefix_cache=True)
+    assert s.prefix_hit_tokens == 0
+
+
+def test_disabled_flag_matches_default_paged_run():
+    reqs = shared_prompt_workload(n=40)
+    a = run_policy(CFG, "trail", copy.deepcopy(reqs), mode="sim", seed=5,
+                   kv_layout="paged")
+    b = run_policy(CFG, "trail", copy.deepcopy(reqs), mode="sim", seed=5,
+                   kv_layout="paged", prefix_cache=False)
+    assert a.latencies == b.latencies
+    assert a.prefilled_tokens == b.prefilled_tokens
+
+
+# ---------------------------------------------------------------------------
+# workload: shared-prefix generation
+# ---------------------------------------------------------------------------
+
+def test_tenant_prefixes_shared_within_not_across():
+    wc = scenario_config("shared-prefix", n_requests=80, request_rate=5.0,
+                         seed=3, vocab=CFG.vocab_size)
+    reqs = generate(wc)
+    by_tenant = {}
+    for r in reqs:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    lens = {"chat": 192, "code": 384, "summarize": 96}
+    heads = {}
+    for tenant, rs in by_tenant.items():
+        pl = lens[tenant]
+        head = rs[0].prompt[:pl]
+        heads[tenant] = tuple(head)
+        for r in rs:
+            assert r.prompt[:pl] == head
+    assert len(set(heads.values())) == len(heads)   # distinct across tenants
+
+
+def test_prefix_requires_split_streams():
+    with pytest.raises(ValueError):
+        generate(WorkloadConfig(n_requests=4, prefix_len=16))
+    with pytest.raises(ValueError):
+        generate(WorkloadConfig(n_requests=4, tenants=(
+            TenantSpec("t", 1.0, prefix_len=16),)))
+
+
+def test_hit_dial_preserves_arrivals_and_lengths():
+    kw = dict(n_requests=40, request_rate=5.0, seed=9,
+              vocab=CFG.vocab_size, split_streams=True, prefix_len=32)
+    full = generate(WorkloadConfig(prefix_hit=1.0, **kw))
+    none = generate(WorkloadConfig(prefix_hit=0.0, **kw))
+    assert [r.arrival for r in full] == [r.arrival for r in none]
+    assert [len(r.prompt) for r in full] == [len(r.prompt) for r in none]
+    assert [r.true_out_len for r in full] == [r.true_out_len for r in none]
+
+
+# ---------------------------------------------------------------------------
+# router: kv headroom + prefix affinity
+# ---------------------------------------------------------------------------
+
+def _paged_engine(seed=0, **kw):
+    return Engine(CFG, EngineConfig(policy="trail", kv_layout="paged",
+                                    prefix_cache=True, seed=seed,
+                                    hardware=HW, **kw))
+
+
+def test_step_result_reports_headroom():
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=1,
+                                   mem_budget=2 * (1 << 30)))
+    for r in shared_prompt_workload(n=4, rate=100.0):
+        eng.submit(r)
+    while eng.has_work():
+        res = eng.step()
+        assert 0.0 <= res.kv_headroom <= 1.0
+        assert res.kv_headroom == eng.kv_headroom()
+
+
+def test_jspw_ties_break_on_headroom():
+    e_full = Engine(CFG, EngineConfig(policy="trail", seed=0))
+    e_free = Engine(CFG, EngineConfig(policy="trail", seed=1))
+    e_full._last_mem, e_full.ecfg.mem_budget = 900, 1000
+    e_free._last_mem, e_free.ecfg.mem_budget = 100, 1000
+    assert e_full.backlog() == e_free.backlog() == 0.0
+    router = Router([e_full, e_free],
+                    RouterConfig(n_replicas=2, policy="jspw", seed=0))
+    req = shared_prompt_workload(n=1)[0]
+    assert router._pick(req) == 1           # more headroom wins the tie
+
+
+def test_prefix_affinity_joins_warm_replica():
+    reqs = shared_prompt_workload(n=6, rate=1e9, prefix_len=64)
+    warm, cold = _paged_engine(seed=0), _paged_engine(seed=1)
+    for r in reqs[:3]:
+        warm.submit(r)
+    while warm.has_work():
+        warm.step()
+    probe = reqs[3]
+    assert warm.cached_prefix_tokens(probe.prompt) >= 64 - 16
+    assert cold.cached_prefix_tokens(probe.prompt) == 0
+    router = Router([cold, warm], RouterConfig(n_replicas=2,
+                                               policy="prefix-affinity",
+                                               seed=0))
+    assert router._pick(probe) == 1         # despite equal queues
+    # ties (no hit anywhere) fall back to jspw: a fresh unmatched prompt
+    # goes wherever plain jspw would send it
+    fresh = copy.deepcopy(probe)
+    fresh.prompt = [1] * 80
+    jspw = Router([cold, warm], RouterConfig(n_replicas=2, policy="jspw",
+                                             seed=0))
+    assert router._pick(fresh) == jspw._pick(fresh)
+
+
+def test_prefix_affinity_cluster_end_to_end():
+    wc = scenario_config("shared-prefix", n_requests=80, request_rate=0.9,
+                         seed=3, vocab=CFG.vocab_size)
+    reqs = generate(wc)
+    s = run_cluster(CFG, reqs, router_policy="prefix-affinity",
+                    n_replicas=2, policy="trail", seed=5, hardware=HW,
+                    kv_layout="paged", prefix_cache=True)
+    d = s.summary()
+    assert d["finished"] == len(reqs)
+    assert d["prefix_hit_tokens"] > 0
+    base = run_cluster(CFG, reqs, router_policy="round-robin",
+                       n_replicas=2, policy="trail", seed=5, hardware=HW,
+                       kv_layout="paged", prefix_cache=False)
+    assert d["mean_latency"] < base.summary()["mean_latency"]
+    assert d["prefilled_tokens"] < base.summary()["prefilled_tokens"]
+
+
+# ---------------------------------------------------------------------------
+# real mode: linked pages reproduce the uncached token streams
+# ---------------------------------------------------------------------------
+
+@pytest.mark.real
+def test_real_mode_prefix_cache_token_parity():
+    """Greedy decode over linked shared pages must emit exactly the same
+    tokens as the uncached run — the device-level proof that linked pages
+    hold the right KV and COW/reset bookkeeping never corrupts them."""
+    import jax
+
+    from repro.models.model import Model
+    from repro.serving.predictors import ProbePredictor
+
+    cfg = get_smoke_config("trail-llama")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    wc = WorkloadConfig(n_requests=6, request_rate=30.0, seed=1,
+                        vocab=cfg.vocab_size, prompt_mean=6.0,
+                        out_median=6.0, max_out=12, split_streams=True,
+                        prefix_len=16, prefix_hit=1.0)
+    reqs = generate(wc)
+
+    def run(flag):
+        pred = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                              embed_table=params["embed"])
+        ecfg = EngineConfig(policy="trail", max_batch=3, mode="real",
+                            kv_layout="paged", page_size=8, max_len=64,
+                            prefix_cache=flag)
+        eng = Engine(cfg, ecfg, predictor=pred, model=m, params=params)
+        for r in sorted(copy.deepcopy(reqs), key=lambda r: r.arrival):
+            eng.submit(r)
+        done = []
+        while eng.has_work():
+            done.extend(eng.step().completed)
+        return eng.stats, {r.rid: list(r.generated) for r in done}
+
+    base, base_toks = run(False)
+    cached, cached_toks = run(True)
+    assert cached.prefix_hit_tokens > 0
+    assert cached.prefilled_tokens < base.prefilled_tokens
+    assert len(cached.latencies) == len(reqs)
+    assert cached_toks == base_toks
