@@ -66,11 +66,18 @@ class RouterConfig:
         policy: dispatch policy — one of `ROUTER_POLICIES`.
         seed: RNG seed for the ``pow2`` replica sampler (dispatch is
             deterministic given the seed and the arrival stream).
+        backlog_unit: ``tokens`` (raw predicted-token backlog, the
+            default) | ``seconds`` (tokens ÷ each replica's
+            `CostModel.decode_token_rate`, via `Engine.backlog_seconds`).
+            Seconds is the unit that stays meaningful once replicas run
+            on heterogeneous hardware; with identical replicas the two
+            units rank identically, so `jspw` dispatch is unchanged.
     """
 
     n_replicas: int = 2
     policy: str = "round-robin"
     seed: int = 0
+    backlog_unit: str = "tokens"
 
 
 @dataclass
@@ -83,6 +90,11 @@ class ClusterStats:
         dispatch_counts: requests dispatched per replica.
         replica_summaries: each replica's `EngineStats.summary()` dict.
         makespan: max replica virtual clock at drain.
+        event_log: the replicas' metrics-layer event streams merged into
+            one time-ordered `repro.metrics.EventLog` (None unless the
+            replicas were built with event logs). Feed it to
+            `repro.metrics.rollup` for cluster-wide TTFT/TBT/completion
+            percentiles and SLO attainment.
     """
 
     latencies: list = field(default_factory=list)
@@ -90,6 +102,7 @@ class ClusterStats:
     dispatch_counts: list = field(default_factory=list)
     replica_summaries: list = field(default_factory=list)
     makespan: float = 0.0
+    event_log: object = None
 
     def summary(self) -> dict:
         """Aggregate cluster metrics into the benchmark-facing dict."""
@@ -140,6 +153,9 @@ class Router:
         if rc.policy not in ROUTER_POLICIES:
             raise ValueError(f"unknown router policy {rc.policy!r}; "
                              f"choose from {ROUTER_POLICIES}")
+        if rc.backlog_unit not in ("tokens", "seconds"):
+            raise ValueError(f"unknown backlog_unit {rc.backlog_unit!r}; "
+                             "choose 'tokens' or 'seconds'")
         if len(replicas) != rc.n_replicas:
             raise ValueError(f"{len(replicas)} replicas != "
                              f"n_replicas={rc.n_replicas}")
@@ -188,11 +204,16 @@ class Router:
         return min(range(n), key=lambda i: self._jspw_key(i, r_hat))
 
     def _jspw_key(self, i: int, r_hat: float | None) -> tuple:
-        """The jspw ordering for one replica: predicted interfering work,
-        then (on ties) most KV headroom, shortest queue, lowest index."""
-        return (self.replicas[i].backlog(truncate=r_hat),
-                -self.replicas[i].kv_headroom(),
-                self.replicas[i].queue_len(), i)
+        """The jspw ordering for one replica: predicted interfering work
+        (in ``rc.backlog_unit`` units — estimated seconds divide tokens
+        by the replica's own service rate, the heterogeneous-hardware
+        form), then (on ties) most KV headroom, shortest queue, lowest
+        index."""
+        eng = self.replicas[i]
+        work = (eng.backlog_seconds(truncate=r_hat)
+                if self.rc.backlog_unit == "seconds"
+                else eng.backlog(truncate=r_hat))
+        return (work, -eng.kv_headroom(), eng.queue_len(), i)
 
     def dispatch(self, req: Request) -> int:
         """Route one arrival to a replica and submit it there."""
@@ -232,12 +253,31 @@ class Router:
             stats.ttfts.extend(eng.stats.ttfts)
             stats.replica_summaries.append(eng.stats.summary())
             stats.makespan = max(stats.makespan, eng.now)
+        stats.event_log = self.merged_event_log()
         return stats
+
+    def merged_event_log(self):
+        """Merge the replicas' event logs into one time-ordered log.
+
+        Returns None when no replica records events. Per-request event
+        ordering survives the merge because each request lives on
+        exactly one replica. Delegates to ``EventLog.merge_all`` — one
+        concatenate-and-sort over all replicas instead of a re-sort per
+        pairwise merge, with the merge key defined in exactly one place.
+        """
+        logs = [eng.events for eng in self.replicas
+                if getattr(eng, "events", None) is not None]
+        if not logs:
+            return None
+        from repro.metrics.events import EventLog
+        return EventLog.merge_all(logs)
 
 
 def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
                 n_replicas: int = 2, seed: int = 0,
                 predictor_factory=None, size_predictor=None,
+                record_events: bool = False,
+                backlog_unit: str = "tokens",
                 **engine_kwargs) -> ClusterStats:
     """Serve ``requests`` on an N-replica cluster (the `run_policy` twin).
 
@@ -255,22 +295,30 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
             ``jspw`` policy. Defaults to a fresh `OraclePredictor` on a
             dedicated seed (sim mode's stand-in for the paper's
             prompt-phase probe); pass a `ProbePredictor` in real mode.
+        record_events: give each replica a metrics-layer `EventLog`; the
+            merged stream lands in ``ClusterStats.event_log``.
+        backlog_unit: ``tokens`` | ``seconds`` — see `RouterConfig`.
         **engine_kwargs: forwarded to `EngineConfig` (policy, c_limit,
             max_batch, mem_budget, kv_layout, ...).
 
     Returns:
         The aggregated `ClusterStats`.
     """
+    if record_events:
+        from repro.metrics.events import EventLog
     replicas = []
     for i in range(n_replicas):
         ecfg = EngineConfig(seed=seed + i, **engine_kwargs)
         pred = predictor_factory(i) if predictor_factory else None
-        replicas.append(Engine(cfg, ecfg, predictor=pred))
+        replicas.append(Engine(cfg, ecfg, predictor=pred,
+                               event_log=EventLog() if record_events
+                               else None))
     if size_predictor is None and router_policy in ("jspw",
                                                     "prefix-affinity"):
         from repro.serving.predictors import OraclePredictor
         size_predictor = OraclePredictor(cfg.probe, seed=seed + 4242)
     router = Router(replicas, RouterConfig(n_replicas=n_replicas,
-                                           policy=router_policy, seed=seed),
+                                           policy=router_policy, seed=seed,
+                                           backlog_unit=backlog_unit),
                     size_predictor=size_predictor)
     return router.run(copy.deepcopy(requests))

@@ -48,6 +48,7 @@ _CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
 
 
 def shape_bytes(dtype: str, dims: str) -> int:
+    """Byte size of one HLO shape literal (dtype + comma-joined dims)."""
     n = 1
     for d in dims.split(","):
         if d:
@@ -101,6 +102,7 @@ def parse_collectives(hlo_text: str) -> dict[str, float]:
     memo: dict[str, dict[str, float]] = {}
 
     def total(name: str, depth=0) -> dict[str, float]:
+        """Trip-count-scaled collective bytes of one computation subtree."""
         if name in memo or depth > 32 or name not in comps:
             return memo.get(name, {})
         out = dict(comps[name]["coll"])
@@ -181,6 +183,8 @@ def model_bytes_estimate(cfg: ModelConfig, shape: InputShape,
 
 @dataclass
 class Roofline:
+    """Per-device roofline terms extracted from one compiled case."""
+
     flops_per_device: float           # raw HLO (while bodies counted once)
     bytes_per_device: float           # raw HLO
     collective_bytes: float           # trip-count-scaled, per device
@@ -196,22 +200,27 @@ class Roofline:
 
     @property
     def memory_s(self) -> float:
+        """Analytic HBM seconds/step/device."""
         return self.model_bytes_per_device / HBM_BW
 
     @property
     def collective_s(self) -> float:
+        """ICI seconds/step/device (trip-count-scaled collective bytes)."""
         return self.collective_bytes / ICI_BW
 
     @property
     def hlo_compute_s(self) -> float:
+        """Raw-HLO compute seconds (while bodies counted once)."""
         return self.flops_per_device / PEAK_FLOPS
 
     @property
     def hlo_memory_s(self) -> float:
+        """Raw-HLO memory seconds (while bodies counted once)."""
         return self.bytes_per_device / HBM_BW
 
     @property
     def bottleneck(self) -> str:
+        """The dominating roofline term: compute | memory | collective."""
         terms = {"compute": self.compute_s,
                  "memory": max(self.memory_s, self.hlo_memory_s),
                  "collective": self.collective_s}
@@ -225,6 +234,7 @@ class Roofline:
         return self.model_flops / total if total else 0.0
 
     def as_dict(self) -> dict:
+        """JSON-friendly report form (dry-run artifact `roofline` key)."""
         return {
             "flops_per_device_hlo_raw": self.flops_per_device,
             "bytes_per_device_hlo_raw": self.bytes_per_device,

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST precede every other import: jax locks the device count on first
-#   init, and the production meshes below need 512 placeholder host devices.
 """Multi-pod dry run: lower + compile every (architecture x input shape) on
 the production meshes, print memory/cost analysis, extract roofline terms.
 
@@ -12,6 +8,11 @@ the production meshes, print memory/cost analysis, extract roofline terms.
 Results are appended as JSON files under experiments/dryrun/ and summarized
 in EXPERIMENTS.md section Dry-run / section Roofline.
 """
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede the jax import: jax locks the device count on first
+#   init, and the production meshes below need 512 placeholder host devices.
 
 import argparse
 import json
@@ -33,6 +34,8 @@ from repro.models.model import build_model
 def lower_case(arch: str, shape_name: str, multi_pod: bool,
                donate: bool = True, kv_shard: str | None = None,
                kv_quant: bool = False) -> dict:
+    """Lower + compile one (arch, input-shape) case; return its report dict
+    (memory analysis, collective bytes, roofline terms, timings)."""
     cfg = get_config(arch)
     if kv_quant:
         import dataclasses
@@ -76,6 +79,7 @@ def lower_case(arch: str, shape_name: str, multi_pod: bool,
         fr_keys = [k for k in keys if k != "tokens"]
 
         def step(params, cache, tokens, *fr):
+            """Positional-frontend adapter for jit in_shardings."""
             kw = dict(zip(fr_keys, fr))
             return base_step(params, cache, tokens, **kw)
         jf = jax.jit(step, in_shardings=(
@@ -137,6 +141,7 @@ def lower_case(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main():
+    """CLI entry: run the selected (or all) dry-run cases and save JSON."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default=None)
     ap.add_argument("--shape", choices=list(INPUT_SHAPES), default=None)

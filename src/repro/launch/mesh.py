@@ -27,6 +27,7 @@ def _axis_type_kwargs(n_axes: int) -> dict:
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The (data, model) single-pod or (pod, data, model) multi-pod mesh."""
     shape = MULTI_POD if multi_pod else SINGLE_POD
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = 1
@@ -54,4 +55,5 @@ def data_axes(mesh) -> tuple[str, ...]:
 
 
 def n_chips(mesh) -> int:
+    """Total device count of a mesh."""
     return mesh.devices.size

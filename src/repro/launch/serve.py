@@ -15,6 +15,11 @@ workload.
     # real end-to-end on a CPU-sized model (trains briefly first)
     PYTHONPATH=src python -m repro.launch.serve --arch trail-llama \
         --smoke --real --policy trail --n 16
+
+    # replay the bundled Azure-style trace at 2x its native rate and
+    # write the full percentile/SLO metrics report
+    PYTHONPATH=src python -m repro.launch.serve --trace sample \
+        --rate-scale 2.0 --compute-bound --metrics-out metrics.json
 """
 
 from __future__ import annotations
@@ -32,17 +37,35 @@ from repro.serving.workload import (SCENARIOS, WorkloadConfig, generate,
 
 
 def main():
+    """Parse CLI flags, build the workload, and run the engine/cluster."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b",
                     choices=ARCH_IDS + ("trail-llama",))
     ap.add_argument("--policy", default="trail", choices=POLICIES)
     ap.add_argument("--c", type=float, default=0.8)
-    ap.add_argument("--rate", type=float, default=14.0,
-                    help="aggregate request rate (req/s)")
-    ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="aggregate request rate (req/s; default 14, or "
+                         "the trace's native rate with --trace)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="request count (synthetic default: 300); with "
+                         "--trace: cap on replayed records (default: the "
+                         "whole trace)")
     ap.add_argument("--burst", action="store_true")
     ap.add_argument("--scenario", default=None, choices=sorted(SCENARIOS),
                     help="named workload scenario preset")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="replay a recorded trace (.jsonl/.csv, or "
+                         "'sample' for the bundled Azure-style fixture) "
+                         "instead of a synthetic scenario; --rate sets "
+                         "the target mean arrival rate (0 = native)")
+    ap.add_argument("--rate-scale", type=float, default=None,
+                    help="trace replay: multiply the native arrival rate "
+                         "(overrides the --rate-derived scale)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="capture the per-request event stream and write "
+                         "the rollup (TTFT/TBT/completion percentiles + "
+                         "SLO attainment) as JSON; also prints the "
+                         "markdown table")
     ap.add_argument("--max-batch", type=int, default=16)
     ap.add_argument("--mem-gb", type=float, default=0.0,
                     help="KV memory budget (0 = unlimited)")
@@ -69,6 +92,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    rate = 14.0 if args.rate is None else args.rate
     # real mode shrinks lengths to CPU scale; with a --scenario preset the
     # arrival process is kept and only the length mix is downsized. The
     # tenant mix is dropped at this scale, so --prefix-cache keeps a small
@@ -78,17 +102,45 @@ def main():
                       tenants=())
     if args.prefix_cache:
         real_sizes.update(prefix_len=16, split_streams=True)
-    if args.scenario:
-        wc = scenario_config(args.scenario, n_requests=args.n,
-                             request_rate=args.rate, seed=args.seed,
+    if args.rate_scale is not None:
+        if not args.trace:
+            raise SystemExit("--rate-scale only applies to --trace replay "
+                             "(use --rate for synthetic scenarios)")
+        if args.rate_scale <= 0:
+            raise SystemExit("--rate-scale must be positive")
+    if args.trace:
+        if args.real:
+            raise SystemExit("--trace replay is sim-only (trace lengths "
+                             "exceed CPU-sized device pools)")
+        if args.scenario or args.burst:
+            raise SystemExit("--trace conflicts with --scenario/--burst: "
+                             "a trace supplies its own arrivals and "
+                             "lengths")
+        overrides = ({"trace_rate_scale": args.rate_scale}
+                     if args.rate_scale is not None else {})
+        # --n caps the replay; None/0 = the whole trace, never a silent
+        # truncation to the synthetic default
+        wc = scenario_config(f"trace:{args.trace}",
+                             n_requests=args.n or 0,
+                             request_rate=args.rate or 0.0, seed=args.seed,
+                             vocab=cfg.vocab_size, **overrides)
+    elif args.scenario:
+        wc = scenario_config(args.scenario, n_requests=args.n or 300,
+                             request_rate=rate, seed=args.seed,
                              vocab=cfg.vocab_size,
                              **(real_sizes if args.real else {}))
     else:
-        wc = WorkloadConfig(n_requests=args.n, request_rate=args.rate,
+        wc = WorkloadConfig(n_requests=args.n or 300, request_rate=rate,
                             burst=args.burst, vocab=cfg.vocab_size,
                             seed=args.seed,
                             **(real_sizes if args.real else {}))
     reqs = generate(wc)
+    if args.trace:
+        # report the replayed stream's actual mean rate, not the
+        # synthetic default (native trace rate x whatever scaling
+        # applied); 0.0 = undefined (single request / zero span)
+        span = (reqs[-1].arrival - reqs[0].arrival) if len(reqs) > 1 else 0.0
+        rate = (len(reqs) - 1) / span if span > 0 else 0.0
     hardware = (HardwareSpec(name="compute-bound-2tf", peak_flops=2e12,
                              hbm_bw=819e9, overhead_s=2e-4)
                 if args.compute_bound else HardwareSpec())
@@ -103,11 +155,16 @@ def main():
             n_replicas=args.replicas, policy=args.policy,
             c_limit=args.c, max_batch=args.max_batch,
             mem_budget=mem_budget, hardware=hardware, seed=args.seed,
-            kv_layout=kv_layout, prefix_cache=args.prefix_cache)
+            kv_layout=kv_layout, prefix_cache=args.prefix_cache,
+            record_events=bool(args.metrics_out))
         print(json.dumps({"arch": cfg.name, "policy": args.policy,
                           "router": args.router, "replicas": args.replicas,
-                          "scenario": args.scenario or "poisson",
-                          "rate": args.rate, **stats.summary()}, indent=1))
+                          "scenario": (f"trace:{args.trace}" if args.trace
+                                       else args.scenario or "poisson"),
+                          "rate": rate, **stats.summary()}, indent=1))
+        if args.metrics_out:
+            _write_metrics(args.metrics_out, stats.event_log, cfg,
+                           hardware, reqs, kv_layout=kv_layout)
         return
 
     model = params = None
@@ -123,16 +180,47 @@ def main():
                                    embed_table=params["embed"])
         mode = "real"
 
+    event_log = None
+    if args.metrics_out:
+        from repro.metrics import EventLog
+        event_log = EventLog()
     stats = run_policy(
         cfg, args.policy, reqs, c_limit=args.c, max_batch=args.max_batch,
         mem_budget=mem_budget, mode=mode, predictor=predictor, model=model,
         params=params, hardware=hardware, seed=args.seed,
-        kv_layout=kv_layout, prefix_cache=args.prefix_cache)
+        kv_layout=kv_layout, prefix_cache=args.prefix_cache,
+        event_log=event_log)
     print(json.dumps({"arch": cfg.name, "policy": args.policy,
-                      "c": args.c, "rate": args.rate,
-                      "scenario": args.scenario or
-                      ("burst" if args.burst else "poisson"),
+                      "c": args.c, "rate": rate,
+                      "scenario": (f"trace:{args.trace}" if args.trace
+                                   else args.scenario or
+                                   ("burst" if args.burst else "poisson")),
                       **stats.summary()}, indent=1))
+    if args.metrics_out:
+        _write_metrics(args.metrics_out, event_log, cfg, hardware, reqs,
+                       kv_layout=kv_layout)
+
+
+def _write_metrics(path: str, event_log, cfg, hardware, reqs,
+                   kv_layout: str = "contig"):
+    """Roll the captured event stream up and write/print the report.
+
+    The slowdown denominator must come from the same cost regime that
+    drove the engine's clock, so a paged engine gets a paged CostModel
+    (page-granular cache streaming) — otherwise slowdowns would divide
+    paged-clock completions by contiguous-clock ideals.
+    """
+    from repro.metrics import (ideal_service_times, report_json,
+                               report_markdown, rollup)
+    from repro.serving.costmodel import CostModel
+    from repro.serving.engine import EngineConfig
+    page = EngineConfig().page_size if kv_layout == "paged" else 0
+    service = ideal_service_times(CostModel(cfg, hardware, page_size=page),
+                                  reqs)
+    report = rollup(event_log, service_times=service)
+    with open(path, "w") as f:
+        f.write(report_json(report))
+    print(report_markdown(report, title=f"metrics -> {path}"))
 
 
 if __name__ == "__main__":

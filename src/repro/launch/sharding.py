@@ -80,9 +80,11 @@ def _param_rule(path: tuple[str, ...], ndim: int, dp, shape=(),
 
 
 def param_specs(params_sds, mesh):
+    """PartitionSpec tree for a parameter pytree (TP + FSDP rules)."""
     dp = data_axes(mesh)
 
     def spec(path, leaf):
+        """Clamped spec for one parameter leaf."""
         names = tuple(_key_name(k) for k in path)
         shape = leaf.shape
         want = _param_rule(names, leaf.ndim, dp, shape=shape, mesh=mesh)
@@ -108,9 +110,11 @@ def _key_name(k) -> str:
 # ---------------------------------------------------------------------------
 
 def batch_specs(batch_sds, mesh):
+    """PartitionSpec tree for batch inputs (batch dim over data axes)."""
     dp = data_axes(mesh)
 
     def spec(path, leaf):
+        """Batch-dim-over-data spec for one input leaf."""
         return _spec_for(leaf.shape, mesh, (dp,))
     return jax.tree_util.tree_map_with_path(spec, batch_sds)
 
@@ -124,11 +128,13 @@ KV_SHARD = "seq"
 
 
 def cache_specs(cache_sds, mesh, kv_shard: str | None = None):
+    """PartitionSpec tree for KV/SSM caches (see `KV_SHARD` narrow-KH modes)."""
     dp = data_axes(mesh)
     kv_shard = kv_shard or KV_SHARD
     seq_mode = kv_shard == "seq"
 
     def spec(path, leaf):
+        """Per-cache-leaf spec (kv-heads / seq / head_dim over model)."""
         names = tuple(_key_name(k) for k in path)
         name = names[-1]
         if name == "lengths":
@@ -164,6 +170,7 @@ def opt_specs(opt_sds, pspecs):
 
 
 def to_shardings(spec_tree, mesh):
+    """Bind a PartitionSpec tree to a mesh as NamedShardings."""
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s),
         spec_tree,

@@ -19,6 +19,7 @@ from repro.training.train import make_train_step
 
 
 def make_serve_step(model: Model):
+    """The fused decode+probe serving step (Section 3.2 overlap trick)."""
     cfg = model.cfg
     T = jnp.asarray(transition_matrix(cfg.probe), jnp.float32)
 
@@ -39,12 +40,15 @@ def make_serve_step(model: Model):
 
 
 def make_prefill_step(model: Model):
+    """A chunked-prefill step bound to one model."""
     def prefill_step(params, cache, tokens, **frontend):
+        """Prefill one token chunk into the cache."""
         return model.prefill_chunk(params, cache, tokens, **frontend)
     return prefill_step
 
 
 def default_opt_config(cfg: ModelConfig) -> opt_mod.AdamWConfig:
+    """Production AdamW defaults, sized to the arch's parameter count."""
     # bf16 moments on the giant MoE keep master+moments inside v5e HBM
     moment_dtype = "bfloat16" if cfg.param_count() > 1e11 else "float32"
     return opt_mod.AdamWConfig(lr=3e-4, warmup_steps=200, total_steps=20000,
@@ -52,6 +56,7 @@ def default_opt_config(cfg: ModelConfig) -> opt_mod.AdamWConfig:
 
 
 def make_train_step_for(model: Model):
+    """A train step bound to the model with its default optimizer config."""
     return make_train_step(model, default_opt_config(model.cfg))
 
 

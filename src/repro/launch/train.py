@@ -24,6 +24,7 @@ from repro.training.train import train_lm
 
 
 def main():
+    """CLI entry: train the chosen arch and optionally save a checkpoint."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="trail-llama",
                     choices=ARCH_IDS + ("trail-llama",))

@@ -124,3 +124,29 @@ class CostModel:
             mem += self._cache_bytes(prefill_ctx)
         t = max(flops / self.hw.peak_flops, mem / self.hw.hbm_bw)
         return t + self.hw.overhead_s
+
+    def decode_token_rate(self, ctx: int = 256) -> float:
+        """Steady-state decode tokens/s of one lone row at context ``ctx``.
+
+        The per-replica service-rate normalizer for the router's
+        seconds-unit backlog (`Engine.backlog_seconds`): predicted
+        remaining *tokens* divide by this to become estimated seconds.
+        One fixed reference context keeps the conversion strictly
+        monotone in tokens — identical replicas rank identically in
+        either unit, while heterogeneous hardware specs (the roadmap
+        item this preps) scale by their true relative speed.
+        """
+        return 1.0 / self.iteration_time([ctx])
+
+    def ideal_service_time(self, prompt_len: int, out_len: int) -> float:
+        """Isolated completion time for one request on an empty engine.
+
+        A single megastep evaluation: the whole prompt prefilled in one
+        chunk plus all ``out_len`` decode tokens, overhead paid once —
+        the denominator of the metrics layer's *slowdown* distribution
+        (observed completion ÷ this).
+        """
+        ctx0 = max(prompt_len, 1)
+        return self.megastep_time([ctx0 + 1], [max(out_len, 1)],
+                                  prefill_tokens=max(prompt_len - 1, 0),
+                                  prefill_ctx=ctx0)

@@ -166,17 +166,21 @@ class StepResult:
             — the routing-under-memory-pressure signal: dispatching a
             long-context arrival to a replica near its budget triggers
             avoidable preemptions, so `jspw` tie-breaks on it.
+        events: the metrics-layer `Event`s this step emitted (arrival /
+            admit / first-token / tokens / finish / preempt / swap);
+            empty unless the engine was built with an ``event_log``.
     """
 
-    __slots__ = ("completed", "now", "ran", "kv_headroom",
+    __slots__ = ("completed", "now", "ran", "kv_headroom", "events",
                  "_backlog_fn", "_backlog")
 
     def __init__(self, completed=None, now=0.0, ran=False, backlog_fn=None,
-                 kv_headroom=1.0):
+                 kv_headroom=1.0, events=()):
         self.completed = completed if completed is not None else []
         self.now = now
         self.ran = ran
         self.kv_headroom = kv_headroom
+        self.events = list(events)
         self._backlog_fn = backlog_fn
         self._backlog = None
 
@@ -203,9 +207,25 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
                  predictor: PredictorBase | None = None,
-                 model=None, params=None):
+                 model=None, params=None, event_log=None):
+        """Build one engine.
+
+        Args:
+            cfg: the model/architecture configuration it serves.
+            ecfg: engine knobs (see `EngineConfig`).
+            predictor: remaining-length predictor; defaults to the
+                sim-mode `OraclePredictor`.
+            model: the JAX model (real mode only).
+            params: its parameters (real mode only).
+            event_log: optional `repro.metrics.EventLog`; when given the
+                engine records per-request lifecycle events (arrival /
+                admit / first-token / tokens / finish / preempt / swap)
+                into it during ``step()``. Pure observation — results
+                are byte-identical with or without a log.
+        """
         self.cfg = cfg
         self.ecfg = ecfg
+        self.events = event_log
         self.predictor = predictor or OraclePredictor(cfg.probe,
                                                       seed=ecfg.seed)
         self.paged = ecfg.kv_layout == "paged"
@@ -279,6 +299,7 @@ class Engine:
                                        prefix_cache=self.prefix_cache,
                                        reusable_cap=cap)
         self._rng = np.random.default_rng(ecfg.seed)
+        self._token_rate = None     # lazy decode_token_rate() cache
         self._reset_stream()
 
     def _reset_stream(self):
@@ -296,6 +317,8 @@ class Engine:
         self._hint_gen: dict[int, int] = {}     # index_gen the hint saw
         self._last_mem = 0                      # bytes at last step end
         self._wall0 = time.perf_counter()
+        if self.events is not None:
+            self.events.clear()
 
     def _bytes_for(self, context_len: int) -> int:
         if self.paged:
@@ -394,6 +417,24 @@ class Engine:
             tot += len(req.prompt) + min(prior, cap)
         return tot
 
+    def backlog_seconds(self, truncate: float | None = None) -> float:
+        """`backlog()` normalized into estimated seconds of replica work.
+
+        Predicted remaining tokens divide by this replica's decode rate
+        (`CostModel.decode_token_rate`, a function of its `HardwareSpec`)
+        — the unit the router needs once replicas stop being identical:
+        5k tokens queued on a 2x-faster replica is *less* wait, which a
+        token-count comparison cannot see. ``truncate`` stays in tokens
+        (the arrival's size estimate), applied before conversion. With
+        identical replicas the conversion is one shared positive scale,
+        so `jspw` dispatch decisions are unchanged — the router's
+        ``backlog_unit="seconds"`` flag relies on exactly that.
+        """
+        rate = self._token_rate
+        if rate is None:
+            rate = self._token_rate = self.cost.decode_token_rate()
+        return self.backlog(truncate=truncate) / rate
+
     def cached_prefix_tokens(self, prompt) -> int:
         """Longest prompt prefix (tokens) resident in this engine's KV
         prefix cache — the router's ``prefix-affinity`` signal. Zero when
@@ -433,6 +474,8 @@ class Engine:
             self._pool_reqs[req.rid] = req
             self._entries[req.rid] = req.entry
             self._p_idx += 1
+            if self.events is not None:
+                self.events.emit(req.arrival, req.rid, "arrival")
 
     def step(self) -> StepResult:
         """Execute one engine iteration (one megastep) and return it.
@@ -447,6 +490,8 @@ class Engine:
         pool_reqs = self._pool_reqs
         entries = self._entries
         now = self._now
+        ev = self.events
+        ev_mark = len(ev) if ev is not None else 0
 
         self._admit_arrivals(now)
         live = [r for r in pool_reqs.values() if not r.done]
@@ -455,7 +500,9 @@ class Engine:
                 # idle: jump to next arrival
                 self._now = self._pending[self._p_idx].arrival
             return StepResult(now=self._now, backlog_fn=self.backlog,
-                              kv_headroom=self.kv_headroom())
+                              kv_headroom=self.kv_headroom(),
+                              events=ev.events[ev_mark:] if ev is not None
+                              else ())
 
         # admission charges each candidate's bytes at the END of the
         # upcoming megastep (context + k), so a k-token megastep can
@@ -494,7 +541,9 @@ class Engine:
             if self._p_idx < len(self._pending):
                 self._now = max(now, self._pending[self._p_idx].arrival)
                 return StepResult(now=self._now, backlog_fn=self.backlog,
-                                  kv_headroom=self.kv_headroom())
+                                  kv_headroom=self.kv_headroom(),
+                                  events=ev.events[ev_mark:]
+                                  if ev is not None else ())
             raise RuntimeError(
                 "scheduler deadlock: nothing fits the memory budget")
         stats.peak_batch = max(stats.peak_batch, len(sched))
@@ -569,6 +618,10 @@ class Engine:
             r.entry.age += n
             if r.first_token_time < 0 and n > 0:
                 r.first_token_time = now_next
+                if ev is not None:
+                    ev.emit(now_next, r.rid, "first_token")
+            if ev is not None and n > 0:
+                ev.emit(now_next, r.rid, "tokens", n)
             if (len(r.generated) >= r.true_out_len
                     or len(r.generated) >= r.max_new_tokens):
                 r.entry.state = ReqState.FINISHED
@@ -576,6 +629,8 @@ class Engine:
                 stats.latencies.append(r.latency())
                 stats.ttfts.append(r.ttft())
                 completed.append(r)
+                if ev is not None:
+                    ev.emit(now_next, r.rid, "finish")
                 if self.prefix_cache:
                     # publish the finished request's prompt pages before
                     # release parks them in the reusable pool
@@ -636,7 +691,9 @@ class Engine:
                           else time.perf_counter() - self._wall0)
         return StepResult(completed=completed, now=self._now,
                           backlog_fn=self.backlog, ran=True,
-                          kv_headroom=self.kv_headroom())
+                          kv_headroom=self.kv_headroom(),
+                          events=ev.events[ev_mark:] if ev is not None
+                          else ())
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request]) -> EngineStats:
@@ -663,6 +720,9 @@ class Engine:
             req.entry.state = ReqState.PREEMPTED
             req.entry.preemptions += 1
             stats.n_preemptions += 1
+            if self.events is not None:
+                self.events.emit(self._now, rid, "preempt",
+                                 req.entry.preemptions)
             if self._retain:
                 # paged: pages stay resident ("suspended"); the reclamation
                 # loop evicts/swaps them tail-first only under real memory
@@ -680,6 +740,8 @@ class Engine:
                 stats.swapped_bytes += nbytes
                 self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
                 req._swapped = True
+                if self.events is not None:
+                    self.events.emit(self._now, rid, "swap", nbytes)
                 if self.blocks is not None:
                     # the whole cache is on host now; its device pages are
                     # free (swap-in is charged once at re-admission)
@@ -719,6 +781,8 @@ class Engine:
             req = pool_reqs[rid]
             was_preempted = req.entry.state is ReqState.PREEMPTED
             req.entry.state = ReqState.RUNNING
+            if self.events is not None:
+                self.events.emit(self._now, rid, "admit")
             if (self.prefix_cache and not was_preempted
                     and req.entry.prefill_done == 0
                     and not self.blocks.pages.get(rid)):
@@ -730,6 +794,8 @@ class Engine:
                     stats.prefix_hit_tokens += hit
                     req.entry.prefill_done = hit
                     req._kv_written = hit
+                    if self.events is not None:
+                        self.events.emit(self._now, rid, "prefix_hit", hit)
                 self._prefix_hint.pop(rid, None)
                 self._hint_gen.pop(rid, None)
                 self._sync_prefill_left(req)
@@ -738,6 +804,8 @@ class Engine:
                 stats.swapped_bytes += nbytes
                 self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
                 req._swapped = False
+                if self.events is not None:
+                    self.events.emit(self._now, rid, "swap", nbytes)
             if self._retain and was_preempted:
                 n_host = self.blocks.host_pages.get(rid, 0)
                 if n_host:                          # page-granular swap-in
@@ -745,6 +813,8 @@ class Engine:
                     stats.swapped_bytes += nbytes
                     self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
                     self.blocks.swap_in(rid)
+                    if self.events is not None:
+                        self.events.emit(self._now, rid, "swap", nbytes)
                 # copy-on-admit: retained prefix re-links (block-table
                 # write); only the evicted tail is ever recomputed
                 retained = min(self.blocks.resume(rid),
@@ -809,6 +879,9 @@ class Engine:
                     nbytes = len(freed) * self._page_bytes
                     stats.swapped_bytes += nbytes
                     self._swap_pending_s += nbytes / self.ecfg.hardware.dma_bw
+                    if self.events is not None:
+                        self.events.emit(self._now, victim.rid, "swap",
+                                         nbytes)
             elif self.pool is not None:
                 freed = self.pool.evict_tail(victim.rid, n_pages)
             else:
@@ -966,9 +1039,11 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                hardware: HardwareSpec | None = None, seed=0,
                probe_interval=1, oom_mode="discard", kv_layout="contig",
                page_size=16, max_len=1024,
-               prefix_cache=False) -> EngineStats:
+               prefix_cache=False, event_log=None) -> EngineStats:
     """One-shot convenience: build an `Engine` and run a (deep-copied)
-    request trace under the given policy, returning its `EngineStats`."""
+    request trace under the given policy, returning its `EngineStats`.
+    Pass a `repro.metrics.EventLog` as ``event_log`` to capture the
+    per-request event stream alongside."""
     ecfg = EngineConfig(policy=policy, c_limit=c_limit, max_batch=max_batch,
                         mem_budget=mem_budget, mode=mode, seed=seed,
                         probe_interval=probe_interval, oom_mode=oom_mode,
@@ -977,5 +1052,6 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                         hardware=hardware or HardwareSpec())
     import copy
     reqs = copy.deepcopy(requests)
-    eng = Engine(cfg, ecfg, predictor=predictor, model=model, params=params)
+    eng = Engine(cfg, ecfg, predictor=predictor, model=model, params=params,
+                 event_log=event_log)
     return eng.run(reqs)

@@ -20,7 +20,11 @@ Arrival processes:
 
 Named presets combining arrivals with length mixes live in ``SCENARIOS``
 and are built with `scenario_config` — reachable from ``launch/serve.py
---scenario`` and ``benchmarks/cluster_curves.py``.
+--scenario`` and ``benchmarks/cluster_curves.py``. Recorded traces are a
+scenario source too: ``scenario_config("trace:<path>", ...)`` (or
+``trace:sample`` for the bundled fixture) replays arrivals and
+prompt/output lengths from an Azure-LLM-inference-style trace through
+``repro.traces`` instead of synthesizing them.
 
 RNG streams: historically one ``random.Random(seed)`` drove arrivals,
 lengths, *and* prompt-token content, so any arrival-process change
@@ -111,6 +115,21 @@ class WorkloadConfig:
             random prefix of the same length (so footprints match but the
             KV cache cannot serve it) — the hit-rate dial for prefix-cache
             benchmarks.
+        trace: replay a recorded trace instead of synthesizing arrivals
+            and lengths: a ``.jsonl``/``.csv`` path, or ``sample`` for
+            the bundled Azure-style fixture (see ``repro.traces``).
+            When set, ``n_requests`` caps the replayed records, ``seed``
+            and ``vocab`` drive prompt token content, and the arrival /
+            length knobs above are ignored (they come from the trace).
+        trace_rate_scale: arrival-rate multiplier for trace replay
+            (inter-arrival gaps divide by it; burst structure is kept).
+        trace_target_rate: when positive, replay at this mean arrival
+            rate (req/s): the rate-scale is derived from the loaded
+            trace's native rate at generation time. Ignored when a
+            non-default ``trace_rate_scale`` is set — an explicit scale
+            wins.
+        trace_time_warp: uniform playback-speed multiplier for trace
+            replay (see `repro.traces.ReplayConfig`).
     """
 
     n_requests: int = 256
@@ -134,6 +153,10 @@ class WorkloadConfig:
     tenants: tuple = ()
     prefix_len: int = 0
     prefix_hit: float = 1.0
+    trace: str = ""
+    trace_rate_scale: float = 1.0
+    trace_target_rate: float = 0.0
+    trace_time_warp: float = 1.0
 
 
 def sample_output_length(rng: random.Random, wc,
@@ -259,6 +282,8 @@ def generate(wc: WorkloadConfig) -> list[Request]:
     ``content`` — so the job-size sequence is invariant under
     ``request_rate`` (and arrival-process) changes.
     """
+    if wc.trace:
+        return _generate_from_trace(wc)
     arrival = "burst" if wc.burst else wc.arrival
     if arrival not in ("poisson", "burst", "mmpp", "diurnal"):
         raise ValueError(f"unknown arrival process {wc.arrival!r}")
@@ -317,6 +342,27 @@ def generate(wc: WorkloadConfig) -> list[Request]:
     return reqs
 
 
+def _generate_from_trace(wc: WorkloadConfig) -> list[Request]:
+    """Trace-backed generation: load + replay-materialize (lazy import so
+    the workload module stays importable without the traces package).
+
+    The trace is parsed exactly once; a ``trace_target_rate`` converts
+    into a rate-scale against the loaded trace's native mean rate here,
+    unless an explicit non-default ``trace_rate_scale`` was given.
+    """
+    from repro.traces import ReplayConfig, load_trace, requests_from_trace
+    trace = load_trace(wc.trace, limit=wc.n_requests or None)
+    scale = wc.trace_rate_scale
+    if wc.trace_target_rate > 0 and scale == 1.0 and trace.mean_rate > 0:
+        scale = wc.trace_target_rate / trace.mean_rate
+    rcfg = ReplayConfig(rate_scale=scale,
+                        time_warp=wc.trace_time_warp,
+                        limit=wc.n_requests or None,
+                        max_output=wc.max_out, seed=wc.seed,
+                        vocab=wc.vocab)
+    return requests_from_trace(trace, rcfg)
+
+
 # ---------------------------------------------------------------------------
 # scenario library
 # ---------------------------------------------------------------------------
@@ -368,8 +414,15 @@ def scenario_config(name: str, *, n_requests: int, request_rate: float,
     """Build the `WorkloadConfig` for a named scenario preset.
 
     Args:
-        name: a key of ``SCENARIOS``.
-        n_requests: number of requests.
+        name: a key of ``SCENARIOS``, or a trace source of the form
+            ``trace:<path>`` (``trace:sample`` replays the bundled
+            Azure-style fixture). Trace sources take their arrivals and
+            lengths from the trace itself; ``request_rate``, when
+            positive, is interpreted as a target mean arrival rate and
+            converted into the replay rate-scale (pass
+            ``trace_rate_scale=...`` explicitly to override, with
+            ``request_rate=0`` replaying the native rate).
+        n_requests: number of requests (for traces: a replay cap).
         request_rate: long-run mean arrival rate (req/s).
         seed: master RNG seed.
         vocab: vocabulary size for prompt content.
@@ -378,9 +431,21 @@ def scenario_config(name: str, *, n_requests: int, request_rate: float,
     Returns:
         A frozen `WorkloadConfig` with ``split_streams=True``.
     """
+    if name.startswith("trace:"):
+        source = name[len("trace:"):] or "sample"
+        # the rate target resolves against the trace's native rate at
+        # generation time (one parse), unless an explicit scale override
+        # is given — see WorkloadConfig.trace_target_rate
+        target = (request_rate
+                  if "trace_rate_scale" not in overrides else 0.0)
+        wc = WorkloadConfig(n_requests=n_requests,
+                            request_rate=request_rate, seed=seed,
+                            vocab=vocab, split_streams=True, trace=source,
+                            trace_target_rate=target)
+        return replace(wc, **overrides) if overrides else wc
     if name not in SCENARIOS:
         raise ValueError(f"unknown scenario {name!r}; "
-                         f"choose from {sorted(SCENARIOS)}")
+                         f"choose from {sorted(SCENARIOS)} or 'trace:<path>'")
     wc = WorkloadConfig(n_requests=n_requests, request_rate=request_rate,
                         seed=seed, vocab=vocab, split_streams=True,
                         **SCENARIOS[name])

@@ -1,0 +1,36 @@
+"""Trace ingestion, synthesis, and open-loop replay.
+
+The evaluation path the paper's distributional claims need: load (or
+synthesize) an Azure-LLM-inference-style request trace, rescale it with
+time-warp/rate-scale knobs, and replay it open-loop into an `Engine` or
+cluster `Router` while the metrics layer (`repro.metrics`) captures
+per-request events. See ``docs/ARCHITECTURE.md`` § Trace-driven
+evaluation.
+"""
+
+from repro.traces.loaders import (load_csv, load_jsonl, load_trace,
+                                  sample_trace_path, save_jsonl)
+from repro.traces.replay import ReplayConfig, replay, requests_from_trace
+from repro.traces.schema import Trace, TraceRecord, normalize
+from repro.traces.synthesis import (SAMPLE_CONFIG, SynthesisConfig,
+                                    TenantTraceSpec, sample_trace,
+                                    synthesize)
+
+__all__ = [
+    "Trace",
+    "TraceRecord",
+    "normalize",
+    "load_csv",
+    "load_jsonl",
+    "load_trace",
+    "sample_trace_path",
+    "save_jsonl",
+    "ReplayConfig",
+    "replay",
+    "requests_from_trace",
+    "SynthesisConfig",
+    "TenantTraceSpec",
+    "SAMPLE_CONFIG",
+    "sample_trace",
+    "synthesize",
+]

@@ -1,0 +1,297 @@
+"""Trace subsystem tests: loader normalization, synthesis correlation,
+the bundled-fixture byte pin, replay determinism, and the open-loop
+driver's equivalence with the engine's batch API."""
+
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.metrics import EventLog, report_json, rollup
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig
+from repro.traces import (ReplayConfig, SAMPLE_CONFIG, SynthesisConfig,
+                          TenantTraceSpec, load_csv, load_jsonl, load_trace,
+                          normalize, replay, requests_from_trace,
+                          sample_trace, sample_trace_path, save_jsonl,
+                          synthesize)
+from repro.traces.schema import TraceRecord
+
+CFG = get_config("granite-3-8b")
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  overhead_s=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# loaders + schema
+# ---------------------------------------------------------------------------
+
+def test_jsonl_loader_flexible_keys(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text(
+        '{"ts": 5.0, "context_tokens": 10, "generated_tokens": 4}\n'
+        '\n'    # blank lines tolerated
+        '{"TIMESTAMP": 2.5, "ContextTokens": 7, "GeneratedTokens": 3,'
+        ' "tenant": "chat"}\n')
+    tr = load_jsonl(str(p))
+    # sorted by arrival and rebased to zero
+    assert [r.arrival for r in tr.records] == [0.0, 2.5]
+    assert tr.records[0].tenant == "chat"
+    assert tr.records[1].prompt_tokens == 10
+
+
+def test_csv_loader_azure_columns_and_iso_timestamps(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("TIMESTAMP,ContextTokens,GeneratedTokens\n"
+                 "2023-11-16T18:00:01,100,20\n"
+                 "2023-11-16T18:00:00,50,0\n")     # zero output clamped
+    tr = load_csv(str(p))
+    assert [r.arrival for r in tr.records] == [0.0, 1.0]
+    assert tr.records[0].prompt_tokens == 50
+    assert tr.records[0].output_tokens == 1        # clamped, not dropped
+    assert tr.mean_rate == pytest.approx(1.0)
+
+
+def test_load_trace_dispatch_and_unknown_ext(tmp_path):
+    with pytest.raises(ValueError, match="unknown trace format"):
+        load_trace(str(tmp_path / "t.parquet"))
+    missing = tmp_path / "t.jsonl"
+    with pytest.raises(FileNotFoundError):
+        load_trace(str(missing))
+
+
+def test_loader_missing_column_raises(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text('{"ts": 1.0, "generated_tokens": 4}\n')
+    with pytest.raises(ValueError, match="prompt-length"):
+        load_jsonl(str(p))
+
+
+def test_loader_limit_keeps_earliest_not_file_order(tmp_path):
+    """`limit` must slice after the sort: an unsorted export's cap keeps
+    the earliest arrivals and rebases t=0 on the true earliest record."""
+    p = tmp_path / "unsorted.jsonl"
+    p.write_text(
+        '{"ts": 30.0, "context_tokens": 3, "generated_tokens": 1}\n'
+        '{"ts": 10.0, "context_tokens": 1, "generated_tokens": 1}\n'
+        '{"ts": 20.0, "context_tokens": 2, "generated_tokens": 1}\n')
+    tr = load_jsonl(str(p), limit=2)
+    assert [r.arrival for r in tr.records] == [0.0, 10.0]
+    assert [r.prompt_tokens for r in tr.records] == [1, 2]
+
+
+def test_normalize_clamps_and_sorts():
+    tr = normalize([TraceRecord(3.0, 0, -2), TraceRecord(1.0, 5, 5)])
+    assert [r.arrival for r in tr.records] == [0.0, 2.0]
+    assert tr.records[1].prompt_tokens == 1
+    assert tr.records[1].output_tokens == 1
+
+
+# ---------------------------------------------------------------------------
+# bundled fixture + synthesis
+# ---------------------------------------------------------------------------
+
+def test_sample_fixture_matches_synthesis_bytes(tmp_path):
+    """The checked-in JSONL is exactly `sample_trace()` re-serialized —
+    the fixture stays auditable/regenerable from code."""
+    regen = tmp_path / "regen.jsonl"
+    save_jsonl(sample_trace(), str(regen))
+    assert regen.read_bytes() == open(sample_trace_path(), "rb").read()
+
+
+def test_sample_fixture_shape():
+    tr = load_trace("sample")
+    st = tr.stats()
+    assert st["n"] == SAMPLE_CONFIG.n_requests
+    assert st["tenants"] == ["chat", "code", "rag"]
+    assert st["mean_rate"] == pytest.approx(SAMPLE_CONFIG.mean_rate,
+                                            rel=0.15)
+
+
+def _log_corr(records):
+    p = np.log([r.prompt_tokens for r in records])
+    o = np.log([r.output_tokens for r in records])
+    return float(np.corrcoef(p, o)[0, 1])
+
+
+@pytest.mark.parametrize("method", ["copula", "rank-shuffle"])
+def test_synthesis_correlation_sign_and_strength(method):
+    sc = SynthesisConfig(
+        n_requests=1200, mean_rate=1.0, method=method, seed=7,
+        tenants=(TenantTraceSpec("pos", 0.5, rho=0.7),
+                 TenantTraceSpec("neg", 0.5, prompt_median=200.0,
+                                 out_median=24.0, rho=-0.6)))
+    tr = synthesize(sc)
+    pos = [r for r in tr.records if r.tenant == "pos"]
+    neg = [r for r in tr.records if r.tenant == "neg"]
+    assert _log_corr(pos) > 0.5
+    assert _log_corr(neg) < -0.4
+
+
+def test_rank_shuffle_preserves_marginals():
+    """Rank shuffle must reorder, not redraw: the output-length multiset
+    equals an independent (rho=0) draw's multiset under the same seed."""
+    base = SynthesisConfig(n_requests=400, method="rank-shuffle", seed=3,
+                           tenants=(TenantTraceSpec("t", rho=0.0),))
+    coupled = SynthesisConfig(n_requests=400, method="rank-shuffle", seed=3,
+                              tenants=(TenantTraceSpec("t", rho=0.9),))
+    outs_a = sorted(r.output_tokens for r in synthesize(base).records)
+    outs_b = sorted(r.output_tokens for r in synthesize(coupled).records)
+    assert outs_a == outs_b
+
+
+def test_synthesis_deterministic_in_seed():
+    sc = SynthesisConfig(n_requests=50, seed=9)
+    a = [r.as_dict() for r in synthesize(sc).records]
+    b = [r.as_dict() for r in synthesize(sc).records]
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# replay materialization
+# ---------------------------------------------------------------------------
+
+def test_requests_from_trace_deterministic_and_clipped():
+    tr = load_trace("sample")
+    rcfg = ReplayConfig(seed=5, vocab=700, limit=40, max_prompt=64,
+                        max_output=32)
+    a = requests_from_trace(tr, rcfg)
+    b = requests_from_trace(tr, rcfg)
+    assert len(a) == 40
+    assert [(r.arrival, tuple(r.prompt), r.true_out_len) for r in a] == \
+           [(r.arrival, tuple(r.prompt), r.true_out_len) for r in b]
+    assert max(len(r.prompt) for r in a) <= 64
+    assert max(r.true_out_len for r in a) <= 32
+    assert all(1 <= t < 700 for r in a for t in r.prompt)
+    assert [r.tenant for r in a] == [rec.tenant for rec in tr.records[:40]]
+
+
+def test_rate_scale_and_time_warp_compress_arrivals():
+    tr = load_trace("sample")
+    base = requests_from_trace(tr, ReplayConfig(limit=50))
+    fast = requests_from_trace(tr, ReplayConfig(limit=50, rate_scale=2.0))
+    warp = requests_from_trace(tr, ReplayConfig(limit=50, rate_scale=2.0,
+                                                time_warp=2.0))
+    for b, f, w in zip(base, fast, warp):
+        assert f.arrival == pytest.approx(b.arrival / 2.0)
+        assert w.arrival == pytest.approx(b.arrival / 4.0)
+    # lengths and content are untouched by time rescaling
+    assert [r.prompt for r in base] == [r.prompt for r in fast]
+    with pytest.raises(ValueError):
+        requests_from_trace(tr, ReplayConfig(rate_scale=0.0))
+
+
+# ---------------------------------------------------------------------------
+# open-loop driver + determinism acceptance pin
+# ---------------------------------------------------------------------------
+
+def _engine(policy="trail", event_log=None):
+    return Engine(CFG, EngineConfig(policy=policy, hardware=HW, seed=0),
+                  event_log=event_log)
+
+
+def _replayed_requests(limit=40, scale=2.0):
+    return requests_from_trace(
+        load_trace("sample"),
+        ReplayConfig(rate_scale=scale, seed=0, vocab=CFG.vocab_size,
+                     limit=limit))
+
+
+def test_replay_driver_matches_batch_run():
+    """The open-loop driver and `Engine.run` are the same state machine:
+    results must be byte-identical."""
+    import copy
+    reqs = _replayed_requests()
+    s_replay = replay(_engine(), copy.deepcopy(reqs))
+    s_batch = _engine().run(copy.deepcopy(reqs))
+    assert s_replay.latencies == s_batch.latencies
+    assert s_replay.ttfts == s_batch.ttfts
+    assert s_replay.n_preemptions == s_batch.n_preemptions
+
+
+def test_replay_metrics_bit_identical_across_runs():
+    """ISSUE acceptance: same trace + seed -> byte-identical metrics
+    JSON across two independent replays."""
+    outs = []
+    for _ in range(2):
+        log = EventLog()
+        replay(_engine(event_log=log), _replayed_requests())
+        outs.append(report_json(rollup(log)))
+    assert outs[0] == outs[1]
+    rep = json.loads(outs[0])
+    assert rep["requests"]["finished"] == 40
+    for metric in ("ttft", "tbt", "completion"):
+        assert rep[metric]["p99"] >= rep[metric]["p50"] >= 0.0
+
+
+def test_replay_drives_router():
+    from repro.cluster.router import Router, RouterConfig
+    engines = [_engine(), _engine()]
+    router = Router(engines, RouterConfig(n_replicas=2, policy="jsq"))
+    stats = replay(router, _replayed_requests(limit=30))
+    assert len(stats.latencies) == 30
+    assert sum(stats.dispatch_counts) == 30
+
+
+# ---------------------------------------------------------------------------
+# workload integration (scenario_config trace sources)
+# ---------------------------------------------------------------------------
+
+def test_scenario_config_trace_source():
+    from repro.serving.workload import generate, scenario_config
+    wc = scenario_config("trace:sample", n_requests=50, request_rate=0.0,
+                         seed=1, vocab=900)
+    reqs = generate(wc)
+    assert len(reqs) == 50
+    tr = load_trace("sample", limit=50)
+    assert [r.arrival for r in reqs] == \
+           [rec.arrival for rec in tr.records]       # native rate
+    assert [len(r.prompt) for r in reqs] == \
+           [min(rec.prompt_tokens, 2048) for rec in tr.records]
+
+
+def test_scenario_config_trace_rate_targeting():
+    """request_rate > 0 converts to a rate-scale hitting that mean rate."""
+    from repro.serving.workload import generate, scenario_config
+    wc = scenario_config("trace:sample", n_requests=300, request_rate=2.0,
+                         seed=1, vocab=900)
+    reqs = generate(wc)
+    emp = (len(reqs) - 1) / (reqs[-1].arrival - reqs[0].arrival)
+    assert emp == pytest.approx(2.0, rel=1e-6)
+    # explicit trace_rate_scale override wins
+    wc2 = scenario_config("trace:sample", n_requests=300, request_rate=2.0,
+                          seed=1, vocab=900, trace_rate_scale=1.0)
+    assert wc2.trace_rate_scale == 1.0
+
+
+def test_scenario_config_unknown_still_raises():
+    from repro.serving.workload import scenario_config
+    with pytest.raises(ValueError, match="unknown scenario"):
+        scenario_config("nope", n_requests=4, request_rate=1.0)
+
+
+def test_trace_path_roundtrip_through_workload(tmp_path):
+    """A user-supplied trace file flows through WorkloadConfig.trace."""
+    from repro.serving.workload import WorkloadConfig, generate
+    p = tmp_path / "mini.jsonl"
+    save_jsonl(normalize([TraceRecord(0.0, 8, 3),
+                          TraceRecord(1.0, 6, 2, tenant="x")]), str(p))
+    reqs = generate(WorkloadConfig(n_requests=0, seed=2, vocab=100,
+                                   trace=str(p)))
+    assert [(len(r.prompt), r.true_out_len, r.tenant) for r in reqs] == \
+           [(8, 3, ""), (6, 2, "x")]
+    assert os.path.exists(sample_trace_path())
+
+
+def test_trace_replay_benchmark_smoke_cells():
+    """One tiny benchmark cell end to end (the CI smoke path's core)."""
+    from benchmarks.trace_replay import _run_cell
+    tr = load_trace("sample")
+    rep, js = _run_cell(CFG, tr, "trail", 16.0, limit=20)
+    assert rep["requests"]["finished"] == 20
+    assert not math.isnan(rep["completion"]["p99"])
+    _, js2 = _run_cell(CFG, tr, "trail", 16.0, limit=20)
+    assert js == js2
