@@ -37,6 +37,7 @@ import os
 from benchmarks.common import emit, save_json   # shared with cluster/prefix
 from repro.metrics import (EventLog, check_invariants, ideal_service_times,
                            report_json, rollup)
+from repro.metrics.emitters import METRIC_ROWS, SUMMARY_COLS
 from repro.serving.costmodel import CostModel, HardwareSpec
 from repro.serving.engine import Engine, EngineConfig
 from repro.traces import (ReplayConfig, load_trace, replay,
@@ -82,10 +83,10 @@ def _run_cell(cfg, trace, policy: str, rate_scale: float,
 def _cell_summary(report: dict) -> dict:
     """The compact per-cell artifact row (full percentiles + SLOs)."""
     keep = {}
-    for metric in ("ttft", "tbt", "completion", "slowdown"):
+    for metric in METRIC_ROWS:
         s = report.get(metric)
         if s:
-            keep[metric] = {k: s[k] for k in ("mean", "p50", "p90", "p99")}
+            keep[metric] = {k: s[k] for k in SUMMARY_COLS if k in s}
     keep["slo_attainment"] = report["slo_attainment"]
     keep["finished"] = report["requests"]["finished"]
     keep["preemptions"] = report["counters"]["preemptions"]
@@ -159,7 +160,9 @@ def run(quick: bool = True, smoke: bool = False):
         # refuse to write any artifact from a known-nondeterministic run
         raise SystemExit("replay determinism violated: same trace + seed "
                          "produced different metrics JSON")
-    save_json("trace_replay", results)
+    if not smoke:
+        # smoke never rewrites the checked-in experiments artifact either
+        save_json("trace_replay", results)
     payload = {
         "config": {"model": "granite-3-8b", "trace": "azure_llm_sample",
                    "trace_stats": trace.stats(), "hardware": HW.name,
@@ -181,10 +184,13 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true",
                     help="2 rate scales x 3 policies (the checked-in "
-                         "artifact)")
+                         "artifact; the default)")
+    ap.add_argument("--full", action="store_true",
+                    help="4 rate scales x 3 policies (does not refresh "
+                         "the checked-in BENCH artifact)")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal CI smoke (no artifact rewrite)")
     args = ap.parse_args()
-    out = run(quick=args.quick, smoke=args.smoke)
+    out = run(quick=not (args.full or args.smoke), smoke=args.smoke)
     if out["headline"]:
         print(json.dumps(out["headline"], indent=1))
