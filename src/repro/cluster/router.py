@@ -124,6 +124,10 @@ class ClusterStats:
                                     for s in self.replica_summaries),
             "prefix_hit_tokens": sum(s.get("prefix_hit_tokens", 0)
                                      for s in self.replica_summaries),
+            "predictor_time_s": sum(s.get("predictor_time_s", 0.0)
+                                    for s in self.replica_summaries),
+            "predictor_calls": sum(s.get("predictor_calls", 0)
+                                   for s in self.replica_summaries),
             "makespan": self.makespan,
         }
 
@@ -299,7 +303,14 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
             merged stream lands in ``ClusterStats.event_log``.
         backlog_unit: ``tokens`` | ``seconds`` — see `RouterConfig`.
         **engine_kwargs: forwarded to `EngineConfig` (policy, c_limit,
-            max_batch, mem_budget, kv_layout, ...).
+            max_batch, mem_budget, kv_layout, predictor, ...). A
+            ``predictor`` strategy spec selects every replica's
+            length-prediction strategy (each replica builds its own
+            instance on its own seed) *and* the router's default
+            ``size_predictor``, so dispatch and scheduling see the same
+            prediction quality. Rank-only strategies provide no
+            magnitudes: the router then uses the raw (prior-based)
+            backlog with no truncation.
 
     Returns:
         The aggregated `ClusterStats`.
@@ -315,8 +326,17 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
                                else None))
     if size_predictor is None and router_policy in ("jspw",
                                                     "prefix-affinity"):
-        from repro.serving.predictors import OraclePredictor
-        size_predictor = OraclePredictor(cfg.probe, seed=seed + 4242)
+        spec = engine_kwargs.get("predictor", "")
+        if spec:
+            from repro.serving.predictors import make_predictor
+            cand = make_predictor(spec, cfg.probe, seed=seed + 4242)
+            # ordinal scores cannot truncate a token backlog — rank-only
+            # routing falls back to the raw prior-based backlog sum
+            if getattr(cand, "provides_magnitude", True):
+                size_predictor = cand
+        else:
+            from repro.serving.predictors import OraclePredictor
+            size_predictor = OraclePredictor(cfg.probe, seed=seed + 4242)
     router = Router(replicas, RouterConfig(n_replicas=n_replicas,
                                            policy=router_policy, seed=seed,
                                            backlog_unit=backlog_unit),

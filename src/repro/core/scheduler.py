@@ -23,6 +23,17 @@ Policies:
   srpt        — SPRPT, unlimited preemption (TRAIL with C=1)
   trail       — SPRPT-LP with refined predictions (the paper's system)
   trail-bert  — SPRPT-LP with static prompt-only predictions
+  rank        — learning-to-rank (Fu et al., arXiv:2408.15792): order
+                the queue by an ordinal score with NO magnitude
+                semantics (a rank-only predictor's output). Unlimited
+                preemption like srpt, but — unlike every
+                prediction-based policy above — the score is never used
+                arithmetically: no preemption budget a0 (that needs
+                floor(C*r0) in tokens) and no megastep lookahead
+                pinning (that compares pred_remaining to a token
+                count). With scores that are any strictly monotone
+                transform of true remaining length, the selected batch
+                is identical to srpt's.
 """
 
 from __future__ import annotations
@@ -33,7 +44,11 @@ from enum import Enum
 
 NEG_INF = float("-inf")
 
-POLICIES = ("fcfs", "sjf", "srpt", "trail", "trail-bert", "mlfq")
+POLICIES = ("fcfs", "sjf", "srpt", "trail", "trail-bert", "mlfq", "rank")
+
+#: Policies whose ranks are ordinal only — select_batch never interprets
+#: rank values as token counts for these (no lookahead pinning).
+ORDINAL_POLICIES = ("mlfq", "rank")
 
 # FastServe-style MLFQ (Wu et al. 2023, the paper's related-work baseline):
 # priority queues by quantum thresholds on served tokens; a request demotes
@@ -102,6 +117,11 @@ class SchedEntry:
             return self.r0
         if policy == "mlfq":
             return float(mlfq_level(self.age))     # FCFS tiebreak inside level
+        if policy == "rank":
+            # ordinal score straight from a rank-only predictor: compared,
+            # never added/subtracted — prefill_left (a token count) cannot
+            # fold into a scale-free score
+            return self.pred_remaining
         # prediction-based remaining-time ranks; prefill_left folds the
         # (cache-aware) remaining prefill work into "remaining time" so a
         # request whose prompt prefix is already resident ranks ahead of
@@ -162,11 +182,12 @@ def select_batch(entries: dict[int, SchedEntry], *, policy: str,
         must_keep = set(e.rid for e in running)
     else:
         ordered = sorted(live, key=lambda e: (e.rank(policy), e.arrival))
-        # srpt/mlfq = unlimited preemption: nothing is pinned
-        must_keep = set() if policy in ("srpt", "mlfq") else set(
+        # srpt/mlfq/rank = unlimited preemption: nothing is pinned
+        must_keep = set() if policy in ("srpt", "mlfq", "rank") else set(
             e.rid for e in live
             if e.state is ReqState.RUNNING and not e.preemptable)
-        if lookahead > 1 and policy != "mlfq":   # mlfq has no predictions
+        if lookahead > 1 and policy not in ORDINAL_POLICIES:
+            # mlfq has no predictions; rank scores are not token counts
             # megastep lookahead: about-to-finish jobs ride out the megastep
             must_keep |= set(
                 e.rid for e in live

@@ -26,6 +26,7 @@ def _interpret_default() -> bool:
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                     block_q=128, block_k=128, interpret=None):
+    """Tiled causal/windowed flash attention over full sequences."""
     if interpret is None:
         interpret = _interpret_default()
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
@@ -35,6 +36,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
 
 def decode_attention(q, k, v, kpos, q_pos, *, window=0, softcap=0.0,
                      block_k=256, interpret=None):
+    """Single-step decode attention against a contiguous KV cache."""
     if interpret is None:
         interpret = _interpret_default()
     return _dec.decode_attention(q, k, v, kpos, q_pos, window=window,
@@ -44,6 +46,7 @@ def decode_attention(q, k, v, kpos, q_pos, *, window=0, softcap=0.0,
 
 def paged_decode_attention(q, k_pages, v_pages, kpos_pages, block_table,
                            q_pos, *, window=0, softcap=0.0, interpret=None):
+    """Single-step decode attention against a paged KV cache."""
     if interpret is None:
         interpret = _interpret_default()
     return _paged.paged_decode_attention(
@@ -54,6 +57,7 @@ def paged_decode_attention(q, k_pages, v_pages, kpos_pages, block_table,
 def paged_decode_attention_multi(q, k_pages, v_pages, kpos_pages,
                                  block_table, q_pos, *, window=0,
                                  softcap=0.0, interpret=None):
+    """Multi-query decode attention against a paged KV cache."""
     if interpret is None:
         interpret = _interpret_default()
     return _paged.paged_decode_attention_multi(
@@ -62,6 +66,7 @@ def paged_decode_attention_multi(q, k_pages, v_pages, kpos_pages,
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
+    """Chunked state-space (SSD/Mamba-2) selective scan."""
     if interpret is None:
         interpret = _interpret_default()
     return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
@@ -69,6 +74,7 @@ def ssd_scan(x, dt, A, Bm, Cm, *, chunk=128, interpret=None):
 
 def probe_update(tap, w1, b1, w2, b2, q_prev, T, *, block_b=128,
                  interpret=None):
+    """Fused TRAIL probe step: EMA-smooth the tap and score the MLP."""
     if interpret is None:
         interpret = _interpret_default()
     return _probe.probe_update(tap, w1, b1, w2, b2, q_prev, T,

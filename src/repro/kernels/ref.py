@@ -118,6 +118,7 @@ def ssd_scan_ref(x, dt, A, Bm, Cm, init_state=None):
         init_state = jnp.zeros((Bsz, nh, hp, N), f32)
 
     def step(S, inp):
+        """One recurrence step: decay the state, inject x, read out y."""
         xt, dtt, Bt, Ct = inp                       # (B,nh,hp),(B,nh),(B,N),(B,N)
         a = jnp.exp(dtt * A)                        # (B,nh)
         S = a[:, :, None, None] * S + jnp.einsum(

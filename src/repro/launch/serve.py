@@ -20,6 +20,10 @@ workload.
     # write the full percentile/SLO metrics report
     PYTHONPATH=src python -m repro.launch.serve --trace sample \
         --rate-scale 2.0 --compute-bound --metrics-out metrics.json
+
+    # swap the length-prediction strategy (the predictor bake-off dial)
+    PYTHONPATH=src python -m repro.launch.serve --trace sample \
+        --predictor noisy-oracle:sigma=0.5
 """
 
 from __future__ import annotations
@@ -32,6 +36,7 @@ from repro.config import ARCH_IDS, get_config, get_smoke_config
 from repro.core.scheduler import POLICIES
 from repro.serving.costmodel import HardwareSpec
 from repro.serving.engine import run_policy
+from repro.serving.predictors import STRATEGIES, parse_spec
 from repro.serving.workload import (SCENARIOS, WorkloadConfig, generate,
                                     scenario_config)
 
@@ -42,6 +47,14 @@ def main():
     ap.add_argument("--arch", default="granite-3-8b",
                     choices=ARCH_IDS + ("trail-llama",))
     ap.add_argument("--policy", default="trail", choices=POLICIES)
+    ap.add_argument("--predictor", default=None, metavar="SPEC",
+                    help="length-prediction strategy spec "
+                         "'name[:key=value,...]' (names: "
+                         f"{', '.join(STRATEGIES)}); sim mode only. "
+                         "Default: the scenario's recommendation, else "
+                         "the legacy trail probe. 'rank-only' pairs "
+                         "with --policy rank (auto-selected when the "
+                         "policy is left at its default)")
     ap.add_argument("--c", type=float, default=0.8)
     ap.add_argument("--rate", type=float, default=None,
                     help="aggregate request rate (req/s; default 14, or "
@@ -147,17 +160,37 @@ def main():
     mem_budget = int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62
     kv_layout = args.kv_layout or ("paged" if args.prefix_cache else "contig")
 
+    # strategy resolution: explicit flag > scenario recommendation >
+    # legacy default ("" = the engine's built-in trail probe)
+    pred_spec = args.predictor if args.predictor is not None else wc.predictor
+    policy = args.policy
+    if pred_spec:
+        if args.real:
+            raise SystemExit("--predictor strategies are sim-only; the "
+                             "real engine uses the live ProbePredictor")
+        name = parse_spec(pred_spec)[0]
+        if name not in STRATEGIES:
+            raise SystemExit(f"unknown predictor strategy {name!r}; "
+                             f"choose from {STRATEGIES}")
+        if name == "rank-only" and policy == "trail":
+            # the ordinal strategy needs the rank-aware scheduler path;
+            # only the default policy is overridden — an explicit
+            # incompatible choice still errors in the engine
+            policy = "rank"
+
     if args.replicas > 1:
         if args.real:
             raise SystemExit("cluster mode is sim-only (one device pool)")
         stats = run_cluster(
             cfg, reqs, router_policy=args.router,
-            n_replicas=args.replicas, policy=args.policy,
+            n_replicas=args.replicas, policy=policy,
             c_limit=args.c, max_batch=args.max_batch,
             mem_budget=mem_budget, hardware=hardware, seed=args.seed,
             kv_layout=kv_layout, prefix_cache=args.prefix_cache,
+            predictor=pred_spec,
             record_events=bool(args.metrics_out))
-        print(json.dumps({"arch": cfg.name, "policy": args.policy,
+        print(json.dumps({"arch": cfg.name, "policy": policy,
+                          "predictor": pred_spec or "trail-probe",
                           "router": args.router, "replicas": args.replicas,
                           "scenario": (f"trace:{args.trace}" if args.trace
                                        else args.scenario or "poisson"),
@@ -185,12 +218,16 @@ def main():
         from repro.metrics import EventLog
         event_log = EventLog()
     stats = run_policy(
-        cfg, args.policy, reqs, c_limit=args.c, max_batch=args.max_batch,
-        mem_budget=mem_budget, mode=mode, predictor=predictor, model=model,
+        cfg, policy, reqs, c_limit=args.c, max_batch=args.max_batch,
+        mem_budget=mem_budget, mode=mode,
+        predictor=predictor if predictor is not None else (pred_spec or None),
+        model=model,
         params=params, hardware=hardware, seed=args.seed,
         kv_layout=kv_layout, prefix_cache=args.prefix_cache,
         event_log=event_log)
-    print(json.dumps({"arch": cfg.name, "policy": args.policy,
+    print(json.dumps({"arch": cfg.name, "policy": policy,
+                      "predictor": ("probe" if args.real
+                                    else pred_spec or "trail-probe"),
                       "c": args.c, "rate": rate,
                       "scenario": (f"trace:{args.trace}" if args.trace
                                    else args.scenario or

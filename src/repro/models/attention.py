@@ -39,6 +39,7 @@ NEG_INF = -2.0 ** 30   # large-negative instead of -inf: keeps softmax NaN-free
 # ---------------------------------------------------------------------------
 
 def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    """Initialize q/k/v/o projection params (plus optional qkv bias)."""
     d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
     dt = pdtype(cfg)
     ks = jax.random.split(key, 4)
@@ -163,6 +164,7 @@ def _attend_blocked(cfg: ModelConfig, q, k, v, q_pos, k_pos, *, window: int,
         ksb = vsb = jnp.zeros((nb, B, 0, KH), jnp.float32)
 
     def body(carry, inp):
+        """Online-softmax update over one KV block."""
         m_run, l_run, acc = carry
         kc, vc, pc, ksc, vsc = inp
         kc = _deq(kc, ksc if k_scale is not None else None)
@@ -231,6 +233,7 @@ def _quantize(x):
 
 
 def dequantize(q, scale):
+    """Invert `quantize`: int8 values x per-(token,head) scales -> f32."""
     return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
 
 

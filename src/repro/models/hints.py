@@ -42,6 +42,7 @@ def data_shards() -> int:
 
 
 def hint(x, *spec):
+    """Annotate ``x`` with a sharding hint when a mesh is active."""
     am = _abstract_mesh()
     names = getattr(am, "axis_names", ())
     if not names:

@@ -15,10 +15,12 @@ from repro.config import ModelConfig
 
 
 def cdtype(cfg: ModelConfig):
+    """Compute dtype of the model (``cfg.dtype``)."""
     return jnp.dtype(cfg.dtype)
 
 
 def pdtype(cfg: ModelConfig):
+    """Parameter dtype of the model (``cfg.param_dtype``)."""
     return jnp.dtype(cfg.param_dtype)
 
 
@@ -27,11 +29,13 @@ def pdtype(cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    """Gaussian dense init, fan-in scaled unless ``scale`` is given."""
     scale = scale if scale is not None else d_in ** -0.5
     return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
 
 
 def embed_init(key, vocab: int, d: int, dtype):
+    """Gaussian embedding-table init at the GPT-2 0.02 scale."""
     return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
 
 
@@ -40,10 +44,12 @@ def embed_init(key, vocab: int, d: int, dtype):
 # ---------------------------------------------------------------------------
 
 def init_rmsnorm(d: int, dtype):
+    """Zero-init RMSNorm scale (gemma-style ``1 + scale`` gain)."""
     return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1 + scale)
 
 
 def rms_norm(p, x, eps: float):
+    """RMSNorm with float32 accumulation, cast back to ``x.dtype``."""
     dt = x.dtype
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
@@ -52,10 +58,12 @@ def rms_norm(p, x, eps: float):
 
 
 def init_layernorm(d: int, dtype):
+    """Standard LayerNorm params (unit scale, zero bias)."""
     return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
 
 
 def layer_norm(p, x, eps: float):
+    """LayerNorm with float32 accumulation, cast back to ``x.dtype``."""
     dt = x.dtype
     x32 = x.astype(jnp.float32)
     mu = jnp.mean(x32, axis=-1, keepdims=True)
@@ -65,12 +73,14 @@ def layer_norm(p, x, eps: float):
 
 
 def init_norm(cfg: ModelConfig, dtype):
+    """Family-dispatched norm init (LayerNorm for audio, else RMSNorm)."""
     if cfg.family == "audio":          # whisper uses LayerNorm
         return init_layernorm(cfg.d_model, dtype)
     return init_rmsnorm(cfg.d_model, dtype)
 
 
 def apply_norm(cfg: ModelConfig, p, x):
+    """Family-dispatched norm application matching `init_norm`."""
     if cfg.family == "audio":
         return layer_norm(p, x, cfg.norm_eps)
     return rms_norm(p, x, cfg.norm_eps)
@@ -104,6 +114,7 @@ def apply_rope(x, positions, theta: float):
 # ---------------------------------------------------------------------------
 
 def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
+    """MLP params: biased up/down for audio, gated SiLU otherwise."""
     d, ff = cfg.d_model, d_ff or cfg.d_ff
     dt = pdtype(cfg)
     k1, k2, k3 = jax.random.split(key, 3)
@@ -118,6 +129,7 @@ def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None):
 
 
 def apply_mlp(cfg: ModelConfig, p, x):
+    """Apply the MLP whose param layout `init_mlp` produced."""
     if "w_gate" not in p:
         h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype))
         return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
@@ -131,6 +143,7 @@ def apply_mlp(cfg: ModelConfig, p, x):
 # ---------------------------------------------------------------------------
 
 def softcap(x, cap: float):
+    """Soft-cap logits to (-cap, cap) via tanh; ``cap=0`` is identity."""
     if not cap:
         return x
     return jnp.tanh(x / cap) * cap
@@ -144,6 +157,7 @@ def unembed(cfg: ModelConfig, params, h):
 
 
 def embed_tokens(cfg: ModelConfig, params, tokens):
+    """Look up token embeddings, optionally sqrt(d_model)-scaled."""
     h = params["embed"][tokens].astype(cdtype(cfg))
     if cfg.embed_scale:
         h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)

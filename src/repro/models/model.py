@@ -33,6 +33,8 @@ MAX_LEARNED_POS = 32768
 
 
 class Model:
+    """Stateless forward passes over a params dict for one ModelConfig."""
+
     def __init__(self, cfg: ModelConfig, use_kernels: bool = False):
         self.cfg = cfg
         self.use_kernels = use_kernels
@@ -43,6 +45,7 @@ class Model:
     # Init
     # ------------------------------------------------------------------
     def init(self, rng) -> dict:
+        """Initialize the full parameter dict (embed/blocks/probe/...)."""
         cfg = self.cfg
         keys = jax.random.split(rng, len(self.runs) + 6)
         dt = pdtype(cfg)
@@ -128,12 +131,14 @@ class Model:
     # Encoder (whisper; stub frontend supplies enc_embeds)
     # ------------------------------------------------------------------
     def encode(self, params, enc_embeds):
+        """Run the non-causal encoder stack over frontend embeddings."""
         cfg = self.cfg
         enc = params["encoder"]
         h = enc_embeds.astype(cdtype(cfg))
         h = h + enc["pos"][None, : h.shape[1]].astype(h.dtype)
 
         def body(carry, p_l):
+            """One encoder block: self-attention + MLP residuals."""
             hn = apply_norm(cfg, p_l["norm1"], carry)
             a = attn_mod.self_attention_full(cfg, p_l["attn"], hn, causal=False)
             carry = carry + a
@@ -372,6 +377,7 @@ class Model:
         budget = jnp.minimum(budget.astype(jnp.int32), k)
 
         def step(carry, _):
+            """One scanned decode step over the active rows."""
             cache, tok, emitted, halted = carry
             act = active & ~halted & (emitted < budget)
             logits, cache, _, probe_logits = self.decode_step(
@@ -426,6 +432,7 @@ def _chunked_ce(cfg: ModelConfig, params, h, labels, chunk: int = 256):
 
     @jax.checkpoint
     def body(acc, xs):
+        """Accumulate masked NLL over one rematerialized logit chunk."""
         hc, lc = xs
         logits = unembed(cfg, params, hc)                  # (B,chunk,V) f32
         lse = jax.nn.logsumexp(logits, axis=-1)
@@ -445,4 +452,5 @@ def _build_cached(cfg: ModelConfig, use_kernels: bool) -> Model:
 
 
 def build_model(cfg: ModelConfig, use_kernels: bool = False) -> Model:
+    """Return the (cached) `Model` wrapper for ``cfg``."""
     return _build_cached(cfg, use_kernels)

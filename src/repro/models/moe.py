@@ -35,12 +35,14 @@ _GLOBAL_DISPATCH = os.environ.get("REPRO_MOE_GLOBAL_DISPATCH", "") == "1"
 
 
 def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    """Per-expert token slot budget for ``n_tokens`` routed tokens."""
     cap = math.ceil(n_tokens * cfg.experts_per_token / cfg.num_experts
                     * cfg.capacity_factor)
     return max(cap, 4)
 
 
 def init_moe(key, cfg: ModelConfig):
+    """Initialize router + stacked expert MLP params."""
     d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
     dt = pdtype(cfg)
     ks = jax.random.split(key, 4)

@@ -23,6 +23,7 @@ from repro.models.layers import dense_init, pdtype
 
 
 def ssm_dims(cfg: ModelConfig):
+    """Derived SSM sizes: (inner dim, n_heads, conv channels)."""
     d_in = cfg.ssm_expand * cfg.d_model
     nh = d_in // cfg.ssm_head_dim
     bc = 2 * cfg.ssm_groups * cfg.ssm_state
@@ -31,6 +32,7 @@ def ssm_dims(cfg: ModelConfig):
 
 
 def init_ssm(key, cfg: ModelConfig):
+    """Initialize one Mamba-2 style SSM mixer layer's params."""
     d = cfg.d_model
     d_in, nh, conv_ch = ssm_dims(cfg)
     zxbcdt = 2 * d_in + (conv_ch - d_in) + nh
@@ -116,6 +118,7 @@ def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, init_state=None):
         init_state = jnp.zeros((Bsz, nh, hp, N), f32)
 
     def step(S_prev, inp):
+        """Inter-chunk recurrence: decay and add one chunk's state."""
         cd, Sc_c = inp                                  # (B,nh), (B,nh,hp,N)
         S = cd[:, :, None, None] * S_prev + Sc_c
         return S, S_prev
@@ -195,6 +198,7 @@ def ssm_decode_step(cfg: ModelConfig, p, h, state, conv_buf):
 
 
 def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int):
+    """Zeroed per-layer decode state (SSM state + conv ring buffer)."""
     d_in, nh, conv_ch = ssm_dims(cfg)
     N = cfg.ssm_groups * cfg.ssm_state
     return {

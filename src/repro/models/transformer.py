@@ -66,6 +66,7 @@ def split_runs(cfg: ModelConfig) -> tuple[tuple[tuple[str, ...], int], ...]:
 
 
 def run_layers(run) -> int:
+    """Total layer count of one (kinds, n_blocks) run."""
     kinds, nb = run
     return len(kinds) * nb
 
@@ -86,6 +87,7 @@ def tap_run_index(cfg: ModelConfig) -> int:
 # ---------------------------------------------------------------------------
 
 def init_block(key, cfg: ModelConfig, kind: str, cross: bool = False):
+    """Initialize one decoder block of the given layer kind."""
     ks = jax.random.split(key, 8)
     dt = cfg.param_dtype
     p: dict = {"norm1": init_norm(cfg, jnp.dtype(dt))}
@@ -211,6 +213,7 @@ def block_cached(cfg: ModelConfig, kind: str, p, h, cache_l, q_pos,
 def init_run_cache(cfg: ModelConfig, kind: str, n_layers: int, batch: int,
                    max_len: int, enc_seq: int = 0, kv_layout: str = "contig",
                    num_pages: int = 0, page_size: int = 0):
+    """Allocate the decode cache for one homogeneous layer run."""
     cache: dict = {}
     window = _kind_window(cfg, kind)
     if kind != KIND_SSM:

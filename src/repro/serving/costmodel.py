@@ -125,6 +125,20 @@ class CostModel:
         t = max(flops / self.hw.peak_flops, mem / self.hw.hbm_bw)
         return t + self.hw.overhead_s
 
+    def predictor_time(self, flops: float) -> float:
+        """Seconds of predictor work for ``flops`` charged FLOPs.
+
+        The length-prediction strategies (`repro.serving.predictors`)
+        book the FLOPs an external implementation would spend (a
+        BERT-sized prompt model, an ELIS proxy re-prediction); the
+        engine drains them every step and charges the simulated clock
+        through here — compute-roofline only, since estimator weights
+        are tiny next to the serving model's. Zero FLOPs (the recycled
+        trail-probe, the analysis oracles) cost exactly 0.0 seconds, so
+        legacy results stay byte-identical.
+        """
+        return flops / self.hw.peak_flops
+
     def decode_token_rate(self, ctx: int = 256) -> float:
         """Steady-state decode tokens/s of one lone row at context ``ctx``.
 

@@ -47,7 +47,8 @@ from repro.serving.kv_cache import (BlockManager, PagedSlotPool, SlotPool,
                                     page_bytes, paged_bytes_for_context,
                                     pages_for_tokens,
                                     supports_page_retention)
-from repro.serving.predictors import OraclePredictor, PredictorBase
+from repro.serving.predictors import (OraclePredictor, PredictorBase,
+                                      make_predictor)
 from repro.serving.request import Request
 
 
@@ -80,6 +81,15 @@ class EngineConfig:
             work, and finished requests' prompt pages stay warm in a
             reusable LRU pool. Off by default — disabled results are
             byte-identical to the pre-prefix-cache engine.
+        predictor: length-prediction strategy spec
+            (``name[:key=value,...]``, see
+            `repro.serving.predictors.STRATEGIES`), e.g.
+            ``"noisy-oracle:sigma=0.5"``. Empty (the default) keeps the
+            legacy sim-mode `OraclePredictor` — byte-identical to
+            pre-strategy-layer engines. An explicitly passed predictor
+            instance always wins over this spec. Rank-only strategies
+            (``provides_magnitude == False``) require an ordinal
+            scheduling policy (``rank`` / ``fcfs`` / ``mlfq``).
         mode: ``sim`` (cost-model clock, oracle-noise probe) | ``real``
             (JAX model actually prefills/decodes).
         hardware: roofline constants that drive the simulated clock.
@@ -87,6 +97,7 @@ class EngineConfig:
     """
 
     policy: str = "trail"           # fcfs | sjf | srpt | trail | trail-bert
+                                    # | mlfq | rank
     c_limit: float = 0.8            # the paper's C
     max_batch: int = 16             # slot count
     mem_budget: int = 1 << 62       # cache bytes budget
@@ -105,6 +116,8 @@ class EngineConfig:
     page_size: int = 16             # tokens per KV page (paged layout)
     prefix_cache: bool = False      # share identical KV prefixes across
                                     # requests (paged layout only)
+    predictor: str = ""             # strategy spec "name[:k=v,...]"; empty
+                                    # = legacy OraclePredictor default
     mode: str = "sim"               # "sim" | "real"
     hardware: HardwareSpec = field(default_factory=HardwareSpec)
     seed: int = 0
@@ -125,6 +138,8 @@ class EngineStats:
     sim_time: float = 0.0
     prefilled_tokens: int = 0       # prefill tokens actually computed
     prefix_hit_tokens: int = 0      # prompt tokens served from the cache
+    predictor_time_s: float = 0.0   # clock charged for predictor work
+    predictor_calls: int = 0        # predictor invocations booked
 
     def summary(self) -> dict:
         """Aggregate the counters into the benchmark-facing dict."""
@@ -146,6 +161,8 @@ class EngineStats:
             "makespan": self.sim_time,
             "prefilled_tokens": self.prefilled_tokens,
             "prefix_hit_tokens": self.prefix_hit_tokens,
+            "predictor_time_s": self.predictor_time_s,
+            "predictor_calls": self.predictor_calls,
         }
 
 
@@ -213,8 +230,10 @@ class Engine:
         Args:
             cfg: the model/architecture configuration it serves.
             ecfg: engine knobs (see `EngineConfig`).
-            predictor: remaining-length predictor; defaults to the
-                sim-mode `OraclePredictor`.
+            predictor: remaining-length predictor instance; overrides
+                any ``ecfg.predictor`` strategy spec. Default: the spec
+                (built via `make_predictor`) when given, else the
+                legacy sim-mode `OraclePredictor`.
             model: the JAX model (real mode only).
             params: its parameters (real mode only).
             event_log: optional `repro.metrics.EventLog`; when given the
@@ -226,8 +245,23 @@ class Engine:
         self.cfg = cfg
         self.ecfg = ecfg
         self.events = event_log
-        self.predictor = predictor or OraclePredictor(cfg.probe,
-                                                      seed=ecfg.seed)
+        if predictor is not None:
+            self.predictor = predictor
+        elif ecfg.predictor:
+            self.predictor = make_predictor(ecfg.predictor, cfg.probe,
+                                            seed=ecfg.seed)
+        else:
+            self.predictor = OraclePredictor(cfg.probe, seed=ecfg.seed)
+        # rank-only strategies emit ordinal scores, not token counts:
+        # magnitude-consuming policies (preemption budget a0, megastep
+        # lookahead, remaining-work ranks) would misread them
+        self._magnitude = getattr(self.predictor, "provides_magnitude", True)
+        if not self._magnitude and ecfg.policy not in ("rank", "fcfs",
+                                                       "sjf", "mlfq"):
+            raise ValueError(
+                f"predictor provides ordinal ranks, not magnitudes; "
+                f"policy {ecfg.policy!r} consumes token-count predictions "
+                f"— use policy='rank' (or a prediction-free baseline)")
         self.paged = ecfg.kv_layout == "paged"
         if ecfg.kv_layout not in ("contig", "paged"):
             raise ValueError(f"unknown kv_layout {ecfg.kv_layout!r}")
@@ -401,18 +435,23 @@ class Engine:
                 backlog, which is the right signal only for FCFS replicas.
         """
         cap = float("inf") if truncate is None else truncate
+        prior = (self._r0_sum / self._r0_cnt if self._r0_cnt
+                 else self.predictor.pc.max_len / 2.0)
         tot = 0.0
         for rid, e in self._entries.items():
             if e.state is ReqState.FINISHED:
                 continue
             req = self._pool_reqs[rid]
-            tot += min(max(e.pred_remaining, 0.0), cap)
+            if self._magnitude:
+                tot += min(max(e.pred_remaining, 0.0), cap)
+            else:
+                # rank-only: scores are not token counts — charge the
+                # uninformative prior, decayed by tokens already served
+                tot += min(max(prior - e.age, 0.0), cap)
             hint = (self._prefix_hint.get(rid, 0)
                     if self.prefix_cache and e.state is ReqState.WAITING
                     else 0)
             tot += max(req.context_len - 1 - e.prefill_done - hint, 0)
-        prior = (self._r0_sum / self._r0_cnt if self._r0_cnt
-                 else self.predictor.pc.max_len / 2.0)
         for req in self._pending[self._p_idx:]:
             tot += len(req.prompt) + min(prior, cap)
         return tot
@@ -462,8 +501,10 @@ class Engine:
             req.entry.pred_remaining = r0
             req.entry.c_limit = ecfg.c_limit
             req.entry.finish_len = req.true_out_len
-            self._r0_sum += r0
-            self._r0_cnt += 1
+            if self._magnitude:
+                # ordinal scores must not pollute the token-count prior
+                self._r0_sum += r0
+                self._r0_cnt += 1
             if self.prefix_cache:
                 # prospective hit: lets the scheduler's ranks and the
                 # backlog signal see the cached prefix before admission
@@ -596,6 +637,16 @@ class Engine:
             pf_tokens, pf_ctx)
         dt += self._swap_pending_s              # DMA stalls the batch
         self._swap_pending_s = 0.0
+        # externally-priced predictor work (BERT-sized prompt models,
+        # ELIS proxy re-predictions) charged this step stalls the clock;
+        # zero-flop strategies (recycled probe, analysis oracles) add
+        # exactly 0.0 — legacy results stay byte-identical
+        pred_flops = self.predictor.take_cost_flops()
+        if pred_flops:
+            pred_s = self.cost.predictor_time(pred_flops)
+            dt += pred_s
+            stats.predictor_time_s += pred_s
+        stats.predictor_calls = self.predictor.cost_calls
         now_next = now + dt
         completed: list[Request] = []
         for r, take in pf_plan:
@@ -1042,13 +1093,20 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                prefix_cache=False, event_log=None) -> EngineStats:
     """One-shot convenience: build an `Engine` and run a (deep-copied)
     request trace under the given policy, returning its `EngineStats`.
-    Pass a `repro.metrics.EventLog` as ``event_log`` to capture the
-    per-request event stream alongside."""
+    ``predictor`` accepts either a `PredictorBase` instance or a
+    strategy spec string (``"noisy-oracle:sigma=0.5"``, see
+    `repro.serving.predictors.make_predictor`); None keeps the legacy
+    default. Pass a `repro.metrics.EventLog` as ``event_log`` to
+    capture the per-request event stream alongside."""
+    spec = predictor if isinstance(predictor, str) else ""
+    if spec:
+        predictor = None
     ecfg = EngineConfig(policy=policy, c_limit=c_limit, max_batch=max_batch,
                         mem_budget=mem_budget, mode=mode, seed=seed,
                         probe_interval=probe_interval, oom_mode=oom_mode,
                         kv_layout=kv_layout, page_size=page_size,
                         max_len=max_len, prefix_cache=prefix_cache,
+                        predictor=spec,
                         hardware=hardware or HardwareSpec())
     import copy
     reqs = copy.deepcopy(requests)

@@ -1,19 +1,52 @@
-"""Prediction providers for the engine.
+"""Prediction providers for the engine: the `LengthPredictor` interface
+and the pluggable strategy family behind it.
 
-Two regimes:
-  * ``ProbePredictor`` — the real thing: probe logits come back fused from
-    ``decode_step`` / ``prefill_chunk`` taps; this class just runs the
-    Bayesian filter and converts posteriors to expected remaining lengths.
-  * ``OraclePredictor`` — simulation mode: models the *statistics* of a
-    trained probe (configurable accuracy) around the ground-truth remaining
-    length, so paper-scale serving benchmarks can run without a GPU-scale
-    model. ``temp`` controls per-iteration probe sharpness; ``bert_sigma``
-    controls the prompt-only baseline's (one-shot) multiplicative error.
+Every provider implements the same three-hook protocol (duck-typed; no
+ABC so sim-mode providers stay dependency-free):
 
-Both expose:
   initial(req)                 -> r0 (prompt-only prediction, pre-forward)
-  on_prefill(req, tap_mean)    -> posterior from the prompt-phase embedding
+  on_prefill(req, tap_mean)    -> prediction from the prompt-phase embedding
   on_token(req, probe_probs)   -> updated predicted-remaining length
+
+plus two class-level contracts the engine consults:
+
+  provides_magnitude  — True when predictions are remaining-token
+      *magnitudes* (usable for the preemption budget a0, megastep
+      lookahead pinning, and the router's predicted-work backlog);
+      False for rank-only strategies whose values are ordinal scores
+      (the engine then requires the rank-aware scheduler policy and
+      falls back to priors for backlog).
+  cost accounting     — each strategy declares the FLOPs an external
+      implementation of it would spend per call (`flops_initial`,
+      `flops_refine`, `flops_per_prompt_token`); calls accumulate into
+      ``cost_flops_pending``, which the engine drains every step and
+      converts to seconds through `CostModel.predictor_time`, charging
+      the simulated clock. The recycled-embedding strategies charge
+      zero: their probe rides inside the decode megastep, which is the
+      paper's whole point.
+
+Strategy family (``STRATEGIES``; build by name via `make_predictor`):
+
+  * ``trail-probe``  — the existing recycled-embedding probe. In sim
+    mode this is `OraclePredictor` (models a trained probe's
+    *statistics* around the ground truth — ``temp`` controls probe
+    sharpness, ``bert_sigma`` the one-shot prompt-only error); in real
+    mode `ProbePredictor` consumes the fused probe outputs.
+  * ``oracle``       — `ExactOraclePredictor`: perfect lengths, the
+    scheduling-gain upper bound.
+  * ``noisy-oracle`` — `NoisyOraclePredictor`: oracle with configurable
+    multiplicative lognormal error (the prediction-quality dial).
+  * ``bucketed``     — `BucketedOraclePredictor`: the paper's k-bin
+    quantization of the oracle (bin-mean predictions).
+  * ``prompt-only``  — `PromptOnlyPredictor`: one-shot admission-time
+    estimate from an external prompt model (the BERT-baseline regime);
+    never refined, charged per prompt token.
+  * ``rank-only``    — `RankOnlyPredictor`: learning-to-rank (Fu et
+    al., arXiv:2408.15792) — total-order scores, no magnitudes;
+    consumed by the scheduler's ``rank`` policy.
+  * ``iterative``    — `IterativePredictor`: ELIS-style re-prediction
+    (Choi et al., arXiv:2505.09142) every r probe boundaries through a
+    proxy estimator; predictions age deterministically in between.
 """
 
 from __future__ import annotations
@@ -28,14 +61,49 @@ from repro.core import predictor as probe_mod
 from repro.core.bins import bin_means
 from repro.core.smoothing import bayes_update, transition_matrix
 
+#: Strategy names accepted by `make_predictor` (and the CLI/benchmark
+#: ``--predictor`` spec syntax ``name[:key=value,...]``).
+STRATEGIES = ("trail-probe", "oracle", "noisy-oracle", "bucketed",
+              "prompt-only", "rank-only", "iterative")
+
+#: Default proxy-model size for externally-priced strategies: a
+#: BERT-base-sized estimator (~110M params), 2*N FLOPs per token.
+PROXY_FLOPS_PER_TOKEN = 2.0 * 110e6
+
 
 class PredictorBase:
-    """Shared Bayesian-filter plumbing for all prediction providers."""
+    """Shared Bayesian-filter plumbing + the `LengthPredictor` contract
+    defaults (magnitude predictions, zero charged cost)."""
+
+    #: predictions are remaining-length magnitudes (tokens); rank-only
+    #: strategies override to False and emit ordinal scores instead
+    provides_magnitude = True
+    #: FLOPs an external implementation would charge per call class;
+    #: zero everywhere by default (recycled embeddings / free oracles)
+    flops_initial = 0.0
+    flops_refine = 0.0
+    flops_per_prompt_token = 0.0
 
     def __init__(self, pc: ProbeConfig):
         self.pc = pc
         self.T = np.asarray(transition_matrix(pc))
         self.means = bin_means(pc)
+        self.cost_flops_pending = 0.0   # drained by the engine each step
+        self.cost_flops_total = 0.0
+        self.cost_calls = 0
+
+    def charge(self, flops: float):
+        """Book ``flops`` of predictor work (drained by `take_cost_flops`)."""
+        self.cost_calls += 1
+        if flops:
+            self.cost_flops_pending += flops
+            self.cost_flops_total += flops
+
+    def take_cost_flops(self) -> float:
+        """Return and clear the FLOPs charged since the last drain."""
+        f = self.cost_flops_pending
+        self.cost_flops_pending = 0.0
+        return f
 
     def expected(self, q) -> float:
         """Expected remaining length under a bin posterior ``q``."""
@@ -131,3 +199,273 @@ class ProbePredictor(PredictorBase):
     def on_token(self, req, probe_probs) -> float:
         """Bayes-update with the device-computed probe posterior."""
         return self._filter(req, np.asarray(probe_probs))
+
+
+# ---------------------------------------------------------------------------
+# the strategy family (sim-mode; see module docstring)
+# ---------------------------------------------------------------------------
+
+class ExactOraclePredictor(PredictorBase):
+    """Perfect length predictions — the scheduling-gain upper bound.
+
+    Every hook returns the exact ground-truth remaining length; cost is
+    zero (nothing real computes this). Any realizable predictor's
+    scheduling gain is bounded above by this strategy's.
+    """
+
+    def initial(self, req) -> float:
+        """Exact total output length."""
+        return float(max(req.true_out_len, 1))
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        """Exact remaining length at the end of prefill."""
+        return float(max(req.true_out_len - len(req.generated), 0))
+
+    def on_token(self, req, probe_probs=None) -> float:
+        """Exact remaining length after each probe boundary."""
+        return float(max(req.true_out_len - len(req.generated), 0))
+
+
+class NoisyOraclePredictor(PredictorBase):
+    """Oracle with configurable multiplicative error — the quality dial.
+
+    Every prediction is ``truth * lognormal(0, sigma)`` (a fresh draw
+    per call), clipped to the probe range. ``sigma`` sweeps continuously
+    from the oracle (0.0) to worse-than-prompt-only (>1.0); at
+    ``sigma -> 0`` the induced queue ordering converges to the oracle
+    ordering (pinned by a hypothesis property test).
+    """
+
+    def __init__(self, pc: ProbeConfig, *, sigma: float = 0.6, seed: int = 0):
+        super().__init__(pc)
+        self.sigma = float(sigma)
+        self.rng = random.Random(seed)
+
+    def _noisy(self, truth: float) -> float:
+        err = self.rng.lognormvariate(0.0, self.sigma) if self.sigma else 1.0
+        return min(max(truth * err, 0.0), float(self.pc.max_len))
+
+    def initial(self, req) -> float:
+        """Noisy total output length."""
+        return max(self._noisy(float(req.true_out_len)), 1.0)
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        """Noisy remaining length at the end of prefill."""
+        return self._noisy(max(req.true_out_len - len(req.generated), 0))
+
+    def on_token(self, req, probe_probs=None) -> float:
+        """Noisy remaining length after each probe boundary."""
+        return self._noisy(max(req.true_out_len - len(req.generated), 0))
+
+
+class BucketedOraclePredictor(PredictorBase):
+    """The paper's k-bin quantization of the oracle (Section 3.1 regime).
+
+    Predictions are the bin *means* of equal-width bins over
+    ``[0, max_len]`` — exactly the information a perfectly-trained
+    k-class probe could express. ``bins`` dials quantization coarseness
+    independently of noise (2 bins ≈ short/long classification).
+    """
+
+    def __init__(self, pc: ProbeConfig, *, bins: int = 0):
+        super().__init__(pc)
+        self.bins = int(bins) if bins else pc.num_bins
+        if self.bins < 1:
+            raise ValueError("bucketed predictor needs >= 1 bin")
+        self.width = float(pc.max_len) / self.bins
+
+    def _quantize(self, truth: float) -> float:
+        b = min(int(truth / self.width), self.bins - 1)
+        return self.width * (b + 0.5)
+
+    def initial(self, req) -> float:
+        """Bin mean holding the total output length."""
+        return self._quantize(float(max(req.true_out_len, 1)))
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        """Bin mean holding the remaining length at end of prefill."""
+        return self._quantize(max(req.true_out_len - len(req.generated), 0))
+
+    def on_token(self, req, probe_probs=None) -> float:
+        """Bin mean holding the current remaining length."""
+        return self._quantize(max(req.true_out_len - len(req.generated), 0))
+
+
+class PromptOnlyPredictor(PredictorBase):
+    """One-shot admission-time estimate from an external prompt model
+    (the paper's BERT-baseline regime), never refined.
+
+    ``initial`` draws one multiplicative-lognormal estimate (the same
+    error model as `OraclePredictor.initial`, so ``sigma`` is comparable)
+    and charges a BERT-base-sized forward over the prompt; both later
+    hooks just age the estimate deterministically (r0 - tokens served) —
+    the information content never improves after admission.
+    """
+
+    flops_per_prompt_token = PROXY_FLOPS_PER_TOKEN
+
+    def __init__(self, pc: ProbeConfig, *, sigma: float = 0.9, seed: int = 0):
+        super().__init__(pc)
+        self.sigma = float(sigma)
+        self.rng = random.Random(seed)
+
+    def initial(self, req) -> float:
+        """One noisy prompt-model estimate; charged per prompt token."""
+        self.charge(self.flops_per_prompt_token * len(req.prompt))
+        err = self.rng.lognormvariate(0.0, self.sigma) if self.sigma else 1.0
+        return min(max(req.true_out_len * err, 1.0), float(self.pc.max_len))
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        """No refinement: the aged admission estimate."""
+        return max(float(req.entry.r0) - req.entry.age, 0.0)
+
+    def on_token(self, req, probe_probs=None) -> float:
+        """No refinement: the aged admission estimate."""
+        return max(float(req.entry.r0) - req.entry.age, 0.0)
+
+
+class RankOnlyPredictor(PredictorBase):
+    """Learning-to-rank scheduling signal (Fu et al., arXiv:2408.15792):
+    a total order over the queue with **no magnitudes**.
+
+    Scores are a strictly monotone, scale-free transform of the (noisy)
+    remaining length — ``log1p`` normalized into [0, 1] — so comparing
+    two scores reproduces the true ordering but no score is a token
+    count: the engine must not use them for preemption budgets,
+    lookahead pinning, or backlog sums (``provides_magnitude = False``
+    enforces this; only the scheduler's ``rank`` policy consumes them).
+    ``noise`` is the ranker-error dial: multiplicative lognormal
+    perturbation before scoring, so pairwise inversions grow with it.
+    With ``noise=0`` the induced `select_batch` ordering is identical
+    to magnitude-SRPT (pinned by tests).
+    """
+
+    provides_magnitude = False
+
+    def __init__(self, pc: ProbeConfig, *, noise: float = 0.0, seed: int = 0):
+        super().__init__(pc)
+        self.noise = float(noise)
+        self.rng = random.Random(seed)
+        self._norm = math.log1p(float(pc.max_len))
+
+    def _score(self, value: float) -> float:
+        if self.noise:
+            value = value * self.rng.lognormvariate(0.0, self.noise)
+        return math.log1p(max(value, 0.0)) / self._norm
+
+    def initial(self, req) -> float:
+        """Ordinal score of the total output length."""
+        return self._score(float(max(req.true_out_len, 1)))
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        """Ordinal score of the remaining length at end of prefill."""
+        return self._score(max(req.true_out_len - len(req.generated), 0))
+
+    def on_token(self, req, probe_probs=None) -> float:
+        """Ordinal score of the current remaining length."""
+        return self._score(max(req.true_out_len - len(req.generated), 0))
+
+
+class IterativePredictor(PredictorBase):
+    """ELIS-style iterative re-prediction (Choi et al., arXiv:2505.09142):
+    a proxy estimator re-predicts the remaining length every ``period``
+    probe boundaries; predictions age deterministically in between.
+
+    ``period`` is the staleness dial (1 = re-predict at every boundary,
+    the freshest and most expensive; large = admission-estimate-like).
+    Each re-prediction draws a fresh ``sigma``-lognormal error around
+    the true remaining length and charges one proxy-token forward.
+    """
+
+    flops_initial = PROXY_FLOPS_PER_TOKEN
+    flops_refine = PROXY_FLOPS_PER_TOKEN
+
+    def __init__(self, pc: ProbeConfig, *, period: int = 8,
+                 sigma: float = 0.3, seed: int = 0):
+        super().__init__(pc)
+        if period < 1:
+            raise ValueError("iterative predictor needs period >= 1")
+        self.period = int(period)
+        self.sigma = float(sigma)
+        self.rng = random.Random(seed)
+        self._boundaries: dict[int, int] = {}   # rid -> probe-boundary count
+
+    def _estimate(self, truth: float) -> float:
+        err = self.rng.lognormvariate(0.0, self.sigma) if self.sigma else 1.0
+        return min(max(truth * err, 0.0), float(self.pc.max_len))
+
+    def initial(self, req) -> float:
+        """Admission-time proxy estimate (one charged proxy forward)."""
+        self.charge(self.flops_initial)
+        self._boundaries[req.rid] = 0
+        return max(self._estimate(float(req.true_out_len)), 1.0)
+
+    def on_prefill(self, req, tap_mean=None) -> float:
+        """Fresh proxy re-prediction at the end of prefill (charged)."""
+        self.charge(self.flops_refine)
+        return self._estimate(max(req.true_out_len - len(req.generated), 0))
+
+    def on_token(self, req, probe_probs=None) -> float:
+        """Re-predict every ``period``-th boundary, else age the estimate."""
+        c = self._boundaries.get(req.rid, 0) + 1
+        self._boundaries[req.rid] = c
+        if c % self.period:
+            return max(float(req.entry.pred_remaining) - 1.0, 0.0)
+        self.charge(self.flops_refine)
+        return self._estimate(max(req.true_out_len - len(req.generated), 0))
+
+
+# ---------------------------------------------------------------------------
+# strategy factory
+# ---------------------------------------------------------------------------
+
+def parse_spec(spec: str) -> tuple[str, dict]:
+    """Parse a predictor spec string ``name[:key=value,...]``.
+
+    Values parse as int when possible, else float, else string — e.g.
+    ``"noisy-oracle:sigma=0.5"`` -> ``("noisy-oracle", {"sigma": 0.5})``.
+    """
+    name, _, argstr = spec.partition(":")
+    kwargs: dict = {}
+    for kv in filter(None, argstr.split(",")):
+        if "=" not in kv:
+            raise ValueError(f"bad predictor spec argument {kv!r} "
+                             f"(want key=value)")
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        kwargs[k.strip()] = v
+    return name.strip(), kwargs
+
+
+def make_predictor(spec: str, pc: ProbeConfig, *, seed: int = 0):
+    """Build a sim-mode predictor from a strategy spec string.
+
+    ``spec`` is ``name[:key=value,...]`` with ``name`` in `STRATEGIES`;
+    unknown keys raise (strategies are keyword-strict). ``trail-probe``
+    returns the engine's legacy default `OraclePredictor` with identical
+    constructor arguments, so selecting it explicitly is byte-identical
+    to not selecting a strategy at all. Real-mode engines keep building
+    `ProbePredictor` directly (it needs live probe params).
+    """
+    name, kwargs = parse_spec(spec)
+    builders = {
+        "trail-probe": OraclePredictor,
+        "oracle": ExactOraclePredictor,
+        "noisy-oracle": NoisyOraclePredictor,
+        "bucketed": BucketedOraclePredictor,
+        "prompt-only": PromptOnlyPredictor,
+        "rank-only": RankOnlyPredictor,
+        "iterative": IterativePredictor,
+    }
+    if name not in builders:
+        raise ValueError(f"unknown predictor strategy {name!r}; "
+                         f"choose from {STRATEGIES}")
+    cls = builders[name]
+    if cls in (ExactOraclePredictor, BucketedOraclePredictor):
+        return cls(pc, **kwargs)            # deterministic: no seed knob
+    return cls(pc, seed=seed, **kwargs)

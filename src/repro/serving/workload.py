@@ -130,6 +130,14 @@ class WorkloadConfig:
             wins.
         trace_time_warp: uniform playback-speed multiplier for trace
             replay (see `repro.traces.ReplayConfig`).
+        predictor: length-prediction strategy spec the scenario
+            recommends (``name[:key=value,...]``, see
+            `repro.serving.predictors.STRATEGIES`). Workload generation
+            itself never reads it — it rides the config so scenario
+            presets and ``scenario_config(..., predictor=...)``
+            overrides reach the engine/cluster launchers
+            (``launch/serve.py`` uses it when ``--predictor`` is not
+            given). Empty = the engine's legacy default.
     """
 
     n_requests: int = 256
@@ -157,6 +165,7 @@ class WorkloadConfig:
     trace_rate_scale: float = 1.0
     trace_target_rate: float = 0.0
     trace_time_warp: float = 1.0
+    predictor: str = ""
 
 
 def sample_output_length(rng: random.Random, wc,

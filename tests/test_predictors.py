@@ -1,0 +1,222 @@
+"""Predictor strategy layer tests: spec parsing, cost accounting,
+determinism, legacy byte-identity, and rank/magnitude agreement."""
+
+import math
+
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+
+from repro.config import get_config
+from repro.core.scheduler import ReqState, SchedEntry, select_batch
+from repro.serving.engine import run_policy
+from repro.serving.predictors import (STRATEGIES, ExactOraclePredictor,
+                                      NoisyOraclePredictor, OraclePredictor,
+                                      PromptOnlyPredictor, make_predictor,
+                                      parse_spec)
+from repro.serving.workload import WorkloadConfig, generate
+
+CFG = get_config("granite-3-8b")
+
+#: One representative spec per strategy, paired with a compatible policy.
+STRATEGY_SPECS = (
+    ("trail-probe", "trail"),
+    ("oracle", "trail"),
+    ("noisy-oracle:sigma=0.5", "trail"),
+    ("bucketed:bins=4", "trail"),
+    ("prompt-only", "trail-bert"),
+    ("rank-only", "rank"),
+    ("iterative:period=4", "trail"),
+)
+
+
+def _workload(n=40, rate=20.0, seed=3):
+    return generate(WorkloadConfig(n_requests=n, request_rate=rate,
+                                   seed=seed, vocab=CFG.vocab_size))
+
+
+# ---------------------------------------------------------------------------
+# spec parsing / factory
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_forms():
+    assert parse_spec("oracle") == ("oracle", {})
+    assert parse_spec("noisy-oracle:sigma=0.5") == ("noisy-oracle",
+                                                    {"sigma": 0.5})
+    assert parse_spec("bucketed:bins=4") == ("bucketed", {"bins": 4})
+    name, kw = parse_spec("iterative:period=8,sigma=0.3")
+    assert name == "iterative" and kw == {"period": 8, "sigma": 0.3}
+    with pytest.raises(ValueError):
+        parse_spec("noisy-oracle:sigma")          # not key=value
+
+
+def test_make_predictor_every_strategy():
+    for name in STRATEGIES:
+        p = make_predictor(name, CFG.probe, seed=1)
+        assert hasattr(p, "initial") and hasattr(p, "on_token")
+    with pytest.raises(ValueError):
+        make_predictor("no-such-strategy", CFG.probe)
+    with pytest.raises(TypeError):
+        make_predictor("oracle:sigma=1.0", CFG.probe)   # keyword-strict
+
+
+def test_trail_probe_spec_is_the_legacy_class():
+    p = make_predictor("trail-probe", CFG.probe, seed=7)
+    assert type(p) is OraclePredictor
+    assert p.provides_magnitude and p.flops_initial == 0.0
+
+
+# ---------------------------------------------------------------------------
+# legacy byte-identity
+# ---------------------------------------------------------------------------
+
+def test_trail_probe_byte_identical_to_legacy_default():
+    reqs = _workload()
+    legacy = run_policy(CFG, "trail", reqs, seed=0)
+    spec = run_policy(CFG, "trail", reqs, predictor="trail-probe", seed=0)
+    assert legacy.latencies == spec.latencies
+    assert legacy.summary() == spec.summary()
+
+
+# ---------------------------------------------------------------------------
+# determinism: same trace + seed -> byte-identical metrics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,policy", STRATEGY_SPECS,
+                         ids=[s for s, _ in STRATEGY_SPECS])
+def test_strategy_deterministic(spec, policy):
+    reqs = _workload()
+    a = run_policy(CFG, policy, reqs, predictor=spec, seed=0)
+    b = run_policy(CFG, policy, reqs, predictor=spec, seed=0)
+    assert a.latencies == b.latencies
+    assert a.summary() == b.summary()
+
+
+# ---------------------------------------------------------------------------
+# cost accounting
+# ---------------------------------------------------------------------------
+
+def test_zero_cost_strategies_charge_nothing():
+    reqs = _workload()
+    for spec, policy in (("trail-probe", "trail"), ("oracle", "trail"),
+                         ("noisy-oracle:sigma=0.5", "trail"),
+                         ("bucketed:bins=4", "trail"),
+                         ("rank-only", "rank")):
+        s = run_policy(CFG, policy, reqs, predictor=spec, seed=0)
+        d = s.summary()
+        assert d["predictor_time_s"] == 0.0, spec
+        assert d["predictor_calls"] == 0, spec
+
+
+def test_prompt_only_charges_per_prompt_token():
+    p = PromptOnlyPredictor(CFG.probe, seed=0)
+
+    class _Req:
+        rid, prompt, true_out_len = 0, list(range(17)), 30
+    p.initial(_Req())
+    assert p.cost_calls == 1
+    assert p.cost_flops_pending == p.flops_per_prompt_token * 17
+    assert p.take_cost_flops() == p.flops_per_prompt_token * 17
+    assert p.take_cost_flops() == 0.0                 # drained
+
+
+def test_costed_strategy_charges_engine_clock():
+    reqs = _workload()
+    free = run_policy(CFG, "trail-bert", reqs, predictor="oracle", seed=0)
+    paid = run_policy(CFG, "trail-bert", reqs, predictor="prompt-only",
+                      seed=0)
+    assert free.summary()["predictor_time_s"] == 0.0
+    d = paid.summary()
+    assert d["predictor_calls"] == len(reqs)          # one charge per admit
+    # total charged seconds = total prompt tokens x proxy flops / peak
+    total_tokens = sum(len(r.prompt) for r in reqs)
+    expect = (PromptOnlyPredictor.flops_per_prompt_token * total_tokens
+              / free.hardware.peak_flops if hasattr(free, "hardware")
+              else None)
+    assert d["predictor_time_s"] > 0.0
+    if expect is not None:
+        assert d["predictor_time_s"] == pytest.approx(expect)
+
+
+def test_iterative_period_controls_refresh_cost():
+    reqs = _workload()
+    fast = run_policy(CFG, "trail", reqs, predictor="iterative:period=1",
+                      seed=0)
+    slow = run_policy(CFG, "trail", reqs, predictor="iterative:period=64",
+                      seed=0)
+    assert fast.summary()["predictor_calls"] > slow.summary()[
+        "predictor_calls"]
+    assert fast.summary()["predictor_time_s"] > slow.summary()[
+        "predictor_time_s"]
+
+
+# ---------------------------------------------------------------------------
+# magnitude contract
+# ---------------------------------------------------------------------------
+
+def test_rank_only_rejects_magnitude_policies():
+    reqs = _workload(n=4)
+    for policy in ("trail", "trail-bert", "srpt"):
+        with pytest.raises(ValueError):
+            run_policy(CFG, policy, reqs, predictor="rank-only", seed=0)
+    # the rank policy (and non-preempting fcfs) are fine
+    run_policy(CFG, "rank", reqs, predictor="rank-only", seed=0)
+    run_policy(CFG, "fcfs", reqs, predictor="rank-only", seed=0)
+
+
+def test_rank_only_matches_oracle_ordering_end_to_end():
+    # noise-free ordinal scores are a monotone transform of the truth, so
+    # the rank policy must reproduce the oracle's srpt-style schedule
+    reqs = _workload()
+    rank = run_policy(CFG, "rank", reqs, predictor="rank-only", seed=0)
+    srpt = run_policy(CFG, "srpt", reqs, predictor="oracle", seed=0)
+    assert rank.latencies == srpt.latencies
+
+
+# ---------------------------------------------------------------------------
+# select_batch: rank-policy agreement with magnitude-SRPT
+# ---------------------------------------------------------------------------
+
+def _entries(sizes, states):
+    out = {}
+    for i, (size, st_) in enumerate(zip(sizes, states)):
+        out[i] = SchedEntry(rid=i, arrival=float(i), prompt_len=8,
+                            r0=float(size), pred_remaining=float(size),
+                            age=0, c_limit=0.8, state=st_)
+    return out
+
+
+@given(st.lists(st.tuples(st.integers(1, 512), st.booleans()),
+                min_size=1, max_size=12),
+       st.integers(1, 6))
+@settings(max_examples=200, deadline=None)
+def test_rank_policy_agrees_with_srpt_under_monotone_scores(jobs, max_batch):
+    sizes = [s for s, _ in jobs]
+    states = [ReqState.RUNNING if r else ReqState.WAITING for _, r in jobs]
+    kw = dict(max_batch=max_batch, mem_budget=1 << 62,
+              bytes_fn=lambda e: 1, lookahead=1)
+    srpt = select_batch(_entries(sizes, states), policy="srpt", **kw)
+    # ordinal scores: any strictly monotone transform of the sizes
+    ents = _entries(sizes, states)
+    for e in ents.values():
+        e.pred_remaining = math.log1p(e.pred_remaining) / math.log1p(512.0)
+    rank = select_batch(ents, policy="rank", **kw)
+    assert set(rank.scheduled) == set(srpt.scheduled)
+    assert set(rank.preempted) == set(srpt.preempted)
+
+
+@given(st.lists(st.integers(1, 512), min_size=2, max_size=10, unique=True))
+@settings(max_examples=200, deadline=None)
+def test_noisy_oracle_sigma_zero_matches_oracle_ordering(lengths):
+    pc = CFG.probe
+    noisy = NoisyOraclePredictor(pc, sigma=0.0, seed=9)
+    exact = ExactOraclePredictor(pc)
+
+    class _Req:
+        def __init__(self, n):
+            self.rid, self.prompt, self.generated = n, [1], []
+            self.true_out_len = n
+    reqs = [_Req(n) for n in lengths]
+    n_order = sorted(reqs, key=lambda r: noisy.initial(r))
+    e_order = sorted(reqs, key=lambda r: exact.initial(r))
+    assert [r.rid for r in n_order] == [r.rid for r in e_order]
