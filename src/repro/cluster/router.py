@@ -40,16 +40,29 @@ Dispatch policies (``RouterConfig.policy``):
                     0-hit case) fall back to the full ``jspw`` rule, so
                     with prefix caching disabled the policy degrades to
                     exactly ``jspw``.
+
+Resilience (optional, via a `repro.cluster.faults.FaultSchedule`): the
+router health-checks the fleet at every loop boundary — crashed replicas
+are drained (their paged KV fully reclaimed) and their unfinished
+requests redispatched to survivors with capped exponential backoff under
+a per-request retry budget; straggler replicas are excluded from
+dispatch while degraded; transient submit failures fail over to another
+replica at the same instant. Retried requests keep their original
+arrival timestamp, so completion latency and TTFT stay user-perceived.
+Without a schedule the loop is byte-identical to the fault-free path.
 """
 
 from __future__ import annotations
 
 import copy
+import heapq
 import random
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.cluster.faults import NEVER, FaultSchedule
+from repro.core.scheduler import SchedEntry
 from repro.serving.engine import Engine, EngineConfig
 from repro.serving.request import Request
 
@@ -72,12 +85,23 @@ class RouterConfig:
             Seconds is the unit that stays meaningful once replicas run
             on heterogeneous hardware; with identical replicas the two
             units rank identically, so `jspw` dispatch is unchanged.
+        max_retries: failover retry budget per request — how many times
+            a request drained from a crashed replica (or bounced by a
+            transient submit failure) is redispatched before it is
+            declared lost.
+        retry_backoff_s: base of the capped exponential backoff between
+            failover redispatches (the k-th retry waits
+            ``min(retry_backoff_s * 2**(k-1), retry_backoff_cap_s)``).
+        retry_backoff_cap_s: the backoff cap.
     """
 
     n_replicas: int = 2
     policy: str = "round-robin"
     seed: int = 0
     backlog_unit: str = "tokens"
+    max_retries: int = 2
+    retry_backoff_s: float = 0.5
+    retry_backoff_cap_s: float = 8.0
 
 
 @dataclass
@@ -95,6 +119,10 @@ class ClusterStats:
             replicas were built with event logs). Feed it to
             `repro.metrics.rollup` for cluster-wide TTFT/TBT/completion
             percentiles and SLO attainment.
+        n_requests: arrival-stream size (the goodput denominator).
+        n_retries: failover redispatches performed across the run.
+        n_lost: requests dropped after exhausting the retry budget.
+        n_crashes: replica crash events applied.
     """
 
     latencies: list = field(default_factory=list)
@@ -103,6 +131,10 @@ class ClusterStats:
     replica_summaries: list = field(default_factory=list)
     makespan: float = 0.0
     event_log: object = None
+    n_requests: int = 0
+    n_retries: int = 0
+    n_lost: int = 0
+    n_crashes: int = 0
 
     def summary(self) -> dict:
         """Aggregate cluster metrics into the benchmark-facing dict."""
@@ -129,6 +161,20 @@ class ClusterStats:
             "predictor_calls": sum(s.get("predictor_calls", 0)
                                    for s in self.replica_summaries),
             "makespan": self.makespan,
+            "retries": self.n_retries,
+            "lost": self.n_lost,
+            "replica_crashes": self.n_crashes,
+            "cancelled": sum(s.get("cancelled", 0)
+                             for s in self.replica_summaries),
+            "timeouts": sum(s.get("timeouts", 0)
+                            for s in self.replica_summaries),
+            "shed": sum(s.get("shed", 0)
+                        for s in self.replica_summaries),
+            # served-to-completion fraction of the arrival stream —
+            # crashes, sheds, timeouts, and lost requests all count
+            # against it
+            "goodput": (len(lat) / self.n_requests
+                        if self.n_requests else 0.0),
         }
 
 
@@ -142,7 +188,8 @@ class Router:
     """
 
     def __init__(self, replicas: list[Engine], rc: RouterConfig,
-                 size_predictor=None):
+                 size_predictor=None, faults: FaultSchedule | None = None,
+                 event_log=None):
         """Wrap pre-built replica engines under one dispatch policy.
 
         Args:
@@ -153,6 +200,13 @@ class Router:
                 truncation (see module docstring). It must be a separate
                 instance from any replica's predictor so router draws
                 never perturb engine prediction streams.
+            faults: optional `FaultSchedule` — deterministic crash /
+                straggler / flaky-submit injection; None (the default)
+                runs fault-free with zero overhead in the loop.
+            event_log: optional router-owned `repro.metrics.EventLog`
+                for cluster-level events (``replica_down`` /
+                ``replica_up`` / ``retry`` / lost-request ``cancel``);
+                merged into `merged_event_log()`.
         """
         if rc.policy not in ROUTER_POLICIES:
             raise ValueError(f"unknown router policy {rc.policy!r}; "
@@ -163,11 +217,29 @@ class Router:
         if len(replicas) != rc.n_replicas:
             raise ValueError(f"{len(replicas)} replicas != "
                              f"n_replicas={rc.n_replicas}")
+        for c in (faults.crashes if faults is not None else ()):
+            if not 0 <= c.replica < rc.n_replicas:
+                raise ValueError(f"fault schedule names replica "
+                                 f"{c.replica} (cluster has "
+                                 f"{rc.n_replicas})")
         self.replicas = replicas
         self.rc = rc
         self.size_predictor = size_predictor
+        self.faults = faults
+        self.events = event_log
         self._rr_next = 0
         self._rng = random.Random(rc.seed)
+        # dedicated stream for transient-submit draws: fault outcomes
+        # must not perturb the pow2 sampler (and vice versa)
+        self._fault_rng = random.Random(faults.seed if faults is not None
+                                        else 0)
+        self._alive = [True] * rc.n_replicas
+        self._crashed = [False] * rc.n_replicas   # crash already applied
+        self._retryq: list[tuple[float, int, Request]] = []
+        self._retry_seq = 0
+        self.n_retries = 0
+        self.n_lost = 0
+        self.n_crashes = 0
         self.dispatch_counts = [0] * rc.n_replicas
         self.dispatch_log: list[tuple[int, int]] = []   # (rid, replica)
 
@@ -175,20 +247,48 @@ class Router:
     def _queue_key(self, i: int) -> tuple:
         return (self.replicas[i].queue_len(), i)
 
-    def _pick(self, req: Request) -> int:
-        """Choose the replica index for one arrival (policy decision)."""
+    def _candidates(self, t: float, exclude=()) -> list[int]:
+        """Replica indices eligible for dispatch at time ``t``: alive,
+        not excluded, and (fault mode) not inside a straggler window —
+        unless every alive replica is degraded, in which case slow
+        beats nowhere."""
+        alive = [i for i in range(len(self.replicas))
+                 if self._alive[i] and i not in exclude]
+        if self.faults is None:
+            return alive
+        healthy = [i for i in alive if not self.faults.degraded(i, t)]
+        return healthy or alive
+
+    def _pick(self, req: Request, cands: list[int] | None = None) -> int:
+        """Choose the replica index for one arrival (policy decision).
+
+        ``cands`` restricts the choice (fault mode: alive, non-degraded
+        replicas); None = all replicas, and every policy below reduces
+        exactly to its pre-resilience behavior in that case.
+        """
         pol = self.rc.policy
         n = len(self.replicas)
+        if cands is None:
+            cands = list(range(n))
         if pol == "round-robin":
-            i = self._rr_next
-            self._rr_next = (self._rr_next + 1) % n
-            return i
+            # cyclic over the eligible set: advance the cursor until it
+            # lands on a candidate (identical to the legacy cyclic scan
+            # when every replica is eligible)
+            for _ in range(n):
+                i = self._rr_next
+                self._rr_next = (self._rr_next + 1) % n
+                if i in cands:
+                    return i
+            return cands[0]
         if pol == "jsq":
-            return min(range(n), key=self._queue_key)
+            return min(cands, key=self._queue_key)
         if pol == "pow2":
-            if n == 1:
-                return 0
-            a, b = self._rng.sample(range(n), 2)
+            if len(cands) == 1:
+                return cands[0]
+            # full fleet keeps the legacy range(n) draw so fault-free
+            # dispatch streams stay byte-identical
+            pool = range(n) if len(cands) == n else cands
+            a, b = self._rng.sample(pool, 2)
             return min(a, b, key=self._queue_key)
         # the size estimate is drawn once per dispatch (predictor streams
         # are stateful), shared by every replica's key below
@@ -197,15 +297,15 @@ class Router:
         if pol == "prefix-affinity":
             # longest cached prompt prefix wins; ties (notably 0-hit
             # everywhere, or caching disabled) fall back to jspw
-            hits = [self.replicas[i].cached_prefix_tokens(req.prompt)
-                    for i in range(n)]
-            best = max(hits)
-            cands = [i for i in range(n) if hits[i] == best]
-            return min(cands, key=lambda i: self._jspw_key(i, r_hat))
+            hits = {i: self.replicas[i].cached_prefix_tokens(req.prompt)
+                    for i in cands}
+            best = max(hits.values())
+            tied = [i for i in cands if hits[i] == best]
+            return min(tied, key=lambda i: self._jspw_key(i, r_hat))
         # jspw: live predicted-work backlog — truncated at the arrival's
         # own size estimate when available (SRPT-interfering work) — with
         # KV headroom, queue length, then index as tie-breaks
-        return min(range(n), key=lambda i: self._jspw_key(i, r_hat))
+        return min(cands, key=lambda i: self._jspw_key(i, r_hat))
 
     def _jspw_key(self, i: int, r_hat: float | None) -> tuple:
         """The jspw ordering for one replica: predicted interfering work
@@ -219,39 +319,192 @@ class Router:
                 else eng.backlog(truncate=r_hat))
         return (work, -eng.kv_headroom(), eng.queue_len(), i)
 
-    def dispatch(self, req: Request) -> int:
-        """Route one arrival to a replica and submit it there."""
-        i = self._pick(req)
-        self.replicas[i].submit(req)
-        self.dispatch_counts[i] += 1
-        self.dispatch_log.append((req.rid, i))
-        return i
+    def dispatch(self, req: Request, t: float | None = None) -> int:
+        """Route one arrival to a replica and submit it there.
+
+        In fault mode the pick is restricted to alive, non-degraded
+        replicas and the submit may transiently fail (seeded draw);
+        failures charge the retry budget and fail over to another
+        replica immediately when one exists, else requeue with backoff.
+        Returns the replica index, or -1 if the request could not be
+        placed (requeued or lost).
+        """
+        t = req.arrival if t is None else t
+        tried: set[int] = set()
+        while True:
+            cands = self._candidates(t, exclude=tried)
+            if not cands:
+                self._defer_or_drop(req, t)
+                return -1
+            i = self._pick(req, cands if (self.faults is not None
+                                          or len(cands)
+                                          != len(self.replicas))
+                           else None)
+            if (self.faults is not None and self._fault_rng.random()
+                    < self.faults.flaky_rate(i, t)):
+                # transient submit failure: fail over to another replica
+                # (same instant), charged against the retry budget
+                tried.add(i)
+                if not self._charge_retry(req, t):
+                    return -1
+                continue
+            self.replicas[i].submit(req)
+            self.dispatch_counts[i] += 1
+            self.dispatch_log.append((req.rid, i))
+            return i
+
+    # -- fault machinery --------------------------------------------------
+    def _apply_faults(self, t_ref: float):
+        """Step-level health check at cluster time ``t_ref``: apply due
+        crashes (drain + requeue the dead replica's requests) and due
+        recoveries. A busy replica crashes at its first megastep
+        boundary at/after the scheduled time; an idle one when the
+        cluster frontier passes it."""
+        if self.faults is None:
+            return
+        for i, eng in enumerate(self.replicas):
+            c = self.faults.crash_for(i)
+            if c is None:
+                continue
+            if (self._alive[i] and not self._crashed[i]
+                    and c.at <= max(eng.now, t_ref)):
+                t_c = max(eng.now, c.at)
+                self._crashed[i] = True
+                self._alive[i] = False
+                self.n_crashes += 1
+                drained = eng.crash(t_c)
+                if self.events is not None:
+                    self.events.emit(t_c, -1, "replica_down", i)
+                for req in drained:
+                    self._requeue(req, t_c)
+            elif (self._crashed[i] and not self._alive[i]
+                    and c.recover_at <= t_ref):
+                self._alive[i] = True
+                eng.revive(c.recover_at)
+                if self.events is not None:
+                    self.events.emit(c.recover_at, -1, "replica_up", i)
+
+    def _charge_retry(self, req: Request, t_fail: float) -> bool:
+        """Spend one retry; False when the budget is exhausted (the
+        request is dropped and counted lost)."""
+        if req.retries >= self.rc.max_retries:
+            self.n_lost += 1
+            if self.events is not None:
+                # the arrival may never have reached any engine's log;
+                # emit it (rollup dedups per-rid) so goodput sees the
+                # loss, then the terminal cancel
+                self.events.emit(req.arrival, req.rid, "arrival")
+                self.events.emit(max(t_fail, req.arrival), req.rid,
+                                 "cancel")
+            return False
+        req.retries += 1
+        self.n_retries += 1
+        if self.events is not None:
+            self.events.emit(max(t_fail, req.arrival), req.rid, "retry",
+                             req.retries)
+        return True
+
+    def _requeue(self, req: Request, t_fail: float):
+        """Failover path: reset a drained request's progress and requeue
+        it with capped exponential backoff (original arrival preserved —
+        completion latency stays user-perceived)."""
+        if not self._charge_retry(req, t_fail):
+            return
+        backoff = min(self.rc.retry_backoff_s * 2 ** (req.retries - 1),
+                      self.rc.retry_backoff_cap_s)
+        self._reset_for_retry(req)
+        heapq.heappush(self._retryq,
+                       (t_fail + backoff, self._retry_seq, req))
+        self._retry_seq += 1
+
+    @staticmethod
+    def _reset_for_retry(req: Request):
+        """Wipe engine-side progress so the survivor re-prefills from
+        scratch (its prefix cache makes that cheap for warm prompts).
+        The original ``arrival`` and any already-streamed first-token
+        time are kept — metrics stay user-perceived."""
+        req.generated = []
+        req.entry = SchedEntry(rid=req.rid, arrival=req.arrival,
+                               prompt_len=len(req.prompt))
+        req.posterior = None
+        req.tap_sum = None
+        req.tap_cnt = 0
+        req.slot = -1
+        req.finish_time = -1.0
+
+    def _defer_or_drop(self, req: Request, t: float):
+        """No eligible replica: wait for the next scheduled recovery
+        when one exists (not charged as a retry), else the request is
+        lost."""
+        recoveries = []
+        if self.faults is not None:
+            for i in range(len(self.replicas)):
+                if self._alive[i]:
+                    continue
+                c = self.faults.crash_for(i)
+                if c is not None and c.recover_at != NEVER:
+                    recoveries.append(c.recover_at)
+        t_rec = min((r for r in recoveries if r > t), default=None)
+        if t_rec is not None:
+            heapq.heappush(self._retryq, (t_rec, self._retry_seq, req))
+            self._retry_seq += 1
+            return
+        self.n_lost += 1
+        if self.events is not None:
+            self.events.emit(req.arrival, req.rid, "arrival")
+            self.events.emit(max(t, req.arrival), req.rid, "cancel")
 
     # -- virtual-time event loop ------------------------------------------
     def run(self, requests: list[Request]) -> ClusterStats:
         """Drive the whole arrival stream to completion.
 
-        Arrivals are consumed in time order; between dispatches, the busy
-        replica with the smallest virtual clock steps. The loop ends when
-        every replica is drained.
+        Arrivals (original stream merged with failover retries) are
+        consumed in time order; between dispatches, the busy replica
+        with the smallest virtual clock steps, with due faults applied
+        at every boundary. The loop ends when every alive replica is
+        drained and no arrival or retry remains.
         """
         pending = sorted(requests, key=lambda r: r.arrival)
         q = 0
         while True:
-            busy = [e for e in self.replicas if e.has_work()]
-            if q < len(pending):
-                t_arr = pending[q].arrival
-                frontier = min((e.now for e in busy), default=t_arr)
-                if t_arr <= frontier:
-                    self.dispatch(pending[q])
-                    q += 1
+            busy = [e for i, e in enumerate(self.replicas)
+                    if self._alive[i] and e.has_work()]
+            # next arrival: original stream vs. failover retry queue
+            t_arr = pending[q].arrival if q < len(pending) else None
+            t_rty = self._retryq[0][0] if self._retryq else None
+            t_next = (t_arr if t_rty is None
+                      else t_rty if t_arr is None else min(t_arr, t_rty))
+            if t_next is not None:
+                frontier = min((e.now for e in busy), default=t_next)
+                if t_next <= frontier:
+                    # cluster time has reached the arrival: fire any
+                    # fault due by now (idle replicas included) before
+                    # the routing decision observes the fleet
+                    self._apply_faults(t_next)
+                    if t_rty is not None and (t_arr is None
+                                              or t_rty <= t_arr):
+                        _, _, req = heapq.heappop(self._retryq)
+                    else:
+                        req = pending[q]
+                        q += 1
+                    self.dispatch(req, t_next)
                     continue
             if not busy:
                 break
             lag = min(busy, key=lambda e: e.now)
+            if self.faults is not None:
+                self._apply_faults(lag.now)
+                if not lag.alive:       # the laggard just crashed
+                    continue
+                idx = self.replicas.index(lag)
+                lag.set_slowdown(self.faults.slow_factor(idx, lag.now))
             lag.step()
 
-        stats = ClusterStats(dispatch_counts=list(self.dispatch_counts))
+        stats = ClusterStats(dispatch_counts=list(self.dispatch_counts),
+                             n_requests=len(requests),
+                             n_retries=self.n_retries,
+                             n_lost=self.n_lost,
+                             n_crashes=self.n_crashes)
         for eng in self.replicas:
             stats.latencies.extend(eng.stats.latencies)
             stats.ttfts.extend(eng.stats.ttfts)
@@ -271,6 +524,8 @@ class Router:
         """
         logs = [eng.events for eng in self.replicas
                 if getattr(eng, "events", None) is not None]
+        if self.events is not None and len(self.events):
+            logs.append(self.events)
         if not logs:
             return None
         from repro.metrics.events import EventLog
@@ -282,6 +537,8 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
                 predictor_factory=None, size_predictor=None,
                 record_events: bool = False,
                 backlog_unit: str = "tokens",
+                faults: FaultSchedule | None = None,
+                max_retries: int = 2,
                 **engine_kwargs) -> ClusterStats:
     """Serve ``requests`` on an N-replica cluster (the `run_policy` twin).
 
@@ -302,6 +559,13 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
         record_events: give each replica a metrics-layer `EventLog`; the
             merged stream lands in ``ClusterStats.event_log``.
         backlog_unit: ``tokens`` | ``seconds`` — see `RouterConfig`.
+        faults: optional `FaultSchedule` (or a ``--chaos`` spec via
+            `repro.cluster.faults.parse_chaos`) — deterministic replica
+            crash / straggler / flaky-submit injection with router
+            failover. None (the default) is byte-identical to the
+            pre-resilience fault-free path.
+        max_retries: per-request failover retry budget (see
+            `RouterConfig`).
         **engine_kwargs: forwarded to `EngineConfig` (policy, c_limit,
             max_batch, mem_budget, kv_layout, predictor, ...). A
             ``predictor`` strategy spec selects every replica's
@@ -339,6 +603,8 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
             size_predictor = OraclePredictor(cfg.probe, seed=seed + 4242)
     router = Router(replicas, RouterConfig(n_replicas=n_replicas,
                                            policy=router_policy, seed=seed,
-                                           backlog_unit=backlog_unit),
-                    size_predictor=size_predictor)
+                                           backlog_unit=backlog_unit,
+                                           max_retries=max_retries),
+                    size_predictor=size_predictor, faults=faults,
+                    event_log=EventLog() if record_events else None)
     return router.run(copy.deepcopy(requests))

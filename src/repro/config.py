@@ -52,15 +52,25 @@ class ProbeConfig:
 
     @property
     def bin_width(self) -> float:
+        """Width of one equal-width length bin."""
         return self.max_len / self.num_bins
 
     def bin_mean(self, i: int) -> float:
-        # m_i = (b_i + b_{i+1}) / 2 — paper Section 3.1.
+        """Midpoint of bin ``i``: m_i = (b_i + b_{i+1}) / 2 (paper S3.1)."""
         return self.bin_width * (i + 0.5)
 
 
 @dataclass(frozen=True)
 class ModelConfig:
+    """One architecture in the assigned pool, fully described.
+
+    The model factory (``repro.models.model``) consumes only this
+    dataclass; defaults describe a small dense GQA decoder and each
+    family overrides the sections it needs (MoE, SSM, encoder-decoder,
+    VLM prefix). Frozen so configs can key caches and travel through
+    jit closures safely.
+    """
+
     # -- identity ----------------------------------------------------------
     name: str = "model"
     family: str = FAMILY_DENSE
@@ -154,14 +164,17 @@ class ModelConfig:
     # -- derived -------------------------------------------------------------
     @property
     def q_dim(self) -> int:
+        """Total query projection width (num_heads * head_dim)."""
         return self.num_heads * self.head_dim
 
     @property
     def kv_dim(self) -> int:
+        """Total key/value projection width (num_kv_heads * head_dim)."""
         return self.num_kv_heads * self.head_dim
 
     @property
     def is_attention_free(self) -> bool:
+        """True when every layer is an SSM block (no KV cache at all)."""
         return all(k == KIND_SSM for k in self.layer_kinds)
 
     @property
@@ -171,6 +184,7 @@ class ModelConfig:
 
     @property
     def has_global_attention(self) -> bool:
+        """True when any layer carries an unbounded full-attention KV cache."""
         return any(k in (KIND_ATTN, KIND_MOE, KIND_HYBRID) for k in self.layer_kinds)
 
     @property
@@ -188,7 +202,8 @@ class ModelConfig:
 
     @property
     def has_decoder(self) -> bool:
-        return True  # every assigned arch has a decode path (whisper: decoder)
+        """Every assigned arch has a decode path (whisper: its decoder)."""
+        return True
 
     def layer_runs(self) -> tuple[tuple[str, int], ...]:
         """Compress layer_kinds into maximal (kind, run_length) runs."""
@@ -222,6 +237,7 @@ class ModelConfig:
         return n
 
     def _layer_params(self, kind: str, active: bool = False) -> int:
+        """Parameter count of one layer of ``kind`` (active: routed only)."""
         d, ff = self.d_model, self.d_ff
         attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
         mlp = 3 * d * ff  # gated (gate/up/down)
@@ -238,6 +254,7 @@ class ModelConfig:
         return attn + mlp
 
     def _ssm_params(self) -> int:
+        """Parameter count of one Mamba2 SSD block."""
         d = self.d_model
         d_in = self.ssm_expand * d
         nh = max(d_in // self.ssm_head_dim, 1)
@@ -261,6 +278,7 @@ _EXTRA_IDS = ("trail-llama",)   # the paper's own serving model (reduced scale)
 
 
 def _module_name(arch: str) -> str:
+    """Map an arch id to its ``repro.configs`` module name."""
     return "repro.configs." + arch.replace("-", "_").replace(".", "_")
 
 
@@ -279,6 +297,7 @@ def get_smoke_config(arch: str) -> ModelConfig:
 
 
 def all_configs() -> dict[str, ModelConfig]:
+    """Load every assigned full-size config, keyed by arch id."""
     return {a: get_config(a) for a in ARCH_IDS}
 
 
@@ -288,6 +307,8 @@ def all_configs() -> dict[str, ModelConfig]:
 
 @dataclass(frozen=True)
 class InputShape:
+    """One assigned benchmark input shape (sequence x batch x mode)."""
+
     name: str
     seq_len: int
     global_batch: int

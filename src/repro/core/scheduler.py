@@ -73,6 +73,11 @@ class ReqState(Enum):
     RUNNING = "running"      # in the current batch
     PREEMPTED = "preempted"  # started, kicked out, cache discarded
     FINISHED = "finished"
+    CANCELLED = "cancelled"  # terminated early (user cancel / deadline /
+                             # load shed); cache fully released. Terminal
+                             # like FINISHED: ``select_batch`` lists the
+                             # live states explicitly, so cancelled
+                             # entries can never be scheduled again.
 
 
 @dataclass

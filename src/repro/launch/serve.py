@@ -24,14 +24,23 @@ workload.
     # swap the length-prediction strategy (the predictor bake-off dial)
     PYTHONPATH=src python -m repro.launch.serve --trace sample \
         --predictor noisy-oracle:sigma=0.5
+
+    # overload + failure resilience: deadlines, predicted-work load
+    # shedding, and deterministic chaos with router failover
+    PYTHONPATH=src python -m repro.launch.serve --scenario bursty \
+        --rate 40 --deadline 120 --shed-watermark 20000
+    PYTHONPATH=src python -m repro.launch.serve --replicas 2 --router jspw \
+        --scenario bursty --chaos crash:1@30-90 --compute-bound
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 from repro.cluster import ROUTER_POLICIES, run_cluster
+from repro.cluster.faults import parse_chaos
 from repro.config import ARCH_IDS, get_config, get_smoke_config
 from repro.core.scheduler import POLICIES
 from repro.serving.costmodel import HardwareSpec
@@ -98,6 +107,30 @@ def main():
                     choices=("contig", "paged"),
                     help="KV cache layout (default contig; --prefix-cache "
                          "forces paged)")
+    ap.add_argument("--deadline", type=float, default=0.0, metavar="S",
+                    help="per-request completion deadline (seconds after "
+                         "arrival, engine clock); expired requests are "
+                         "cancelled and count against goodput (0 = none)")
+    ap.add_argument("--ttft-deadline", type=float, default=0.0, metavar="S",
+                    help="first-token deadline (seconds after arrival); "
+                         "requests still waiting past it are cancelled "
+                         "(0 = none)")
+    ap.add_argument("--shed-watermark", type=float, default=0.0,
+                    metavar="TOKENS",
+                    help="predicted-backlog watermark (tokens) above which "
+                         "the engine sheds its worst-ranked waiting "
+                         "requests (0 = shedding off)")
+    ap.add_argument("--admission-control", action="store_true",
+                    help="with --shed-watermark: refuse new arrivals at "
+                         "admission while the predicted backlog is above "
+                         "the watermark, instead of shedding queued work")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="deterministic fault injection for cluster mode: "
+                         "comma-separated crash:R@T[-U] | slow:R@T-U*F | "
+                         "flaky:R@T-U%%P (e.g. 'crash:1@30,slow:0@10-20*4')")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="cluster failover: per-request retry budget "
+                         "before a request is declared lost")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--real", action="store_true",
                     help="actually run the model (CPU-sized configs)")
@@ -115,20 +148,41 @@ def main():
                       tenants=())
     if args.prefix_cache:
         real_sizes.update(prefix_len=16, split_streams=True)
+    # CLI contract: every invalid flag combination or unusable input
+    # exits 2 with a one-line error (argparse's own convention), never a
+    # traceback or a status-1 SystemExit
     if args.rate_scale is not None:
         if not args.trace:
-            raise SystemExit("--rate-scale only applies to --trace replay "
-                             "(use --rate for synthetic scenarios)")
+            ap.error("--rate-scale only applies to --trace replay "
+                     "(use --rate for synthetic scenarios)")
         if args.rate_scale <= 0:
-            raise SystemExit("--rate-scale must be positive")
+            ap.error("--rate-scale must be positive")
+    if args.deadline < 0 or args.ttft_deadline < 0:
+        ap.error("--deadline/--ttft-deadline must be >= 0")
+    if args.shed_watermark < 0:
+        ap.error("--shed-watermark must be >= 0")
+    if args.admission_control and args.shed_watermark <= 0:
+        ap.error("--admission-control requires --shed-watermark > 0 "
+                 "(the watermark is the admission threshold)")
+    faults = None
+    if args.chaos:
+        if args.replicas <= 1:
+            ap.error("--chaos requires cluster mode (--replicas >= 2): "
+                     "fault injection and failover live in the router")
+        try:
+            faults = parse_chaos(args.chaos, seed=args.seed)
+        except ValueError as e:
+            ap.error(str(e))
     if args.trace:
         if args.real:
-            raise SystemExit("--trace replay is sim-only (trace lengths "
-                             "exceed CPU-sized device pools)")
+            ap.error("--trace replay is sim-only (trace lengths "
+                     "exceed CPU-sized device pools)")
         if args.scenario or args.burst:
-            raise SystemExit("--trace conflicts with --scenario/--burst: "
-                             "a trace supplies its own arrivals and "
-                             "lengths")
+            ap.error("--trace conflicts with --scenario/--burst: "
+                     "a trace supplies its own arrivals and lengths")
+        if args.trace != "sample" and not os.path.isfile(args.trace):
+            ap.error(f"--trace path {args.trace!r} does not exist or is "
+                     "not a file (pass 'sample' for the bundled fixture)")
         overrides = ({"trace_rate_scale": args.rate_scale}
                      if args.rate_scale is not None else {})
         # --n caps the replay; None/0 = the whole trace, never a silent
@@ -166,12 +220,12 @@ def main():
     policy = args.policy
     if pred_spec:
         if args.real:
-            raise SystemExit("--predictor strategies are sim-only; the "
-                             "real engine uses the live ProbePredictor")
+            ap.error("--predictor strategies are sim-only; the "
+                     "real engine uses the live ProbePredictor")
         name = parse_spec(pred_spec)[0]
         if name not in STRATEGIES:
-            raise SystemExit(f"unknown predictor strategy {name!r}; "
-                             f"choose from {STRATEGIES}")
+            ap.error(f"unknown predictor strategy {name!r}; "
+                     f"choose from {STRATEGIES}")
         if name == "rank-only" and policy == "trail":
             # the ordinal strategy needs the rank-aware scheduler path;
             # only the default policy is overridden — an explicit
@@ -180,7 +234,7 @@ def main():
 
     if args.replicas > 1:
         if args.real:
-            raise SystemExit("cluster mode is sim-only (one device pool)")
+            ap.error("cluster mode is sim-only (one device pool)")
         stats = run_cluster(
             cfg, reqs, router_policy=args.router,
             n_replicas=args.replicas, policy=policy,
@@ -188,6 +242,10 @@ def main():
             mem_budget=mem_budget, hardware=hardware, seed=args.seed,
             kv_layout=kv_layout, prefix_cache=args.prefix_cache,
             predictor=pred_spec,
+            faults=faults, max_retries=args.max_retries,
+            deadline_s=args.deadline, ttft_deadline_s=args.ttft_deadline,
+            shed_watermark=args.shed_watermark,
+            admission_control=args.admission_control,
             record_events=bool(args.metrics_out))
         print(json.dumps({"arch": cfg.name, "policy": policy,
                           "predictor": pred_spec or "trail-probe",
@@ -224,6 +282,9 @@ def main():
         model=model,
         params=params, hardware=hardware, seed=args.seed,
         kv_layout=kv_layout, prefix_cache=args.prefix_cache,
+        deadline_s=args.deadline, ttft_deadline_s=args.ttft_deadline,
+        shed_watermark=args.shed_watermark,
+        admission_control=args.admission_control,
         event_log=event_log)
     print(json.dumps({"arch": cfg.name, "policy": policy,
                       "predictor": ("probe" if args.real

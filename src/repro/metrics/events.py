@@ -21,6 +21,22 @@ Event kinds (``Event.kind``):
   (``value`` = bytes; covers swap-out and swap-in).
 * ``prefix_hit``  — prompt tokens served from the KV prefix cache at
   admission (``value`` = tokens).
+
+Resilience kinds (PR 7 — the failure/overload layer):
+
+* ``cancel``       — the request was cancelled explicitly
+  (`Engine.cancel`); its KV footprint is fully released.
+* ``timeout``      — cancelled because its completion or TTFT deadline
+  expired (checked at megastep boundaries on the engine clock).
+* ``shed``         — cancelled by predicted-work load shedding: the
+  engine's predicted backlog exceeded the shed watermark and this was
+  among the worst-ranked waiting requests (or it was refused at
+  admission under admission control).
+* ``retry``        — the router re-dispatched the request to a surviving
+  replica after a fault (``value`` = retry count so far); a fresh
+  ``arrival`` event follows on the new replica.
+* ``replica_down`` / ``replica_up`` — a replica crashed / recovered
+  (``rid`` = -1, ``value`` = replica index; emitted by the router).
 """
 
 from __future__ import annotations
@@ -29,7 +45,12 @@ from dataclasses import dataclass
 
 #: Every kind an `Event` may carry, in lifecycle order.
 EVENT_KINDS = ("arrival", "admit", "first_token", "tokens", "finish",
-               "preempt", "swap", "prefix_hit")
+               "preempt", "swap", "prefix_hit",
+               "cancel", "timeout", "shed", "retry",
+               "replica_down", "replica_up")
+
+#: The cancellation-reason kinds a terminal cancel event may carry.
+CANCEL_KINDS = ("cancel", "timeout", "shed")
 
 #: Kinds that occur at most once per request, in their required order.
 _ORDERED_ONCE = ("arrival", "first_token", "finish")
@@ -157,3 +178,11 @@ def check_invariants(log: EventLog) -> None:
         if "tokens" in first and "admit" in first:
             _require(first["admit"] <= first["tokens"],
                      f"rid {rid}: tokens before admission")
+        cancelled = [k for k in CANCEL_KINDS if k in first]
+        if cancelled:
+            _require("finish" not in first,
+                     f"rid {rid}: both cancelled ({cancelled}) and finished")
+            if "arrival" in first:
+                _require(first["arrival"] <= min(first[k]
+                                                 for k in cancelled),
+                         f"rid {rid}: cancelled before arrival")

@@ -79,6 +79,8 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
     slowdown = StreamingQuantiles()
     per_token = StreamingQuantiles()
     n_arrived = n_finished = 0
+    n_cancelled = n_timeouts = n_shed = n_retries = 0
+    replica_downs = 0
     preemptions = 0
     swap_bytes = 0.0
     prefix_hit_tokens = 0.0
@@ -86,6 +88,7 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
 
     for rid, evs in sorted(log.per_request().items()):
         arrival = first_tok = finish = None
+        cancelled = False
         tok_events: list[tuple[float, int]] = []
         for e in evs:
             if e.kind == "arrival" and arrival is None:
@@ -103,6 +106,18 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
                 swap_bytes += e.value
             elif e.kind == "prefix_hit":
                 prefix_hit_tokens += e.value
+            elif e.kind in ("cancel", "timeout", "shed"):
+                if not cancelled:           # one terminal cancel per rid
+                    cancelled = True
+                    n_cancelled += 1
+                    if e.kind == "timeout":
+                        n_timeouts += 1
+                    elif e.kind == "shed":
+                        n_shed += 1
+            elif e.kind == "retry":
+                n_retries += 1
+            elif e.kind == "replica_down":
+                replica_downs += 1
         if arrival is not None:
             n_arrived += 1
             if first_tok is not None:
@@ -136,6 +151,12 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
 
     report = {
         "requests": {"arrived": n_arrived, "finished": n_finished,
+                     "cancelled": n_cancelled,
+                     # goodput: fraction of arrived requests actually
+                     # served to completion — cancelled/timed-out/shed/
+                     # lost requests all count against it
+                     "goodput": (n_finished / n_arrived
+                                 if n_arrived else 0.0),
                      "output_tokens": total_tokens},
         "ttft": ttft.summary(percentiles),
         "tbt": tbt.summary(percentiles),
@@ -148,7 +169,12 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
         },
         "counters": {"preemptions": preemptions,
                      "swap_bytes": swap_bytes,
-                     "prefix_hit_tokens": prefix_hit_tokens},
+                     "prefix_hit_tokens": prefix_hit_tokens,
+                     "cancelled": n_cancelled,
+                     "timeouts": n_timeouts,
+                     "shed": n_shed,
+                     "retries": n_retries,
+                     "replica_downs": replica_downs},
     }
     if len(slowdown):
         report["slowdown"] = slowdown.summary(percentiles)

@@ -94,6 +94,24 @@ class EngineConfig:
             (JAX model actually prefills/decodes).
         hardware: roofline constants that drive the simulated clock.
         seed: seed for the engine's decode-token RNG (sim mode).
+        deadline_s: default per-request completion deadline (seconds
+            after arrival, engine clock); expired requests are cancelled
+            with reason ``timeout`` at the next megastep boundary. 0 =
+            no deadline. A request's own ``deadline_s`` overrides it.
+        ttft_deadline_s: default first-token budget (seconds after
+            arrival); a request still waiting for its first token past
+            it is cancelled with reason ``timeout``. 0 = none.
+        shed_watermark: predicted-backlog watermark in tokens (the TRAIL
+            signal `Engine.backlog` already computes). While the live
+            backlog exceeds it, the worst-ranked WAITING requests are
+            shed (cancelled with reason ``shed``) at megastep
+            boundaries. 0 (the default) disables shedding — results are
+            byte-identical to the pre-resilience engine.
+        admission_control: with ``shed_watermark`` set, refuse arrivals
+            at admission time while the live backlog is over the
+            watermark (reject-at-the-door instead of shedding queued
+            work). Refused requests emit ``arrival`` + ``shed`` and
+            never enter the pool.
     """
 
     policy: str = "trail"           # fcfs | sjf | srpt | trail | trail-bert
@@ -121,6 +139,12 @@ class EngineConfig:
     mode: str = "sim"               # "sim" | "real"
     hardware: HardwareSpec = field(default_factory=HardwareSpec)
     seed: int = 0
+    deadline_s: float = 0.0         # default completion deadline (0 = none)
+    ttft_deadline_s: float = 0.0    # default first-token budget (0 = none)
+    shed_watermark: float = 0.0     # predicted-backlog shed threshold in
+                                    # tokens (0 = shedding off)
+    admission_control: bool = False  # refuse (vs queue) arrivals while the
+                                     # backlog is over the watermark
 
 
 @dataclass
@@ -140,6 +164,9 @@ class EngineStats:
     prefix_hit_tokens: int = 0      # prompt tokens served from the cache
     predictor_time_s: float = 0.0   # clock charged for predictor work
     predictor_calls: int = 0        # predictor invocations booked
+    n_cancelled: int = 0            # total cancellations (any reason)
+    n_timeouts: int = 0             # ...of which deadline/TTFT expiries
+    n_shed: int = 0                 # ...of which load-shedding drops
 
     def summary(self) -> dict:
         """Aggregate the counters into the benchmark-facing dict."""
@@ -163,6 +190,9 @@ class EngineStats:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "predictor_time_s": self.predictor_time_s,
             "predictor_calls": self.predictor_calls,
+            "cancelled": self.n_cancelled,
+            "timeouts": self.n_timeouts,
+            "shed": self.n_shed,
         }
 
 
@@ -334,6 +364,12 @@ class Engine:
                                        reusable_cap=cap)
         self._rng = np.random.default_rng(ecfg.seed)
         self._token_rate = None     # lazy decode_token_rate() cache
+        self.alive = True           # cleared by crash(); router health
+        self._slowdown = 1.0        # straggler time-dilation factor
+        # resilience fast-path gate: the deadline scan only runs when a
+        # deadline is actually configured (engine default or any
+        # submitted request), so default runs pay nothing
+        self._deadlines = ecfg.deadline_s > 0 or ecfg.ttft_deadline_s > 0
         self._reset_stream()
 
     def _reset_stream(self):
@@ -412,7 +448,8 @@ class Engine:
                 if e.state is not ReqState.FINISHED)
         return n + (len(self._pending) - self._p_idx)
 
-    def backlog(self, truncate: float | None = None) -> float:
+    def backlog(self, truncate: float | None = None,
+                include_pending: bool = True) -> float:
         """Predicted remaining work, in tokens, across unfinished requests.
 
         For admitted requests this is the live TRAIL prediction
@@ -433,6 +470,10 @@ class Engine:
                 so the router truncates at the incoming job's own size
                 estimate (SRPT-interfering work) instead of summing raw
                 backlog, which is the right signal only for FCFS replicas.
+            include_pending: charge submitted-but-unadmitted arrivals
+                too (the default). The shedding/admission-control paths
+                pass False — overload decisions at time t must not count
+                work that has not arrived yet.
         """
         cap = float("inf") if truncate is None else truncate
         prior = (self._r0_sum / self._r0_cnt if self._r0_cnt
@@ -452,8 +493,9 @@ class Engine:
                     if self.prefix_cache and e.state is ReqState.WAITING
                     else 0)
             tot += max(req.context_len - 1 - e.prefill_done - hint, 0)
-        for req in self._pending[self._p_idx:]:
-            tot += len(req.prompt) + min(prior, cap)
+        if include_pending:
+            for req in self._pending[self._p_idx:]:
+                tot += len(req.prompt) + min(prior, cap)
         return tot
 
     def backlog_seconds(self, truncate: float | None = None) -> float:
@@ -487,15 +529,32 @@ class Engine:
         ``req.arrival``. Arrivals may be submitted in any order, but never
         earlier than an already-admitted arrival (the router's virtual-time
         frontier guarantees this)."""
+        if req.deadline_s > 0 or req.ttft_deadline_s > 0:
+            self._deadlines = True
         i = bisect.bisect_right(self._pending, req.arrival,
                                 lo=self._p_idx, key=lambda r: r.arrival)
         self._pending.insert(i, req)
 
     def _admit_arrivals(self, t: float):
         ecfg = self.ecfg
+        gate = ecfg.admission_control and ecfg.shed_watermark > 0.0
         while (self._p_idx < len(self._pending)
                and self._pending[self._p_idx].arrival <= t):
             req = self._pending[self._p_idx]
+            if (gate and self.backlog(include_pending=False)
+                    > ecfg.shed_watermark):
+                # admission control: the door is shut while live backlog
+                # exceeds the watermark — the arrival is observed, then
+                # immediately shed (never enters pool or scheduler)
+                self._p_idx += 1
+                req.entry.state = ReqState.CANCELLED
+                req.cancel_reason = "shed"
+                self.stats.n_cancelled += 1
+                self.stats.n_shed += 1
+                if self.events is not None:
+                    self.events.emit(req.arrival, req.rid, "arrival")
+                    self.events.emit(max(t, req.arrival), req.rid, "shed")
+                continue
             r0 = self.predictor.initial(req)
             req.entry.r0 = r0
             req.entry.pred_remaining = r0
@@ -535,6 +594,13 @@ class Engine:
         ev_mark = len(ev) if ev is not None else 0
 
         self._admit_arrivals(now)
+        # resilience checks run at megastep boundaries, before the
+        # scheduler sees the pool; both are gated so the default engine
+        # (no deadlines, no watermark) takes neither branch
+        if self._deadlines:
+            self._expire_deadlines(now)
+        if ecfg.shed_watermark > 0.0:
+            self._shed_overload()
         live = [r for r in pool_reqs.values() if not r.done]
         if not live:
             if self._p_idx < len(self._pending):
@@ -647,6 +713,12 @@ class Engine:
             dt += pred_s
             stats.predictor_time_s += pred_s
         stats.predictor_calls = self.predictor.cost_calls
+        if self._slowdown != 1.0:
+            # straggler fault injection: the replica's hardware runs
+            # slower, dilating the whole megastep (compute, DMA stalls,
+            # predictor work). 1.0 — the default — leaves the clock
+            # byte-identical to the pre-resilience engine.
+            dt *= self._slowdown
         now_next = now + dt
         completed: list[Request] = []
         for r, take in pf_plan:
@@ -763,6 +835,185 @@ class Engine:
         stats.sim_time = (self._now if self.ecfg.mode == "sim"
                           else time.perf_counter() - self._wall0)
         return stats
+
+    # ------------------------------------------------------------------
+    # resilience: cancellation, deadlines, load shedding, fault hooks
+    # ------------------------------------------------------------------
+    def cancel(self, rid: int, reason: str = "cancel") -> bool:
+        """Cancel one request in any state; returns True if it was live.
+
+        Works for WAITING / RUNNING / PREEMPTED (suspended) requests, in
+        prefill or decode, and for submitted-but-unadmitted arrivals.
+        The KV footprint is released through the normal refcount paths:
+        shared prefix pages are deregistered (they stay with their other
+        owners or park warm in the reusable pool), host-swapped pages
+        are reclaimed, and real-mode slots/pages queue device resets.
+        The entry leaves scheduler state and backlog accounting
+        entirely, so a cancelled request can never be scheduled again.
+
+        Args:
+            rid: the request id.
+            reason: ``cancel`` (explicit) | ``timeout`` (deadline
+                expiry) | ``shed`` (load shedding) — doubles as the
+                emitted event kind.
+
+        Returns:
+            True if the request existed and was still unfinished; False
+            for unknown, already-finished, or already-cancelled rids
+            (cancellation is idempotent).
+        """
+        if reason not in ("cancel", "timeout", "shed"):
+            raise ValueError(f"unknown cancel reason {reason!r}")
+        # still queued behind the arrival frontier? (submitted, unadmitted)
+        for i in range(self._p_idx, len(self._pending)):
+            if self._pending[i].rid == rid:
+                req = self._pending.pop(i)
+                req.entry.state = ReqState.CANCELLED
+                req.cancel_reason = reason
+                self._book_cancel(reason)
+                if self.events is not None:
+                    # the arrival was never admitted, so its arrival
+                    # event is emitted here — goodput counts it
+                    self.events.emit(req.arrival, rid, "arrival")
+                    self.events.emit(max(self._now, req.arrival), rid,
+                                     reason)
+                return True
+        req = self._pool_reqs.get(rid)
+        if req is None or req.done:
+            return False
+        # release the KV footprint through the standard machinery
+        if self.pool is not None:
+            if rid in self.pool.slot_of:        # RUNNING on a device slot
+                if self.paged:
+                    self.pool.release(rid, retain=False)
+                else:
+                    self.pool.release(rid)
+            elif self.paged:
+                # suspended: retained/host pages but no slot — free via
+                # the block manager (resets queue for flush_resets)
+                self.blocks.free_request(rid)
+        elif self.blocks is not None:           # sim-mode paged
+            self.blocks.free_request(rid)
+        req.slot = -1
+        req._swapped = False                    # host copy abandoned
+        req._kv_written = 0
+        self._prefix_hint.pop(rid, None)
+        self._hint_gen.pop(rid, None)
+        req.entry.state = ReqState.CANCELLED
+        req.cancel_reason = reason
+        # out of scheduler state and backlog/queue accounting
+        del self._entries[rid]
+        del self._pool_reqs[rid]
+        self._book_cancel(reason)
+        if self.events is not None:
+            self.events.emit(self._now, rid, reason)
+        return True
+
+    def _book_cancel(self, reason: str):
+        self.stats.n_cancelled += 1
+        if reason == "timeout":
+            self.stats.n_timeouts += 1
+        elif reason == "shed":
+            self.stats.n_shed += 1
+
+    def _expire_deadlines(self, now: float):
+        """Cancel requests whose completion/TTFT budget has expired.
+
+        Runs at megastep boundaries on the engine clock (a deadline that
+        expires mid-megastep is enforced at the next boundary). A
+        request-level deadline overrides the engine default; 0 = none.
+        """
+        ecfg = self.ecfg
+        for rid in [r.rid for r in self._pool_reqs.values() if not r.done]:
+            req = self._pool_reqs[rid]
+            dl = req.deadline_s or ecfg.deadline_s
+            if dl > 0 and now - req.arrival > dl:
+                self.cancel(rid, reason="timeout")
+                continue
+            tdl = req.ttft_deadline_s or ecfg.ttft_deadline_s
+            if (tdl > 0 and req.first_token_time < 0
+                    and now - req.arrival > tdl):
+                self.cancel(rid, reason="timeout")
+
+    def _shed_overload(self):
+        """Shed worst-ranked WAITING requests while the predicted
+        backlog exceeds the watermark (reason ``shed``).
+
+        Only never-started requests are shed — dropping RUNNING or
+        suspended work would discard compute already spent. The victim
+        order is the scheduler's own rank, worst first (latest arrival
+        breaks ties), so with a magnitude predictor the longest
+        predicted jobs go first — exactly the jobs SRPT would have
+        served last anyway.
+        """
+        wm = self.ecfg.shed_watermark
+        policy = self.ecfg.policy
+        while self.backlog(include_pending=False) > wm:
+            waiting = [e for e in self._entries.values()
+                       if e.state is ReqState.WAITING]
+            if not waiting:
+                break           # backlog is all in-flight work: keep it
+            victim = max(waiting, key=lambda e: (e.rank(policy), e.arrival))
+            self.cancel(victim.rid, reason="shed")
+
+    def crash(self, t: float | None = None) -> list[Request]:
+        """Kill this replica: reclaim every page/slot, drop all state.
+
+        Models a replica failure for the router's fault injection. All
+        unfinished requests (admitted and still-pending) are returned so
+        the router can redispatch them to survivors; the entire KV
+        footprint is reclaimed through the standard release paths (the
+        BlockManager ends with ``used_pages() == 0`` — the zero-leak
+        invariant the resilience benchmark enforces). No per-request
+        events are emitted here — the router records ``replica_down``
+        and per-request ``retry`` events.
+
+        Args:
+            t: fault time; the clock advances to it if ahead (events the
+               replica already emitted stay in its past).
+
+        Returns:
+            The unfinished `Request` objects, in arrival order.
+        """
+        if t is not None:
+            self._now = max(self._now, t)
+        lost = [r for r in self._pool_reqs.values() if not r.done]
+        lost += self._pending[self._p_idx:]
+        if self.pool is not None:
+            for rid in list(self.pool.slot_of):
+                if self.paged:
+                    self.pool.release(rid, retain=False)
+                else:
+                    self.pool.release(rid)
+        if self.blocks is not None:
+            for rid in list(self.blocks.pages):
+                self.blocks.free_request(rid)
+            for rid in list(self.blocks.host_pages):
+                self.blocks.free_request(rid)
+        for r in lost:
+            r.slot = -1
+            r._swapped = False
+            r._kv_written = 0
+            r._reg_pages = 0
+        self._pending = []
+        self._p_idx = 0
+        self._pool_reqs = {}
+        self._entries = {}
+        self._prefix_hint = {}
+        self._hint_gen = {}
+        self.alive = False
+        return sorted(lost, key=lambda r: r.arrival)
+
+    def revive(self, t: float):
+        """Bring a crashed replica back (empty) at time ``t``."""
+        self.alive = True
+        self._now = max(self._now, t)
+
+    def set_slowdown(self, factor: float):
+        """Set the straggler time-dilation factor (1.0 = healthy)."""
+        if factor <= 0:
+            raise ValueError(f"slowdown factor must be positive: {factor}")
+        self._slowdown = factor
 
     # ------------------------------------------------------------------
     def _apply_preemptions(self, decision: Decision, pool_reqs, stats):
@@ -1090,14 +1341,19 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                hardware: HardwareSpec | None = None, seed=0,
                probe_interval=1, oom_mode="discard", kv_layout="contig",
                page_size=16, max_len=1024,
-               prefix_cache=False, event_log=None) -> EngineStats:
+               prefix_cache=False, event_log=None,
+               deadline_s=0.0, ttft_deadline_s=0.0,
+               shed_watermark=0.0,
+               admission_control=False) -> EngineStats:
     """One-shot convenience: build an `Engine` and run a (deep-copied)
     request trace under the given policy, returning its `EngineStats`.
     ``predictor`` accepts either a `PredictorBase` instance or a
     strategy spec string (``"noisy-oracle:sigma=0.5"``, see
     `repro.serving.predictors.make_predictor`); None keeps the legacy
     default. Pass a `repro.metrics.EventLog` as ``event_log`` to
-    capture the per-request event stream alongside."""
+    capture the per-request event stream alongside. The resilience
+    knobs (``deadline_s`` / ``ttft_deadline_s`` / ``shed_watermark`` /
+    ``admission_control``) mirror `EngineConfig` and default off."""
     spec = predictor if isinstance(predictor, str) else ""
     if spec:
         predictor = None
@@ -1107,6 +1363,10 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                         kv_layout=kv_layout, page_size=page_size,
                         max_len=max_len, prefix_cache=prefix_cache,
                         predictor=spec,
+                        deadline_s=deadline_s,
+                        ttft_deadline_s=ttft_deadline_s,
+                        shed_watermark=shed_watermark,
+                        admission_control=admission_control,
                         hardware=hardware or HardwareSpec())
     import copy
     reqs = copy.deepcopy(requests)

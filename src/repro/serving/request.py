@@ -18,6 +18,13 @@ class Request:
     # oracle ground truth (sim mode / synthetic EOS): output length in tokens
     true_out_len: int = 0
     tenant: str = ""                              # multi-tenant workload tag
+    # resilience knobs (0.0 = none; engine-config defaults apply instead)
+    deadline_s: float = 0.0                       # completion budget after
+                                                  # arrival (engine clock)
+    ttft_deadline_s: float = 0.0                  # first-token budget
+    retries: int = 0                              # failover re-dispatches
+    cancel_reason: str = ""                       # set when CANCELLED
+                                                  # ("cancel"|"timeout"|"shed")
 
     generated: list[int] = field(default_factory=list)
     entry: SchedEntry = None                      # scheduling metadata
@@ -43,8 +50,9 @@ class Request:
 
     @property
     def done(self) -> bool:
-        """True once the scheduler marked the request FINISHED."""
-        return self.entry.state is ReqState.FINISHED
+        """True once the request reached a terminal state (FINISHED or
+        CANCELLED — cancelled requests never re-enter scheduling)."""
+        return self.entry.state in (ReqState.FINISHED, ReqState.CANCELLED)
 
     def latency(self) -> float:
         """Completion time: finish minus arrival (engine-clock seconds)."""

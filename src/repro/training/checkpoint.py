@@ -15,6 +15,7 @@ import numpy as np
 
 
 def _flatten(tree, prefix=""):
+    """Flatten a dict/list/tuple pytree into path-keyed leaves."""
     out = {}
     if isinstance(tree, dict):
         for k, v in tree.items():
@@ -30,6 +31,7 @@ def _flatten(tree, prefix=""):
 
 
 def save(path: str, tree) -> None:
+    """Write a pytree to ``path`` as a flat .npz, atomically (tmp + rename)."""
     flat = {}
     for k, v in _flatten(tree).items():
         arr = np.asarray(v)
@@ -74,6 +76,7 @@ def restore(path: str):
         node[parts[-1]] = val
 
     def fix(node, prefix=""):
+        """Recursively restore list/tuple nodes from their length markers."""
         if not isinstance(node, dict):
             return node
         n_key = f"{prefix}__len__"

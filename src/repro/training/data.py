@@ -34,6 +34,8 @@ TOPIC_BASE = 4                      # token ids [4, 4+N_TOPICS) are topics
 
 @dataclass(frozen=True)
 class DataConfig:
+    """Shape and distribution knobs for the synthetic data stream."""
+
     vocab: int = 32000
     seq_len: int = 512
     batch: int = 8
@@ -52,6 +54,7 @@ def topic_median_len(topic: int, dc: DataConfig) -> float:
 
 
 def sample_example(rng: np.random.Generator, dc: DataConfig):
+    """Draw one (topic, prompt, response) example from the topic ladder."""
     topic = int(rng.integers(0, N_TOPICS))
     plen = int(np.clip(rng.lognormal(math.log(dc.prompt_mean),
                                      dc.prompt_sigma), 4, dc.seq_len // 3))
@@ -68,6 +71,7 @@ def sample_example(rng: np.random.Generator, dc: DataConfig):
 
 
 def batches(dc: DataConfig, n_batches: int):
+    """Yield ``n_batches`` token/label/remaining batches (see module doc)."""
     rng = np.random.default_rng(dc.seed)
     for _ in range(n_batches):
         tokens = np.full((dc.batch, dc.seq_len), PAD, np.int32)

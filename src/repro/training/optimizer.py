@@ -19,6 +19,8 @@ import jax.numpy as jnp
 
 @dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW hyperparameters plus the warmup/cosine schedule shape."""
+
     lr: float = 1e-3
     beta1: float = 0.9
     beta2: float = 0.999
@@ -43,6 +45,7 @@ def lr_at(cfg: AdamWConfig, step):
 
 
 def init(cfg: AdamWConfig, params):
+    """Fresh optimizer state: zero moments (in ``moment_dtype``) + step 0."""
     dt = jnp.dtype(cfg.moment_dtype)
     zeros = lambda p: jnp.zeros_like(p, dtype=dt)
     return {
@@ -53,6 +56,7 @@ def init(cfg: AdamWConfig, params):
 
 
 def global_norm(tree):
+    """L2 norm over every leaf of a pytree (float32 accumulation)."""
     return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
                         for x in jax.tree.leaves(tree)))
 
@@ -69,6 +73,7 @@ def update(cfg: AdamWConfig, grads, state, params):
     c2 = 1.0 - b2 ** step.astype(jnp.float32)
 
     def upd(p, g, mu, nu):
+        """One leaf's AdamW update in float32 master arithmetic."""
         g = g.astype(jnp.float32) * scale
         mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
         nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g)

@@ -22,16 +22,20 @@ from repro.training import optimizer as opt_mod
 
 
 def make_loss_fn(model):
+    """Wrap ``model.forward_train`` as a (params, batch) -> (loss, aux) fn."""
     def loss_fn(params, batch):
+        """Differentiable loss closure over the model."""
         loss, aux = model.forward_train(params, batch)
         return loss, aux
     return loss_fn
 
 
 def make_train_step(model, ocfg: opt_mod.AdamWConfig):
+    """Build the jit-able (params, opt_state, batch) update function."""
     loss_fn = make_loss_fn(model)
 
     def train_step(params, opt_state, batch):
+        """One forward/backward/AdamW step; returns updated state + metrics."""
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
             params, batch)
         params, opt_state, om = opt_mod.update(ocfg, grads, opt_state, params)
@@ -69,6 +73,8 @@ def train_lm(model, params, data_iter, ocfg: opt_mod.AdamWConfig,
 
 @dataclass(frozen=True)
 class ProbeTrainConfig:
+    """The paper's probe-training recipe knobs (Section 3.1)."""
+
     epochs: int = 30                # paper: 30 epochs
     batch: int = 32                 # paper: batch 32
     lr: float = 0.01                # paper: cosine 0.01 -> 0
@@ -95,6 +101,7 @@ def train_probe(taps: np.ndarray, remaining: np.ndarray, pc: ProbeConfig,
 
     @jax.jit
     def step_fn(p, o, x, y):
+        """One probe minibatch step: CE-over-bins loss + AdamW update."""
         loss, grads = jax.value_and_grad(probe_mod.probe_loss)(p, x, y)
         p, o, _ = opt_mod.update(ocfg, grads, o, p)
         return p, o, loss

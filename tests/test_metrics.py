@@ -93,6 +93,7 @@ def _hand_log():
 def test_rollup_hand_computed():
     rep = rollup(_hand_log())
     assert rep["requests"] == {"arrived": 1, "finished": 1,
+                               "cancelled": 0, "goodput": 1.0,
                                "output_tokens": 3.0}
     assert rep["ttft"]["mean"] == 2.0
     assert rep["completion"]["mean"] == 3.0
@@ -120,6 +121,7 @@ def test_rollup_counts_ttft_of_inflight_requests():
     log.emit(9.0, 1, "tokens", 1)       # still decoding, no finish
     rep = rollup(log)
     assert rep["requests"] == {"arrived": 1, "finished": 0,
+                               "cancelled": 0, "goodput": 0.0,
                                "output_tokens": 1.0}
     assert rep["ttft"]["n"] == 1
     assert rep["ttft"]["mean"] == 9.0

@@ -230,6 +230,37 @@ def test_refcount_invariants_any_interleaving(ops):
         _check_invariants(bm, n_pages)
 
 
+@given(st.lists(st.tuples(st.integers(0, 2), st.integers(0, 9)),
+                min_size=1, max_size=60))
+@settings(max_examples=25, deadline=None)
+def test_cancel_any_interleaving_releases_all_pages(ops):
+    """Interleaving step() with cancel() — hitting requests in every state
+    (pending, waiting, running, swapped-out) — keeps the refcount
+    partition intact, and cancelling everything leaves zero resident
+    pages: the leak invariant the chaos benchmarks enforce. Shared
+    prompt prefixes make the release path go through deregistration,
+    never a blind free of pages other requests still reference."""
+    reqs = shared_prompt_workload(n=10, rate=50.0, seed=7)
+    eng = Engine(CFG, EngineConfig(kv_layout="paged", prefix_cache=True,
+                                   policy="trail", seed=1, max_batch=4,
+                                   mem_budget=1 << 26))
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    rids = [r.rid for r in reqs]
+    for op, k in ops:
+        if op == 0:
+            eng.step()
+        else:
+            eng.cancel(rids[k % len(rids)],
+                       reason="cancel" if op == 1 else "shed")
+        _check_invariants(eng.blocks, eng.blocks.num_pages)
+    for rid in rids:
+        eng.cancel(rid)             # False for already finished/cancelled
+    _check_invariants(eng.blocks, eng.blocks.num_pages)
+    assert eng.blocks.used_pages() == 0
+    assert not eng.has_work()
+
+
 # ---------------------------------------------------------------------------
 # engine: cached-aware serving (sim mode)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,453 @@
+"""Failure & overload resilience: first-class cancellation, deadlines,
+predicted-work load shedding, and deterministic fault injection with
+router failover. Also pins the off-by-default guarantee: every knob at
+its default is byte-identical to the pre-resilience code paths."""
+
+import copy
+import json
+
+import pytest
+
+from repro.cluster import Router, RouterConfig, run_cluster
+from repro.cluster.faults import (NEVER, FaultSchedule, FlakySubmit,
+                                  ReplicaCrash, SlowdownWindow, parse_chaos)
+from repro.config import get_config
+from repro.core.scheduler import ReqState
+from repro.metrics.events import EventLog, check_invariants
+from repro.metrics.rollup import rollup
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig, run_policy
+from repro.serving.workload import WorkloadConfig, generate, scenario_config
+
+CFG = get_config("granite-3-8b")
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  overhead_s=2e-4)
+
+
+def workload(n=40, rate=4.0, seed=0, scenario="bursty"):
+    wc = scenario_config(scenario, n_requests=n, request_rate=rate,
+                         seed=seed, vocab=CFG.vocab_size)
+    return generate(wc)
+
+
+def drain(eng):
+    while eng.has_work():
+        eng.step()
+
+
+# ---------------------------------------------------------------------------
+# Engine.cancel: every request state, both KV layouts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", ["contig", "paged"])
+def test_cancel_running_request_releases_kv(layout):
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=0,
+                                   kv_layout=layout),
+                 event_log=EventLog())
+    reqs = workload(n=6, rate=100.0)
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    running = []
+    for _ in range(20):                     # admit + start some work
+        eng.step()
+        running = [rid for rid, r in eng._pool_reqs.items()
+                   if r.entry.state is ReqState.RUNNING]
+        if running:
+            break
+    assert running, "no request reached RUNNING"
+    rid = running[0]
+    assert eng.cancel(rid) is True
+    assert eng._pool_reqs.get(rid) is None
+    assert rid not in eng._entries
+    if layout == "paged":
+        assert rid not in eng.blocks.pages
+    drain(eng)
+    assert eng.stats.n_cancelled == 1
+    assert len(eng.stats.latencies) == len(reqs) - 1
+    check_invariants(eng.events)
+    kinds = {e.kind for e in eng.events.events if e.rid == rid}
+    assert "cancel" in kinds and "finish" not in kinds
+    if layout == "paged":
+        assert eng.blocks.used_pages() == 0
+
+
+def test_cancel_pending_request_before_admission():
+    """A submitted-but-unadmitted arrival cancels cleanly — it never
+    touched the pool, yet goodput still counts it (arrival is emitted
+    alongside the cancel)."""
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=0),
+                 event_log=EventLog())
+    reqs = workload(n=5, rate=0.5)          # spaced arrivals
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    eng.step()                              # only early arrivals admitted
+    late = reqs[-1].rid
+    assert late not in eng._pool_reqs       # still behind the frontier
+    assert eng.cancel(late) is True
+    drain(eng)
+    assert len(eng.stats.latencies) == len(reqs) - 1
+    check_invariants(eng.events)
+    per = eng.events.per_request()[late]
+    assert [e.kind for e in per] == ["arrival", "cancel"]
+    rep = rollup(eng.events)
+    assert rep["requests"]["arrived"] == len(reqs)
+    assert rep["requests"]["cancelled"] == 1
+    assert rep["requests"]["goodput"] == pytest.approx(4 / 5)
+
+
+def test_cancel_suspended_request_reclaims_host_pages():
+    """Cancelling a preempted, host-swapped request reclaims its host
+    copy through free_request — no stranded pages on either side."""
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=0,
+                                   kv_layout="paged", max_batch=4,
+                                   mem_budget=1 << 26))
+    for r in copy.deepcopy(workload(n=12, rate=100.0)):
+        eng.submit(r)
+    suspended = None
+    for _ in range(400):
+        eng.step()
+        cand = [rid for rid, r in eng._pool_reqs.items()
+                if r.entry.state is ReqState.PREEMPTED and not r.done]
+        if cand:
+            suspended = cand[0]
+            break
+    assert suspended is not None, "no request was ever preempted"
+    assert eng.cancel(suspended) is True
+    assert suspended not in eng.blocks.pages
+    assert suspended not in eng.blocks.host_pages
+    drain(eng)
+    assert eng.blocks.used_pages() == 0
+
+
+def test_cancel_is_idempotent_and_validates_reason():
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=0))
+    reqs = workload(n=2, rate=100.0)
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    eng.step()
+    rid = reqs[0].rid
+    assert eng.cancel(rid) is True
+    assert eng.cancel(rid) is False         # already cancelled
+    assert eng.cancel(99999) is False       # unknown rid
+    drain(eng)
+    assert eng.cancel(reqs[1].rid) is False  # finished
+    with pytest.raises(ValueError):
+        eng.cancel(0, reason="vibes")
+
+
+def test_cancelled_entries_never_reschedule():
+    """A cancelled entry leaves scheduler state entirely: the engine
+    finishes the rest of the stream without ever re-admitting it."""
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=3))
+    reqs = workload(n=8, rate=50.0)
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    victims = []
+    for _ in range(20):
+        eng.step()
+        victims = [rid for rid, r in eng._pool_reqs.items()
+                   if not r.done][:3]
+        if len(victims) == 3:
+            break
+    assert victims
+    for rid in victims:
+        assert eng.cancel(rid) is True
+    drain(eng)
+    assert len(eng.stats.latencies) == len(reqs) - len(victims)
+    assert eng.stats.n_cancelled == len(victims)
+
+
+# ---------------------------------------------------------------------------
+# deadlines
+# ---------------------------------------------------------------------------
+
+def test_completion_deadline_times_out_under_overload():
+    stats = run_policy(CFG, "trail", workload(n=40, rate=40.0),
+                       hardware=HW, seed=0, deadline_s=1.0)
+    s = stats.summary()
+    assert s["timeouts"] > 0
+    assert s["cancelled"] == s["timeouts"]
+    assert len(stats.latencies) + s["cancelled"] == 40
+    # every served completion respected the budget (enforcement lags at
+    # most one megastep boundary; latencies past it were cancelled)
+    assert all(lat <= 1.0 + 0.5 for lat in stats.latencies)
+
+
+def test_ttft_deadline_cancels_only_unstarted_requests():
+    log = EventLog()
+    run_policy(CFG, "trail", workload(n=40, rate=40.0), hardware=HW,
+               seed=0, ttft_deadline_s=0.3, event_log=log)
+    check_invariants(log)
+    timed_out = {e.rid for e in log.events if e.kind == "timeout"}
+    assert timed_out
+    started = {e.rid for e in log.events if e.kind == "first_token"}
+    assert not (timed_out & started)
+
+
+def test_request_level_deadline_overrides_engine_default():
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=0,
+                                   deadline_s=1e9))
+    reqs = copy.deepcopy(workload(n=6, rate=40.0))
+    reqs[0].deadline_s = 1e-6               # expires at the first boundary
+    for r in reqs:
+        eng.submit(r)
+    drain(eng)
+    assert eng.stats.n_timeouts == 1
+    assert len(eng.stats.latencies) == len(reqs) - 1
+
+
+def test_no_deadline_is_zero_overhead_path():
+    """deadline_s=0 must not even arm the deadline scan."""
+    eng = Engine(CFG, EngineConfig(policy="trail", seed=0))
+    assert eng._deadlines is False
+    eng.submit(copy.deepcopy(workload(n=1))[0])
+    assert eng._deadlines is False
+
+
+# ---------------------------------------------------------------------------
+# load shedding + admission control
+# ---------------------------------------------------------------------------
+
+def test_shedding_keeps_backlog_at_watermark():
+    log = EventLog()
+    stats = run_policy(CFG, "trail", workload(n=60, rate=60.0),
+                       hardware=HW, seed=0, shed_watermark=3000.0,
+                       event_log=log)
+    s = stats.summary()
+    assert s["shed"] > 0 and s["cancelled"] == s["shed"]
+    check_invariants(log)
+    # shed victims never started: no first_token for any shed rid
+    shed = {e.rid for e in log.events if e.kind == "shed"}
+    started = {e.rid for e in log.events if e.kind == "first_token"}
+    assert not (shed & started)
+    assert len(stats.latencies) + s["shed"] == 60
+
+
+def test_shed_victims_are_worst_ranked():
+    """With the oracle predictor, shedding drops the longest predicted
+    jobs first — the served set's mean true output length is shorter
+    than the shed set's."""
+    reqs = workload(n=60, rate=60.0)
+    log = EventLog()
+    run_policy(CFG, "trail", reqs, hardware=HW, seed=0,
+               shed_watermark=3000.0, event_log=log)
+    shed = {e.rid for e in log.events if e.kind == "shed"}
+    assert shed
+    out = {r.rid: r.true_out_len for r in reqs}
+    shed_mean = sum(out[r] for r in shed) / len(shed)
+    kept = [out[r] for r in out if r not in shed]
+    assert shed_mean > sum(kept) / len(kept)
+
+
+def test_admission_control_refuses_at_arrival():
+    log = EventLog()
+    stats = run_policy(CFG, "trail", workload(n=60, rate=60.0),
+                       hardware=HW, seed=0, shed_watermark=3000.0,
+                       admission_control=True, event_log=log)
+    assert stats.summary()["shed"] > 0
+    check_invariants(log)
+    shed = {e.rid for e in log.events if e.kind == "shed"}
+    assert shed
+    # refused arrivals never reached the pool: arrival + shed only
+    per = log.per_request()
+    for rid in shed:
+        assert [e.kind for e in per[rid]] == ["arrival", "shed"]
+
+
+def test_shedding_improves_served_tail_latency_at_overload():
+    """The benchmark's headline claim in miniature: at overload, the
+    requests actually served complete faster with shedding than the
+    same stream without it."""
+    reqs = workload(n=60, rate=60.0)
+    base = run_policy(CFG, "trail", reqs, hardware=HW, seed=0)
+    shedded = run_policy(CFG, "trail", reqs, hardware=HW, seed=0,
+                         shed_watermark=3000.0)
+    assert shedded.summary()["p99_latency"] < base.summary()["p99_latency"]
+
+
+# ---------------------------------------------------------------------------
+# fault schedule parsing + validation
+# ---------------------------------------------------------------------------
+
+def test_parse_chaos_full_grammar():
+    fs = parse_chaos("crash:1@30, crash:0@5-12.5, slow:1@10-20*4, "
+                     "flaky:0@0-10%0.25", seed=9)
+    assert fs.seed == 9
+    assert fs.crash_for(1) == ReplicaCrash(1, 30.0)
+    assert fs.crash_for(0) == ReplicaCrash(0, 5.0, 12.5)
+    assert fs.crash_for(2) is None
+    assert fs.slow_factor(1, 15.0) == 4.0
+    assert fs.slow_factor(1, 25.0) == 1.0
+    assert fs.degraded(1, 10.0) and not fs.degraded(1, 20.0)
+    assert fs.flaky_rate(0, 5.0) == pytest.approx(0.25)
+    assert fs.flaky_rate(0, 10.0) == 0.0
+
+
+@pytest.mark.parametrize("bad", [
+    "crash:@5", "crash:1", "slow:0@5-1*2", "slow:0@1-5*-1",
+    "flaky:0@0-10%1.5", "meteor:0@5", "crash:0@5-2",
+])
+def test_parse_chaos_rejects_malformed_entries(bad):
+    with pytest.raises(ValueError):
+        parse_chaos(bad)
+
+
+def test_fault_schedule_validation():
+    with pytest.raises(ValueError):
+        FaultSchedule(crashes=(ReplicaCrash(0, 1.0), ReplicaCrash(0, 2.0)))
+    with pytest.raises(ValueError):
+        SlowdownWindow(0, 5.0, 5.0)
+    with pytest.raises(ValueError):
+        FlakySubmit(0, 0.0, 1.0, fail_rate=2.0)
+    assert ReplicaCrash(0, 1.0).recover_at == NEVER
+
+
+def test_router_rejects_out_of_range_fault_replica():
+    replicas = [Engine(CFG, EngineConfig(seed=i)) for i in range(2)]
+    with pytest.raises(ValueError):
+        Router(replicas, RouterConfig(n_replicas=2),
+               faults=parse_chaos("crash:5@1"))
+
+
+# ---------------------------------------------------------------------------
+# crash + failover end to end
+# ---------------------------------------------------------------------------
+
+def _chaos_cluster(spec, reqs, policy="jspw", n=2, seed=0, **kw):
+    return run_cluster(CFG, reqs, router_policy=policy, n_replicas=n,
+                       seed=seed, hardware=HW, record_events=True,
+                       kv_layout="paged",
+                       faults=parse_chaos(spec, seed=seed), **kw)
+
+
+def test_crash_failover_serves_everything():
+    reqs = workload(n=50, rate=4.0)
+    stats = _chaos_cluster("crash:1@5", reqs)
+    s = stats.summary()
+    assert s["replica_crashes"] == 1
+    assert s["retries"] > 0
+    assert s["lost"] == 0
+    assert s["finished"] == 50 and s["goodput"] == 1.0
+    check_invariants(stats.event_log)
+    rep = rollup(stats.event_log)
+    assert rep["counters"]["replica_downs"] == 1
+    assert rep["counters"]["retries"] == s["retries"]
+    assert rep["requests"]["finished"] == 50
+
+
+def test_crash_recovery_reuses_the_replica():
+    reqs = workload(n=60, rate=4.0)
+    stats = _chaos_cluster("crash:1@3-10", reqs)
+    s = stats.summary()
+    assert s["finished"] == 60 and s["lost"] == 0
+    kinds = [e.kind for e in stats.event_log.events]
+    assert "replica_down" in kinds and "replica_up" in kinds
+    # events after recovery include dispatches back onto replica 1:
+    # its post-recovery summary shows served work
+    check_invariants(stats.event_log)
+
+
+def test_crash_leaves_zero_pages_on_every_replica():
+    reqs = workload(n=40, rate=6.0)
+    for spec in ["crash:1@4", "crash:0@2-8", "crash:0@3,slow:1@1-5*3"]:
+        replicas = [Engine(CFG, EngineConfig(seed=i, kv_layout="paged",
+                                             policy="trail", hardware=HW),
+                           event_log=EventLog()) for i in range(2)]
+        router = Router(replicas, RouterConfig(n_replicas=2, policy="jsq"),
+                        faults=parse_chaos(spec), event_log=EventLog())
+        router.run(copy.deepcopy(reqs))
+        for eng in replicas:
+            assert eng.blocks.used_pages() == 0, spec
+
+
+def test_straggler_excluded_from_dispatch_while_degraded():
+    reqs = workload(n=30, rate=2.0)
+    stats = run_cluster(CFG, reqs, router_policy="jsq", n_replicas=2,
+                        seed=0, hardware=HW,
+                        faults=parse_chaos("slow:1@0-100000*8"))
+    # replica 1 is degraded for the whole run: nothing lands on it
+    assert stats.dispatch_counts[1] == 0
+    assert stats.summary()["finished"] == 30
+
+
+def test_flaky_submit_fails_over_same_instant():
+    reqs = workload(n=30, rate=2.0)
+    stats = run_cluster(CFG, reqs, router_policy="jsq", n_replicas=2,
+                        seed=0, hardware=HW, record_events=True,
+                        faults=parse_chaos("flaky:0@0-100000%1.0"))
+    s = stats.summary()
+    assert stats.dispatch_counts[0] == 0    # every pick of 0 bounced
+    assert s["finished"] == 30 and s["lost"] == 0
+    assert s["retries"] > 0
+    check_invariants(stats.event_log)
+
+
+def test_retry_budget_exhaustion_loses_requests():
+    reqs = workload(n=10, rate=2.0)
+    stats = run_cluster(
+        CFG, reqs, router_policy="jsq", n_replicas=2, seed=0, hardware=HW,
+        record_events=True, max_retries=1,
+        faults=parse_chaos("flaky:0@0-1e9%1.0,flaky:1@0-1e9%1.0"))
+    s = stats.summary()
+    assert s["lost"] == 10 and s["finished"] == 0
+    assert s["goodput"] == 0.0
+    check_invariants(stats.event_log)
+    rep = rollup(stats.event_log)
+    assert rep["requests"]["arrived"] == 10
+    assert rep["requests"]["finished"] == 0
+    assert rep["requests"]["cancelled"] == 10
+
+
+def test_retried_requests_keep_user_perceived_latency():
+    """Failover preserves the original arrival: completion latency spans
+    the crash + backoff, it is not reset on the new replica."""
+    reqs = workload(n=40, rate=4.0)
+    stats = _chaos_cluster("crash:1@5", reqs)
+    retried = {e.rid for e in stats.event_log.events if e.kind == "retry"}
+    assert retried
+    per = stats.event_log.per_request()
+    for rid in retried:
+        evs = per[rid]
+        arrivals = {e.t for e in evs if e.kind == "arrival"}
+        assert len(arrivals) == 1           # duplicates carry the same t
+        finish = [e.t for e in evs if e.kind == "finish"]
+        retry_t = [e.t for e in evs if e.kind == "retry"]
+        if finish:
+            assert finish[0] >= max(retry_t)
+
+
+def test_chaos_runs_are_deterministic():
+    reqs = workload(n=40, rate=4.0)
+    a = _chaos_cluster("crash:1@5-20,flaky:0@0-3%0.5", reqs)
+    b = _chaos_cluster("crash:1@5-20,flaky:0@0-3%0.5", reqs)
+    assert json.dumps(a.summary(), sort_keys=True) == \
+        json.dumps(b.summary(), sort_keys=True)
+    assert [e.as_dict() for e in a.event_log.events] == \
+        [e.as_dict() for e in b.event_log.events]
+
+
+# ---------------------------------------------------------------------------
+# off-by-default byte-identity
+# ---------------------------------------------------------------------------
+
+def test_resilience_knobs_off_are_byte_identical_single_engine():
+    reqs = workload(n=40, rate=4.0)
+    base = run_policy(CFG, "trail", reqs, hardware=HW, seed=0)
+    gated = run_policy(CFG, "trail", reqs, hardware=HW, seed=0,
+                       deadline_s=0.0, ttft_deadline_s=0.0,
+                       shed_watermark=0.0, admission_control=False)
+    assert json.dumps(base.summary(), sort_keys=True) == \
+        json.dumps(gated.summary(), sort_keys=True)
+    assert base.latencies == gated.latencies
+
+
+@pytest.mark.parametrize("policy", ["round-robin", "pow2", "jspw"])
+def test_no_faults_cluster_is_byte_identical(policy):
+    reqs = workload(n=40, rate=4.0)
+    base = run_cluster(CFG, reqs, router_policy=policy, n_replicas=2,
+                       seed=0, hardware=HW)
+    gated = run_cluster(CFG, reqs, router_policy=policy, n_replicas=2,
+                        seed=0, hardware=HW, faults=None, max_retries=5)
+    assert json.dumps(base.summary(), sort_keys=True) == \
+        json.dumps(gated.summary(), sort_keys=True)
+    assert base.dispatch_counts == gated.dispatch_counts

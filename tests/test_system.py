@@ -108,6 +108,28 @@ def test_dryrun_lowers_on_production_mesh():
     assert rep["memory"]["peak_per_device_gb"] < 16.0
 
 
+def test_serve_cli_invalid_flags_exit_2():
+    """The serve CLI's contract for bad input: exit code 2 (argparse's
+    convention) with a one-line error on stderr — never a traceback,
+    never status 1."""
+    cases = [
+        ["--rate-scale", "2.0"],                     # needs --trace
+        ["--trace", "/nonexistent/t.jsonl"],         # unreadable path
+        ["--chaos", "crash:1@5"],                    # needs --replicas >= 2
+        ["--chaos", "meteor:0@5", "--replicas", "2"],  # bad fault kind
+        ["--policy", "nope"],                        # argparse choice error
+        ["--admission-control"],                     # needs watermark
+    ]
+    for argv in cases:
+        out = subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", *argv],
+            env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+            capture_output=True, text=True, timeout=120)
+        assert out.returncode == 2, (argv, out.returncode, out.stderr)
+        assert "error:" in out.stderr, (argv, out.stderr)
+        assert "Traceback" not in out.stderr, (argv, out.stderr)
+
+
 def test_oracle_predictor_statistics():
     """Sharper probe temp -> lower serving latency (prediction quality
     matters, the paper's TRAIL vs TRAIL-BERT axis)."""

@@ -70,6 +70,60 @@ def test_loader_missing_column_raises(tmp_path):
         load_jsonl(str(p))
 
 
+def test_non_strict_jsonl_skips_bad_rows_with_counted_warning(tmp_path):
+    """strict=False drops malformed rows (bad JSON, missing columns, bad
+    timestamps) instead of raising, warns once with the count, and
+    records it in trace.meta; the good rows load unchanged."""
+    p = tmp_path / "dirty.jsonl"
+    p.write_text(
+        '{"ts": 1.0, "context_tokens": 10, "generated_tokens": 4}\n'
+        'this is not json\n'
+        '{"ts": 2.0, "generated_tokens": 4}\n'          # missing prompt col
+        '{"ts": "NOT-A-TIME", "context_tokens": 1, "generated_tokens": 1}\n'
+        '{"ts": 3.0, "context_tokens": 5, "generated_tokens": 2}\n')
+    with pytest.raises(ValueError):
+        load_jsonl(str(p))                              # strict default
+    with pytest.warns(UserWarning, match=r"skipped 3 malformed"):
+        tr = load_jsonl(str(p), strict=False)
+    assert len(tr.records) == 2
+    assert [r.prompt_tokens for r in tr.records] == [10, 5]
+    assert tr.meta["skipped_rows"] == 3
+
+
+def test_non_strict_csv_skips_bad_rows(tmp_path):
+    p = tmp_path / "dirty.csv"
+    p.write_text("TIMESTAMP,ContextTokens,GeneratedTokens\n"
+                 "1.0,100,20\n"
+                 "oops,not,numbers\n"
+                 "2.0,50,10\n")
+    with pytest.raises(ValueError):
+        load_csv(str(p))
+    with pytest.warns(UserWarning, match=r"skipped 1 malformed"):
+        tr = load_trace(str(p), strict=False)
+    assert len(tr.records) == 2
+    assert tr.meta["skipped_rows"] == 1
+
+
+def test_strict_and_clean_loads_have_no_skip_meta(tmp_path):
+    """A clean file loads identically in both modes — no warning, no
+    skipped_rows key (non-strict must not perturb clean pipelines)."""
+    p = tmp_path / "clean.jsonl"
+    p.write_text('{"ts": 1.0, "context_tokens": 2, "generated_tokens": 1}\n')
+    a, b = load_jsonl(str(p)), load_jsonl(str(p), strict=False)
+    assert "skipped_rows" not in a.meta and "skipped_rows" not in b.meta
+    assert [r.as_dict() for r in a.records] == \
+        [r.as_dict() for r in b.records]
+
+
+def test_non_strict_still_rejects_json_array(tmp_path):
+    """A whole-file JSON array is a format error, not a row error."""
+    p = tmp_path / "array.jsonl"
+    p.write_text('[{"ts": 1.0, "context_tokens": 2, '
+                 '"generated_tokens": 1}]\n')
+    with pytest.raises(ValueError, match="JSON array"):
+        load_jsonl(str(p), strict=False)
+
+
 def test_loader_limit_keeps_earliest_not_file_order(tmp_path):
     """`limit` must slice after the sort: an unsorted export's cap keeps
     the earliest arrivals and rebases t=0 on the true earliest record."""
