@@ -1,6 +1,7 @@
-"""Lemma 1: closed-form mean response time for SPRPT with limited preemption
-in an M/G/1 queue, evaluated numerically via the SOAP decomposition
-(Appendix C of the paper; Scully & Harchol-Balter 2018).
+"""Lemma 1: closed-form M/G/1 mean response time for SPRPT-LP.
+
+Evaluated numerically via the SOAP decomposition (Appendix C of the
+paper; Scully & Harchol-Balter 2018):
 
     E[T(x,r)] = lambda * (I1(r) + I2(r, a0)) / (2 (1 - rho'_r)^2)
               + int_0^{min(x, a0)} da / (1 - rho'_{(r-a)+})

@@ -1,5 +1,6 @@
-"""Discrete-event M/G/1 simulator for SPRPT with limited preemption
-(paper Appendix D), with age-proportional memory tracking.
+"""Discrete-event M/G/1 simulator for SPRPT with limited preemption.
+
+Paper Appendix D, with age-proportional memory tracking.
 
 Single server, Poisson(lam) arrivals, Exp(1) service times, predictions
 either perfect or exponential around the true size. Policies:

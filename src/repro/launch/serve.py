@@ -31,6 +31,14 @@ workload.
         --rate 40 --deadline 120 --shed-watermark 20000
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 --router jspw \
         --scenario bursty --chaos crash:1@30-90 --compute-bound
+
+    # tail-aware scheduling: the BENCH_tail recipe (rank aging + early
+    # C-limit pin + paged KV) that un-inverts completion-p99 vs FCFS
+    PYTHONPATH=src python -m repro.launch.serve --trace sample \
+        --rate-scale 24 --tail --metrics-out metrics.json
+    PYTHONPATH=src python -m repro.launch.serve --scenario bursty \
+        --rate 40 --age-boost 256 --age-delay 5 --deadline 120 \
+        --deadline-slack 20
 """
 
 from __future__ import annotations
@@ -64,7 +72,9 @@ def main():
                          "the legacy trail probe. 'rank-only' pairs "
                          "with --policy rank (auto-selected when the "
                          "policy is left at its default)")
-    ap.add_argument("--c", type=float, default=0.8)
+    ap.add_argument("--c", type=float, default=None,
+                    help="preemption budget multiplier C (default 0.8; "
+                         "--tail lowers it to 0.2)")
     ap.add_argument("--rate", type=float, default=None,
                     help="aggregate request rate (req/s; default 14, or "
                          "the trace's native rate with --trace)")
@@ -124,6 +134,26 @@ def main():
                     help="with --shed-watermark: refuse new arrivals at "
                          "admission while the predicted backlog is above "
                          "the watermark, instead of shedding queued work")
+    ap.add_argument("--age-boost", type=float, default=None, metavar="R",
+                    help="rank-aging boost: rank units (predicted tokens) "
+                         "subtracted per second a request waits beyond "
+                         "the --age-delay grace window; starvation-free "
+                         "for any value > 0 (default 0 = off)")
+    ap.add_argument("--age-delay", type=float, default=None, metavar="S",
+                    help="rank-aging grace window (seconds): ordering "
+                         "stays pure SRPT inside it (default 0)")
+    ap.add_argument("--deadline-slack", type=float, default=None,
+                    metavar="S",
+                    help="deadline-aware limited preemption: a running "
+                         "request within this many seconds of its "
+                         "--deadline is never preempted (0 = off)")
+    ap.add_argument("--tail", action="store_true",
+                    help="apply the BENCH_tail recipe (age-boost 3072, "
+                         "age-delay 20.5, c 0.2, paged KV): un-inverts "
+                         "completion-p99 vs fcfs at overload while "
+                         "keeping the >=1.5x mean win; explicit "
+                         "--age-boost/--age-delay/--c/--kv-layout "
+                         "flags override individual knobs")
     ap.add_argument("--chaos", default=None, metavar="SPEC",
                     help="deterministic fault injection for cluster mode: "
                          "comma-separated crash:R@T[-U] | slow:R@T-U*F | "
@@ -164,6 +194,22 @@ def main():
     if args.admission_control and args.shed_watermark <= 0:
         ap.error("--admission-control requires --shed-watermark > 0 "
                  "(the watermark is the admission threshold)")
+    for flag, val in (("--age-boost", args.age_boost),
+                      ("--age-delay", args.age_delay),
+                      ("--deadline-slack", args.deadline_slack)):
+        if val is not None and val < 0:
+            ap.error(f"{flag} must be >= 0")
+    if args.deadline_slack and not args.deadline:
+        ap.error("--deadline-slack requires --deadline > 0 (the slack "
+                 "window is measured against the completion deadline)")
+    # --tail supplies the BENCH_tail recipe as *defaults*; any knob the
+    # user set explicitly wins over the recipe value
+    age_boost = args.age_boost if args.age_boost is not None \
+        else (3072.0 if args.tail else 0.0)
+    age_delay = args.age_delay if args.age_delay is not None \
+        else (20.5 if args.tail else 0.0)
+    deadline_slack = args.deadline_slack or 0.0
+    c_limit = args.c if args.c is not None else (0.2 if args.tail else 0.8)
     faults = None
     if args.chaos:
         if args.replicas <= 1:
@@ -212,7 +258,8 @@ def main():
                              hbm_bw=819e9, overhead_s=2e-4)
                 if args.compute_bound else HardwareSpec())
     mem_budget = int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62
-    kv_layout = args.kv_layout or ("paged" if args.prefix_cache else "contig")
+    kv_layout = args.kv_layout or ("paged" if args.prefix_cache or args.tail
+                                   else "contig")
 
     # strategy resolution: explicit flag > scenario recommendation >
     # legacy default ("" = the engine's built-in trail probe)
@@ -238,7 +285,7 @@ def main():
         stats = run_cluster(
             cfg, reqs, router_policy=args.router,
             n_replicas=args.replicas, policy=policy,
-            c_limit=args.c, max_batch=args.max_batch,
+            c_limit=c_limit, max_batch=args.max_batch,
             mem_budget=mem_budget, hardware=hardware, seed=args.seed,
             kv_layout=kv_layout, prefix_cache=args.prefix_cache,
             predictor=pred_spec,
@@ -246,6 +293,8 @@ def main():
             deadline_s=args.deadline, ttft_deadline_s=args.ttft_deadline,
             shed_watermark=args.shed_watermark,
             admission_control=args.admission_control,
+            age_boost=age_boost, age_delay_s=age_delay,
+            deadline_slack_s=deadline_slack,
             record_events=bool(args.metrics_out))
         print(json.dumps({"arch": cfg.name, "policy": policy,
                           "predictor": pred_spec or "trail-probe",
@@ -276,7 +325,7 @@ def main():
         from repro.metrics import EventLog
         event_log = EventLog()
     stats = run_policy(
-        cfg, policy, reqs, c_limit=args.c, max_batch=args.max_batch,
+        cfg, policy, reqs, c_limit=c_limit, max_batch=args.max_batch,
         mem_budget=mem_budget, mode=mode,
         predictor=predictor if predictor is not None else (pred_spec or None),
         model=model,
@@ -285,11 +334,13 @@ def main():
         deadline_s=args.deadline, ttft_deadline_s=args.ttft_deadline,
         shed_watermark=args.shed_watermark,
         admission_control=args.admission_control,
+        age_boost=age_boost, age_delay_s=age_delay,
+        deadline_slack_s=deadline_slack,
         event_log=event_log)
     print(json.dumps({"arch": cfg.name, "policy": policy,
                       "predictor": ("probe" if args.real
                                     else pred_spec or "trail-probe"),
-                      "c": args.c, "rate": rate,
+                      "c": c_limit, "rate": rate,
                       "scenario": (f"trace:{args.trace}" if args.trace
                                    else args.scenario or
                                    ("burst" if args.burst else "poisson")),
@@ -315,7 +366,11 @@ def _write_metrics(path: str, event_log, cfg, hardware, reqs,
     page = EngineConfig().page_size if kv_layout == "paged" else 0
     service = ideal_service_times(CostModel(cfg, hardware, page_size=page),
                                   reqs)
-    report = rollup(event_log, service_times=service)
+    # per-tenant TTFT/completion splits whenever the workload is tagged
+    # (multi-tenant scenarios, tenant-annotated traces)
+    tenants = {r.rid: r.tenant for r in reqs if r.tenant}
+    report = rollup(event_log, service_times=service,
+                    tenants=tenants or None)
     with open(path, "w") as f:
         f.write(report_json(report))
     print(report_markdown(report, title=f"metrics -> {path}"))

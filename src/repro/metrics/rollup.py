@@ -55,7 +55,8 @@ def ideal_service_times(cost_model, requests) -> dict[int, float]:
 
 def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
            slos: dict[str, tuple] | None = None,
-           percentiles=DEFAULT_PERCENTILES) -> dict:
+           percentiles=DEFAULT_PERCENTILES,
+           tenants: dict[int, str] | None = None) -> dict:
     """Aggregate an event log into the benchmark-facing metrics report.
 
     Args:
@@ -65,10 +66,18 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
         slos: per-metric SLO threshold grids; defaults to `DEFAULT_SLOS`.
             Keys: ``ttft`` | ``tbt`` | ``completion``.
         percentiles: which percentiles each summary carries.
+        tenants: optional rid → tenant label; when given, the report
+            gains a ``per_tenant`` section with per-tenant TTFT and
+            completion summaries (the per-tenant p99 split that makes
+            cross-tenant starvation visible). Absent by default so
+            existing reports keep their exact structure.
 
     Returns:
         A JSON-ready dict: ``requests`` (arrived/finished counts),
-        per-metric summaries, ``slo_attainment`` curves, and counters.
+        per-metric summaries, ``slo_attainment`` curves, and counters
+        (including the tail-facing ``max_wait_s`` — the worst
+        first-token wait observed, charging still-waiting requests up
+        to the log's last event — and ``preemptions_per_request``).
         Deterministic: identical logs yield byte-identical
         ``json.dumps(..., sort_keys=True)`` output.
     """
@@ -85,6 +94,10 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
     swap_bytes = 0.0
     prefix_hit_tokens = 0.0
     total_tokens = 0.0
+    max_wait = 0.0
+    t_end = 0.0
+    unstarted_arrivals: list[float] = []
+    by_tenant: dict[str, dict[str, StreamingQuantiles]] = {}
 
     for rid, evs in sorted(log.per_request().items()):
         arrival = first_tok = finish = None
@@ -118,6 +131,9 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
                 n_retries += 1
             elif e.kind == "replica_down":
                 replica_downs += 1
+        if evs:
+            t_end = max(t_end, max(e.t for e in evs))
+        tenant = tenants.get(rid) if tenants else None
         if arrival is not None:
             n_arrived += 1
             if first_tok is not None:
@@ -126,11 +142,26 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
                 # exactly the long-stuck started-but-unfinished tail and
                 # flatter the TTFT distribution
                 ttft.add(first_tok - arrival)
+                max_wait = max(max_wait, first_tok - arrival)
+                if tenant is not None:
+                    by_tenant.setdefault(tenant, {
+                        "ttft": StreamingQuantiles(),
+                        "completion": StreamingQuantiles(),
+                    })["ttft"].add(first_tok - arrival)
+            else:
+                # never started: charge its wait up to the log's last
+                # event (resolved once t_end is final, after the loop)
+                unstarted_arrivals.append(arrival)
         if finish is None or arrival is None:
             continue                    # unfinished: TTFT + counters only
         n_finished += 1
         lat = finish - arrival
         completion.add(lat)
+        if tenant is not None:
+            by_tenant.setdefault(tenant, {
+                "ttft": StreamingQuantiles(),
+                "completion": StreamingQuantiles(),
+            })["completion"].add(lat)
         out_len = sum(n for _, n in tok_events)
         if out_len > 0:
             per_token.add(lat / out_len)
@@ -168,6 +199,11 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
             "completion": _attainment_curve(completion, slos["completion"]),
         },
         "counters": {"preemptions": preemptions,
+                     "preemptions_per_request": (preemptions / n_arrived
+                                                 if n_arrived else 0.0),
+                     "max_wait_s": max(
+                         [max_wait] + [t_end - a
+                                       for a in unstarted_arrivals]),
                      "swap_bytes": swap_bytes,
                      "prefix_hit_tokens": prefix_hit_tokens,
                      "cancelled": n_cancelled,
@@ -178,4 +214,10 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
     }
     if len(slowdown):
         report["slowdown"] = slowdown.summary(percentiles)
+    if tenants is not None:
+        report["per_tenant"] = {
+            tenant: {"ttft": accs["ttft"].summary(percentiles),
+                     "completion": accs["completion"].summary(percentiles)}
+            for tenant, accs in sorted(by_tenant.items())
+        }
     return report

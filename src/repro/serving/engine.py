@@ -112,6 +112,28 @@ class EngineConfig:
             watermark (reject-at-the-door instead of shedding queued
             work). Refused requests emit ``arrival`` + ``shed`` and
             never enter the pool.
+        age_boost: rank-aging boost — rank units (predicted tokens for
+            the magnitude policies) subtracted per second a request has
+            been in the system beyond the ``age_delay_s`` grace window,
+            for trail / srpt / trail-bert / rank. Any value > 0 bounds
+            waiting time (no starvation); larger values dial the
+            post-window ordering from pure SRPT toward FCFS, buying
+            completion-p99 at a small mean cost. 0 (the default) keeps
+            ranks byte-identical to the un-aged scheduler.
+        age_delay_s: rank-aging grace window in seconds — ordering stays
+            pure SRPT for requests that have waited less than this; only
+            the excess wait is boosted. Read only when ``age_boost`` >
+            0. 0 ages from arrival, which preserves *relative* order
+            between any two queued requests (both fall at the same
+            rate): a real starvation rescue wants a window around the
+            tolerable-wait budget.
+        deadline_slack_s: deadline-aware limited preemption — a RUNNING
+            request whose completion deadline (per-request or engine
+            ``deadline_s``) is within this many seconds is pinned into
+            the batch (never preempted) under every preemptive policy,
+            generalizing the paper's served-token C-limit to wall-clock
+            urgency. 0 (the default) = off; no effect on requests
+            without a deadline.
     """
 
     policy: str = "trail"           # fcfs | sjf | srpt | trail | trail-bert
@@ -145,6 +167,12 @@ class EngineConfig:
                                     # tokens (0 = shedding off)
     admission_control: bool = False  # refuse (vs queue) arrivals while the
                                      # backlog is over the watermark
+    age_boost: float = 0.0          # rank-aging boost (rank units/second
+                                    # waited past the grace window;
+                                    # 0 = aging off)
+    age_delay_s: float = 0.0        # rank-aging grace window (seconds)
+    deadline_slack_s: float = 0.0   # deadline-slack non-preemption window
+                                    # in seconds (0 = off)
 
 
 @dataclass
@@ -470,12 +498,19 @@ class Engine:
                 so the router truncates at the incoming job's own size
                 estimate (SRPT-interfering work) instead of summing raw
                 backlog, which is the right signal only for FCFS replicas.
+                Under rank aging (``age_boost`` > 0) a queued job j also
+                interferes once its aged rank
+                ``r_j - boost*max(waited_j - age_delay_s, 0)`` beats the
+                arrival's ``truncate``, so each admitted job's clip rises
+                by that same hinge term — at boost=0 this is exactly the
+                legacy cap.
             include_pending: charge submitted-but-unadmitted arrivals
                 too (the default). The shedding/admission-control paths
                 pass False — overload decisions at time t must not count
                 work that has not arrived yet.
         """
         cap = float("inf") if truncate is None else truncate
+        boost = self.ecfg.age_boost
         prior = (self._r0_sum / self._r0_cnt if self._r0_cnt
                  else self.predictor.pc.max_len / 2.0)
         tot = 0.0
@@ -483,12 +518,16 @@ class Engine:
             if e.state is ReqState.FINISHED:
                 continue
             req = self._pool_reqs[rid]
+            cap_e = cap
+            if boost > 0.0 and truncate is not None:
+                cap_e = cap + boost * max(
+                    self._now - e.arrival - self.ecfg.age_delay_s, 0.0)
             if self._magnitude:
-                tot += min(max(e.pred_remaining, 0.0), cap)
+                tot += min(max(e.pred_remaining, 0.0), cap_e)
             else:
                 # rank-only: scores are not token counts — charge the
                 # uninformative prior, decayed by tokens already served
-                tot += min(max(prior - e.age, 0.0), cap)
+                tot += min(max(prior - e.age, 0.0), cap_e)
             hint = (self._prefix_hint.get(rid, 0)
                     if self.prefix_cache and e.state is ReqState.WAITING
                     else 0)
@@ -560,6 +599,11 @@ class Engine:
             req.entry.pred_remaining = r0
             req.entry.c_limit = ecfg.c_limit
             req.entry.finish_len = req.true_out_len
+            dl = req.deadline_s or ecfg.deadline_s
+            if dl > 0:
+                # absolute deadline on the engine clock: feeds both the
+                # expiry scan and the deadline-slack non-preemption rule
+                req.entry.deadline_at = req.arrival + dl
             if self._magnitude:
                 # ordinal scores must not pollute the token-count prior
                 self._r0_sum += r0
@@ -626,7 +670,9 @@ class Engine:
             mem_budget=ecfg.mem_budget,
             bytes_fn=lambda e: self._bytes_for(
                 pool_reqs[e.rid].context_len + self._k),
-            lookahead=self._k)
+            lookahead=self._k, now=now, age_boost=ecfg.age_boost,
+            age_delay=ecfg.age_delay_s,
+            deadline_slack=ecfg.deadline_slack_s)
 
         self._apply_preemptions(decision, pool_reqs, stats)
         if self.paged:
@@ -944,16 +990,25 @@ class Engine:
         order is the scheduler's own rank, worst first (latest arrival
         breaks ties), so with a magnitude predictor the longest
         predicted jobs go first — exactly the jobs SRPT would have
-        served last anyway.
+        served last anyway. Rank aging folds in here too: a long job
+        that has already waited out most of its starvation bound ranks
+        better than a fresh one, so shedding under ``age_boost`` > 0
+        prefers the newest long work over the most-starved.
         """
         wm = self.ecfg.shed_watermark
         policy = self.ecfg.policy
+        boost = self.ecfg.age_boost
         while self.backlog(include_pending=False) > wm:
             waiting = [e for e in self._entries.values()
                        if e.state is ReqState.WAITING]
             if not waiting:
                 break           # backlog is all in-flight work: keep it
-            victim = max(waiting, key=lambda e: (e.rank(policy), e.arrival))
+            victim = max(waiting,
+                         key=lambda e: (e.rank(policy, now=self._now,
+                                               age_boost=boost,
+                                               age_delay=self.ecfg
+                                               .age_delay_s),
+                                        e.arrival))
             self.cancel(victim.rid, reason="shed")
 
     def crash(self, t: float | None = None) -> list[Request]:
@@ -1344,7 +1399,9 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                prefix_cache=False, event_log=None,
                deadline_s=0.0, ttft_deadline_s=0.0,
                shed_watermark=0.0,
-               admission_control=False) -> EngineStats:
+               admission_control=False,
+               age_boost=0.0, age_delay_s=0.0,
+               deadline_slack_s=0.0) -> EngineStats:
     """One-shot convenience: build an `Engine` and run a (deep-copied)
     request trace under the given policy, returning its `EngineStats`.
     ``predictor`` accepts either a `PredictorBase` instance or a
@@ -1353,7 +1410,9 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
     default. Pass a `repro.metrics.EventLog` as ``event_log`` to
     capture the per-request event stream alongside. The resilience
     knobs (``deadline_s`` / ``ttft_deadline_s`` / ``shed_watermark`` /
-    ``admission_control``) mirror `EngineConfig` and default off."""
+    ``admission_control``) and the tail knobs (``age_boost`` /
+    ``age_delay_s`` / ``deadline_slack_s``) mirror `EngineConfig` and
+    default off."""
     spec = predictor if isinstance(predictor, str) else ""
     if spec:
         predictor = None
@@ -1367,6 +1426,9 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                         ttft_deadline_s=ttft_deadline_s,
                         shed_watermark=shed_watermark,
                         admission_control=admission_control,
+                        age_boost=age_boost,
+                        age_delay_s=age_delay_s,
+                        deadline_slack_s=deadline_slack_s,
                         hardware=hardware or HardwareSpec())
     import copy
     reqs = copy.deepcopy(requests)

@@ -323,3 +323,67 @@ def test_router_rejects_unknown_backlog_unit():
     eng = Engine(CFG, EngineConfig(policy="trail", hardware=HW))
     with pytest.raises(ValueError, match="backlog_unit"):
         Router([eng], RouterConfig(n_replicas=1, backlog_unit="minutes"))
+
+
+# ---------------------------------------------------------------------------
+# tail counters + per-tenant splits (PR 8)
+# ---------------------------------------------------------------------------
+
+def test_rollup_max_wait_tracks_worst_first_token():
+    log = EventLog()
+    log.emit(0.0, 1, "arrival")
+    log.emit(2.0, 1, "first_token")
+    log.emit(2.0, 1, "tokens", 1)
+    log.emit(2.5, 1, "finish")
+    log.emit(1.0, 2, "arrival")
+    log.emit(9.0, 2, "first_token")     # worst wait: 8s
+    log.emit(9.0, 2, "tokens", 1)
+    log.emit(9.5, 2, "finish")
+    rep = rollup(log)
+    assert rep["counters"]["max_wait_s"] == 8.0
+
+
+def test_rollup_max_wait_charges_unstarted_requests():
+    """A never-started request's wait runs to the log's last event —
+    otherwise a starving request would vanish from the starvation
+    metric exactly while it starves."""
+    log = EventLog()
+    log.emit(0.0, 1, "arrival")
+    log.emit(1.0, 1, "first_token")
+    log.emit(1.0, 1, "tokens", 1)
+    log.emit(2.0, 1, "finish")
+    log.emit(0.5, 2, "arrival")         # still waiting at t_end=12
+    log.emit(12.0, 3, "arrival")
+    rep = rollup(log)
+    assert rep["counters"]["max_wait_s"] == 11.5
+
+
+def test_rollup_preemptions_per_request():
+    log = EventLog()
+    for rid in (1, 2):
+        log.emit(0.0, rid, "arrival")
+        log.emit(1.0, rid, "first_token")
+        log.emit(1.0, rid, "tokens", 1)
+    log.emit(2.0, 1, "preempt")
+    log.emit(3.0, 1, "preempt")
+    log.emit(4.0, 1, "preempt")
+    rep = rollup(log)
+    assert rep["counters"]["preemptions"] == 3
+    assert rep["counters"]["preemptions_per_request"] == 1.5
+
+
+def test_rollup_per_tenant_split():
+    log = EventLog()
+    for rid, (t0, t1) in {1: (0.0, 2.0), 2: (0.0, 10.0),
+                          3: (1.0, 4.0)}.items():
+        log.emit(t0, rid, "arrival")
+        log.emit(t1, rid, "first_token")
+        log.emit(t1, rid, "tokens", 1)
+        log.emit(t1 + 1.0, rid, "finish")
+    rep = rollup(log, tenants={1: "chat", 2: "batch", 3: "chat"})
+    per = rep["per_tenant"]
+    assert set(per) == {"chat", "batch"}
+    assert per["chat"]["ttft"]["n"] == 2
+    assert per["batch"]["completion"]["mean"] == 11.0
+    # absent by default: existing report structure is untouched
+    assert "per_tenant" not in rollup(log)

@@ -1,0 +1,82 @@
+"""M/G/1 cross-validation: Lemma 1 closed form vs discrete-event sim.
+
+The paper's Appendix-C/D theory (SPRPT with limited preemption, SOAP
+decomposition) checked against `core.simulation.simulate` at a grid of
+(lam, C) operating points, with multi-seed averaging so the tolerance
+can be tight without flaking. Complements `test_queueing.py`'s
+single-seed spot checks with:
+
+* a >= 3-point (lam, C) validation grid per prediction model,
+* a seed-averaged agreement bound (sim noise ~ 1/sqrt(n_seeds * n)),
+* shape checks: theory and simulation must agree on *how* mean
+  response moves as C and lam move, not just on point values.
+"""
+
+import pytest
+
+from repro.core.queueing import MG1Config, mean_response
+from repro.core.simulation import simulate
+
+#: The validation grid: light / moderate / heavy load x loose / tight C.
+GRID = [(0.3, 0.8), (0.5, 0.5), (0.7, 0.9)]
+
+N_JOBS = 40000
+SEEDS = (11, 12, 13)
+
+
+def _sim_mean(lam: float, C: float, prediction: str) -> float:
+    """Seed-averaged simulated mean response at one operating point."""
+    vals = [simulate("sprpt-lp", lam, C=C, n_jobs=N_JOBS,
+                     prediction=prediction, seed=s).mean_response
+            for s in SEEDS]
+    return sum(vals) / len(vals)
+
+
+@pytest.mark.parametrize("lam,C", GRID)
+def test_lemma1_vs_sim_perfect(lam, C):
+    """Perfect predictions: closed form within 15% of the sim mean
+    (the SOAP form's residence term mildly underestimates finite-run
+    sims at moderate load; 15% matches `test_queueing.py`'s bound)."""
+    th = mean_response(MG1Config(lam=lam, C=C, prediction="perfect"))
+    assert _sim_mean(lam, C, "perfect") == pytest.approx(th, rel=0.15)
+
+
+@pytest.mark.parametrize("lam,C", GRID)
+def test_lemma1_vs_sim_exponential(lam, C):
+    """Exponential prediction noise: closed form within 12% of sim."""
+    th = mean_response(MG1Config(lam=lam, C=C, prediction="exponential"))
+    assert _sim_mean(lam, C, "exponential") == pytest.approx(th, rel=0.12)
+
+
+def test_theory_and_sim_agree_on_prediction_direction():
+    """Noisy (exponential) predictions cost mean response vs perfect
+    ones at every grid point — same sign in closed form and sim."""
+    for lam, C in GRID:
+        th_p = mean_response(MG1Config(lam=lam, C=C, prediction="perfect"))
+        th_e = mean_response(MG1Config(lam=lam, C=C,
+                                       prediction="exponential"))
+        assert th_p < th_e
+        assert _sim_mean(lam, C, "perfect") < _sim_mean(lam, C,
+                                                        "exponential")
+
+
+def test_theory_and_sim_agree_on_load_direction():
+    """Mean response grows with lam in both theory and simulation."""
+    C = 0.8
+    ths = [mean_response(MG1Config(lam=lam, C=C, prediction="perfect"))
+           for lam in (0.3, 0.5, 0.7)]
+    sims = [_sim_mean(lam, C, "perfect") for lam in (0.3, 0.5, 0.7)]
+    assert ths == sorted(ths)
+    assert sims == sorted(sims)
+
+
+def test_sim_converges_toward_theory():
+    """The sim-vs-theory gap shrinks as the run length grows (the
+    residual at 4x jobs is no worse than the short run's residual)."""
+    lam, C = 0.5, 0.8
+    th = mean_response(MG1Config(lam=lam, C=C, prediction="perfect"))
+    short = abs(simulate("sprpt-lp", lam, C=C, n_jobs=5000,
+                         prediction="perfect", seed=7).mean_response - th)
+    long = abs(simulate("sprpt-lp", lam, C=C, n_jobs=80000,
+                        prediction="perfect", seed=7).mean_response - th)
+    assert long <= short + 0.05 * th

@@ -119,6 +119,8 @@ def test_serve_cli_invalid_flags_exit_2():
         ["--chaos", "meteor:0@5", "--replicas", "2"],  # bad fault kind
         ["--policy", "nope"],                        # argparse choice error
         ["--admission-control"],                     # needs watermark
+        ["--age-boost", "-1"],                       # negative knob
+        ["--deadline-slack", "5"],                   # needs --deadline
     ]
     for argv in cases:
         out = subprocess.run(

@@ -1,0 +1,364 @@
+"""Tail-aware scheduling: rank aging + deadline-slack non-preemption.
+
+Pins the PR 8 semantics at every layer:
+
+* rank algebra — the hinge aging law
+  (``aged = rank - age_boost * max(waited - age_delay, 0)``), the
+  grace window, which policies age, and the interaction with the
+  C-limit / deadline-slack pins;
+* select_batch — no-starvation (a long-waiting entry outranks any
+  finite competitor) and in-slack RUNNING entries never preempted,
+  both as deterministic cases and hypothesis properties;
+* engine — bounded waiting under overload, the deadline-slack window
+  honored on the event log, aged backlog caps, off-is-free identity;
+* benchmarks — the BENCH_trace_replay headline cell is byte-identical
+  with the new knobs at defaults, and the BENCH_tail headline cell
+  reproduces the committed artifact (determinism pin).
+"""
+
+import copy
+import json
+import os
+
+import pytest
+from _hypothesis_fallback import given, settings, st
+
+from repro.config import get_config
+from repro.core.scheduler import (AGED_POLICIES, NEG_INF, POLICIES, ReqState,
+                                  SchedEntry, select_batch)
+from repro.metrics.events import EventLog
+from repro.metrics.rollup import rollup
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig, run_policy
+from repro.serving.workload import generate, scenario_config
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CFG = get_config("granite-3-8b")
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  overhead_s=2e-4)
+
+
+def mk(rid, arrival=0.0, r0=10.0, age=0, state=ReqState.WAITING, c=0.8,
+       pred=None, deadline_at=0.0):
+    return SchedEntry(rid=rid, arrival=arrival, prompt_len=16, r0=r0,
+                      pred_remaining=pred if pred is not None else r0,
+                      age=age, c_limit=c, state=state,
+                      deadline_at=deadline_at)
+
+
+def bytes_fn(e):
+    return 100 * (e.prompt_len + e.age)
+
+
+def workload(n=40, rate=4.0, seed=0, scenario="bursty"):
+    wc = scenario_config(scenario, n_requests=n, request_rate=rate,
+                         seed=seed, vocab=CFG.vocab_size)
+    return generate(wc)
+
+
+# ---------------------------------------------------------------------------
+# rank algebra: the hinge aging law
+# ---------------------------------------------------------------------------
+
+def test_zero_knobs_are_byte_identical_ranks():
+    """Explicit zero knobs (at any clock value) return the exact same
+    float as the legacy no-knob call, for every policy and state."""
+    for policy in POLICIES:
+        for state in (ReqState.WAITING, ReqState.RUNNING,
+                      ReqState.PREEMPTED):
+            e = mk(0, arrival=1.5, r0=20.0, age=3, state=state, pred=7.0,
+                   deadline_at=100.0)
+            legacy = e.rank(policy)
+            assert e.rank(policy, now=1e9, age_boost=0.0, age_delay=0.0,
+                          deadline_slack=0.0) == legacy
+
+
+def test_hinge_is_pure_srpt_inside_grace_window():
+    e = mk(0, arrival=0.0, pred=12.0)
+    base = e.rank("trail")
+    # anywhere inside the window, aging contributes exactly nothing
+    for now in (0.0, 3.0, 5.0):
+        assert e.rank("trail", now=now, age_boost=100.0,
+                      age_delay=5.0) == base
+
+
+def test_hinge_is_linear_past_grace_window():
+    e = mk(0, arrival=2.0, pred=12.0)
+    # waited 10s, window 4s -> 6s of boosted excess
+    assert e.rank("trail", now=12.0, age_boost=3.0,
+                  age_delay=4.0) == 12.0 - 3.0 * 6.0
+
+
+def test_aging_applies_to_aged_policies_only():
+    e = mk(0, arrival=1.0, r0=9.0, age=2, pred=7.0)
+    for policy in POLICIES:
+        base = e.rank(policy)
+        aged = e.rank(policy, now=1e4, age_boost=50.0)
+        if policy in AGED_POLICIES:
+            assert aged < base
+        else:                        # fcfs / sjf / mlfq: fixed baselines
+            assert aged == base
+
+
+def test_hinge_catch_up_algebra():
+    """The hinge is what lets a starver catch up: while the fresh entry
+    sits inside its grace window (not yet aging) the old entry's rank
+    falls past it after exactly gap/boost seconds of boosted excess.
+    (Past both windows relative order is fixed — both fall at the same
+    rate — which is why a delay-free uniform boost can never reorder.)"""
+    boost, gap, delay = 4.0, 100.0, 30.0
+    short = mk(1, arrival=50.0, pred=10.0)          # fresh, great rank
+    long = mk(0, arrival=0.0, pred=10.0 + gap)      # old, terrible rank
+    # long ages from t=30; crossing at 30 + gap/boost = 55, while short
+    # is still inside its own window (50..80)
+    kw = dict(age_boost=boost, age_delay=delay)
+    assert long.rank("trail", now=54.0, **kw) \
+        > short.rank("trail", now=54.0, **kw)
+    assert long.rank("trail", now=56.0, **kw) \
+        < short.rank("trail", now=56.0, **kw)
+    # both past their windows: the 2s gap in rank is frozen forever
+    d1 = long.rank("trail", now=100.0, **kw) \
+        - short.rank("trail", now=100.0, **kw)
+    d2 = long.rank("trail", now=1000.0, **kw) \
+        - short.rank("trail", now=1000.0, **kw)
+    assert d1 == pytest.approx(d2)
+
+
+def test_c_limit_pin_survives_aging():
+    e = mk(0, r0=10.0, age=9, state=ReqState.RUNNING, c=0.8, pred=1.0)
+    assert e.rank("trail", now=1e6, age_boost=1e6) == NEG_INF
+
+
+# ---------------------------------------------------------------------------
+# rank algebra: deadline-slack non-preemption
+# ---------------------------------------------------------------------------
+
+def test_deadline_slack_pins_in_slack_running_entries():
+    for policy in ("trail", "srpt", "trail-bert", "rank", "mlfq"):
+        e = mk(0, state=ReqState.RUNNING, pred=50.0, deadline_at=10.0)
+        assert e.rank(policy, now=8.0, deadline_slack=3.0) == NEG_INF
+        # outside the slack window: the normal finite rank
+        assert e.rank(policy, now=2.0, deadline_slack=3.0) != NEG_INF
+
+
+def test_deadline_slack_ignores_non_running_and_no_deadline():
+    w = mk(0, state=ReqState.WAITING, pred=50.0, deadline_at=10.0)
+    assert w.rank("trail", now=9.0, deadline_slack=3.0) != NEG_INF
+    r = mk(1, state=ReqState.RUNNING, pred=50.0, deadline_at=0.0)
+    assert r.rank("trail", now=9.0, deadline_slack=3.0) != NEG_INF
+    # slack off: a RUNNING entry right at its deadline is still movable
+    d = mk(2, state=ReqState.RUNNING, pred=50.0, deadline_at=9.0)
+    assert d.rank("srpt", now=9.0, deadline_slack=0.0) != NEG_INF
+
+
+def test_deadline_slack_does_not_touch_nonpreemptive_policies():
+    e = mk(0, arrival=4.0, r0=6.0, state=ReqState.RUNNING, deadline_at=10.0)
+    assert e.rank("fcfs", now=9.0, deadline_slack=5.0) == 4.0
+    assert e.rank("sjf", now=9.0, deadline_slack=5.0) == 6.0
+
+
+# ---------------------------------------------------------------------------
+# select_batch: starvation freedom + slack protection
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", AGED_POLICIES)
+def test_starved_entry_wins_the_only_slot(policy):
+    """A WAITING entry whose extra wait exceeds (its base-rank deficit /
+    boost) + the grace window beats every fresh short competitor."""
+    boost, delay = 2.0, 5.0
+    entries = {0: mk(0, arrival=0.0, pred=500.0, r0=500.0)}  # the starver
+    for rid in range(1, 5):
+        entries[rid] = mk(rid, arrival=290.0 + rid, pred=1.0, r0=1.0)
+    now = 300.0   # waited 300s >> 5 + (500-1)/2
+    d = select_batch(entries, policy=policy, max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn, now=now,
+                     age_boost=boost, age_delay=delay)
+    assert d.scheduled == [0]
+    # and with aging off the same starver keeps losing
+    d0 = select_batch(entries, policy=policy, max_batch=1,
+                      mem_budget=1 << 60, bytes_fn=bytes_fn, now=now)
+    assert 0 not in d0.scheduled
+
+
+def test_in_slack_running_entry_never_preempted():
+    entries = {
+        0: mk(0, arrival=0.0, pred=400.0, state=ReqState.RUNNING,
+              deadline_at=21.0),                    # 1s of slack left
+        1: mk(1, arrival=1.0, pred=2.0),            # much better rank
+    }
+    d = select_batch(entries, policy="srpt", max_batch=1,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn, now=20.0,
+                     deadline_slack=3.0)
+    assert 0 in d.scheduled and d.preempted == []
+    # slack off: the short job takes the slot
+    d0 = select_batch(entries, policy="srpt", max_batch=1,
+                      mem_budget=1 << 60, bytes_fn=bytes_fn, now=20.0)
+    assert d0.preempted == [0]
+
+
+@given(st.integers(2, 12).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.tuples(st.floats(0.0, 50.0),       # arrival
+                           st.floats(0.5, 200.0),      # pred
+                           st.sampled_from([ReqState.WAITING,
+                                            ReqState.RUNNING,
+                                            ReqState.PREEMPTED]),
+                           st.floats(0.0, 120.0)),     # deadline_at
+                 min_size=n, max_size=n),
+        st.integers(1, 4),                             # max_batch
+        st.floats(50.0, 100.0),                        # now
+        st.floats(0.5, 20.0))),                        # slack
+    st.sampled_from([p for p in POLICIES if p not in ("fcfs", "sjf")]))
+@settings(max_examples=150, deadline=None)
+def test_slack_property_no_in_slack_preemption(tup, policy):
+    rows, max_batch, now, slack = tup
+    entries = {}
+    for rid, (arr, pred, state, dl) in enumerate(rows):
+        entries[rid] = mk(rid, arrival=arr, pred=pred, r0=pred,
+                          state=state, deadline_at=dl)
+    d = select_batch(entries, policy=policy, max_batch=max_batch,
+                     mem_budget=1 << 60, bytes_fn=bytes_fn, now=now,
+                     deadline_slack=slack)
+    for rid in d.preempted:
+        e = entries[rid]
+        assert not (e.deadline_at > 0.0
+                    and e.deadline_at - now <= slack), \
+            f"in-slack rid {rid} was preempted"
+
+
+@given(st.integers(1, 10).flatmap(
+    lambda n: st.lists(st.tuples(st.floats(0.0, 40.0),
+                                 st.floats(0.5, 100.0),
+                                 st.sampled_from([ReqState.WAITING,
+                                                  ReqState.RUNNING,
+                                                  ReqState.PREEMPTED])),
+                       min_size=n, max_size=n)),
+    st.floats(40.0, 1e6),
+    st.sampled_from(list(POLICIES)))
+@settings(max_examples=150, deadline=None)
+def test_zero_boost_property_decisions_identical(rows, now, policy):
+    """age_boost=0 at any clock value reproduces the legacy decision."""
+    entries = {rid: mk(rid, arrival=a, pred=p, r0=p, state=s)
+               for rid, (a, p, s) in enumerate(rows)}
+    legacy = select_batch(copy.deepcopy(entries), policy=policy,
+                          max_batch=2, mem_budget=1 << 60,
+                          bytes_fn=bytes_fn)
+    gated = select_batch(copy.deepcopy(entries), policy=policy,
+                         max_batch=2, mem_budget=1 << 60,
+                         bytes_fn=bytes_fn, now=now, age_boost=0.0,
+                         age_delay=123.0, deadline_slack=0.0)
+    assert (legacy.scheduled, legacy.preempted, legacy.admitted) \
+        == (gated.scheduled, gated.preempted, gated.admitted)
+
+
+# ---------------------------------------------------------------------------
+# engine: bounded waiting, slack windows on the event log, aged backlog
+# ---------------------------------------------------------------------------
+
+def test_engine_aging_bounds_waiting_under_overload():
+    """At overload, rank aging finishes every request with a strictly
+    smaller worst-case first-token wait than pure TRAIL."""
+    reqs = workload(n=60, rate=60.0, scenario="bursty")
+    waits = {}
+    for boost in (0.0, 256.0):
+        log = EventLog()
+        run_policy(CFG, "trail", reqs, hardware=HW, seed=0,
+                   age_boost=boost, age_delay_s=5.0, event_log=log)
+        rep = rollup(log)
+        assert rep["requests"]["finished"] == 60
+        waits[boost] = rep["counters"]["max_wait_s"]
+    assert waits[256.0] < waits[0.0]
+
+
+def test_engine_honors_deadline_slack_on_event_log():
+    """With the slack knob on, no preempt event may land inside the
+    victim's slack window (deadline_at - t <= slack)."""
+    slack = 20.0
+    log = EventLog()
+    run_policy(CFG, "trail", workload(n=50, rate=50.0), hardware=HW,
+               seed=0, deadline_s=60.0, deadline_slack_s=slack,
+               event_log=log)
+    arrivals = {}
+    n_preempt = 0
+    for e in log.events:
+        if e.kind == "arrival":
+            arrivals.setdefault(e.rid, e.t)
+        elif e.kind == "preempt":
+            n_preempt += 1
+            deadline_at = arrivals[e.rid] + 60.0
+            assert deadline_at - e.t > slack
+    assert n_preempt > 0     # the scenario actually exercises preemption
+
+
+def test_backlog_cap_ages_with_the_hinge():
+    eng = Engine(CFG, EngineConfig(policy="trail", hardware=HW, seed=0,
+                                   age_boost=10.0, age_delay_s=5.0))
+    for r in copy.deepcopy(workload(n=4, rate=100.0)):
+        eng.submit(r)
+    eng.step()
+    base_now = eng._now
+    capped0 = eng.backlog(truncate=1.0, include_pending=False)
+    # inside the grace window the cap (and thus the backlog) is frozen
+    eng._now = base_now + 4.0
+    assert eng.backlog(truncate=1.0, include_pending=False) == capped0
+    # past it the per-job cap rises, so the truncated backlog can only grow
+    eng._now = base_now + 500.0
+    aged = eng.backlog(truncate=1.0, include_pending=False)
+    assert aged >= capped0
+    # and with a cap this old the hinge has unclipped every job: the
+    # truncated backlog equals the untruncated one
+    assert aged == pytest.approx(
+        eng.backlog(truncate=None, include_pending=False))
+
+
+def test_run_policy_tail_knobs_off_are_byte_identical():
+    reqs = workload(n=40, rate=4.0)
+    base = run_policy(CFG, "trail", reqs, hardware=HW, seed=0)
+    gated = run_policy(CFG, "trail", reqs, hardware=HW, seed=0,
+                       age_boost=0.0, age_delay_s=0.0,
+                       deadline_slack_s=0.0)
+    assert json.dumps(base.summary(), sort_keys=True) \
+        == json.dumps(gated.summary(), sort_keys=True)
+    assert base.latencies == gated.latencies
+    assert base.n_preemptions == gated.n_preemptions
+
+
+# ---------------------------------------------------------------------------
+# benchmark identity: off-is-free + BENCH_tail determinism pin
+# ---------------------------------------------------------------------------
+
+def _bench_cell(policy, scale, **knobs):
+    import sys
+    sys.path.insert(0, ROOT)
+    from benchmarks.tail_curves import _run_cell
+    from benchmarks.trace_replay import _cell_summary, _make_cfg
+    from repro.traces import load_trace
+    report, _ = _run_cell(_make_cfg(), load_trace("sample"), policy, scale,
+                          **knobs)
+    return _cell_summary(report)
+
+
+@pytest.mark.slow
+def test_headline_cell_off_is_free_vs_committed_artifact():
+    """BENCH_trace_replay's headline cell replayed with the tail knobs
+    explicitly at their defaults: byte-identical to the committed grid."""
+    with open(os.path.join(ROOT, "BENCH_trace_replay.json")) as f:
+        committed = json.load(f)["grid"]["scale=24.0.trail"]
+    cell = _bench_cell("trail", 24.0, age_boost=0.0, age_delay_s=0.0,
+                       deadline_slack_s=0.0)
+    assert json.dumps(cell, sort_keys=True) \
+        == json.dumps(committed, sort_keys=True)
+
+
+@pytest.mark.slow
+def test_bench_tail_headline_cell_reproduces_committed_artifact():
+    """Determinism pin on BENCH_tail.json: rerunning the tail recipe
+    cell reproduces the committed completion summary exactly."""
+    with open(os.path.join(ROOT, "BENCH_tail.json")) as f:
+        payload = json.load(f)
+    committed = payload["grid"]["scale=24.0.trail.tail"]
+    cell = _bench_cell("trail", 24.0, **payload["config"]["tail_recipe"])
+    assert json.dumps(cell["completion"], sort_keys=True) \
+        == json.dumps(committed["completion"], sort_keys=True)
+    assert payload["headline"]["gates_ok"] is True
+    assert payload["headline"]["p99_uninverted"] is True
