@@ -41,6 +41,18 @@ Dispatch policies (``RouterConfig.policy``):
                     with prefix caching disabled the policy degrades to
                     exactly ``jspw``.
 
+Prefill/decode disaggregation (``RouterConfig.prefill_replicas`` = P > 0):
+replicas ``[0, P)`` run ``prefill_only`` engines and the rest decode.
+Arrivals (and failover retries) dispatch into the prefill pool under the
+configured policy; each completed prefill is exported as a `KVHandoff`
+(paged KV pages, one batched host-bounce per request) and shipped to the
+decode replica with the least predicted work *including in-flight
+handoffs* (transfer-aware JSPW). The transfer charges
+`CostModel.kv_transfer_time` as delayed availability on the router's
+virtual clock — decode megasteps keep running underneath, so shipping
+overlaps compute instead of stalling the batch. With P = 0 (default) the
+loop is byte-identical to the colocated router.
+
 Resilience (optional, via a `repro.cluster.faults.FaultSchedule`): the
 router health-checks the fleet at every loop boundary — crashed replicas
 are drained (their paged KV fully reclaimed) and their unfinished
@@ -93,6 +105,12 @@ class RouterConfig:
             failover redispatches (the k-th retry waits
             ``min(retry_backoff_s * 2**(k-1), retry_backoff_cap_s)``).
         retry_backoff_cap_s: the backoff cap.
+        prefill_replicas: disaggregated topology — the first P replicas
+            are a prefill pool (``EngineConfig.prefill_only``) and the
+            remaining ``n_replicas - P`` a decode pool; completed
+            prefills ship their paged KV prefill→decode as `KVHandoff`
+            batches. 0 (the default) keeps every replica colocated,
+            byte-identical to the pre-disaggregation router.
     """
 
     n_replicas: int = 2
@@ -102,6 +120,7 @@ class RouterConfig:
     max_retries: int = 2
     retry_backoff_s: float = 0.5
     retry_backoff_cap_s: float = 8.0
+    prefill_replicas: int = 0
 
 
 @dataclass
@@ -123,6 +142,11 @@ class ClusterStats:
         n_retries: failover redispatches performed across the run.
         n_lost: requests dropped after exhausting the retry budget.
         n_crashes: replica crash events applied.
+        n_handoffs: prefill→decode KV handoffs delivered (disagg mode).
+        handoff_pages: KV pages shipped across all handoffs.
+        leaked_pages: per-replica ``BlockManager.used_pages()`` at drain
+            — all zeros on a clean run (the zero-leak invariant the
+            disagg benchmark gates on; contig replicas report 0).
     """
 
     latencies: list = field(default_factory=list)
@@ -135,6 +159,9 @@ class ClusterStats:
     n_retries: int = 0
     n_lost: int = 0
     n_crashes: int = 0
+    n_handoffs: int = 0
+    handoff_pages: int = 0
+    leaked_pages: list = field(default_factory=list)
 
     def summary(self) -> dict:
         """Aggregate cluster metrics into the benchmark-facing dict."""
@@ -170,6 +197,9 @@ class ClusterStats:
                             for s in self.replica_summaries),
             "shed": sum(s.get("shed", 0)
                         for s in self.replica_summaries),
+            "handoffs": self.n_handoffs,
+            "handoff_pages": self.handoff_pages,
+            "leaked_pages": sum(self.leaked_pages),
             # served-to-completion fraction of the arrival stream —
             # crashes, sheds, timeouts, and lost requests all count
             # against it
@@ -217,6 +247,17 @@ class Router:
         if len(replicas) != rc.n_replicas:
             raise ValueError(f"{len(replicas)} replicas != "
                              f"n_replicas={rc.n_replicas}")
+        if rc.prefill_replicas:
+            if not 0 < rc.prefill_replicas < rc.n_replicas:
+                raise ValueError(
+                    f"prefill_replicas={rc.prefill_replicas} must leave "
+                    f"at least one decode replica (n={rc.n_replicas})")
+            for i, eng in enumerate(replicas):
+                if bool(eng.ecfg.prefill_only) != (i < rc.prefill_replicas):
+                    raise ValueError(
+                        f"disagg topology: replicas[:{rc.prefill_replicas}]"
+                        f" must be prefill_only and the rest decode "
+                        f"(replica {i} mismatched)")
         for c in (faults.crashes if faults is not None else ()):
             if not 0 <= c.replica < rc.n_replicas:
                 raise ValueError(f"fault schedule names replica "
@@ -237,9 +278,15 @@ class Router:
         self._crashed = [False] * rc.n_replicas   # crash already applied
         self._retryq: list[tuple[float, int, Request]] = []
         self._retry_seq = 0
+        # in-flight KV handoffs: (t_ready, seq, dst, pred_tokens, handoff)
+        self._handoffq: list[tuple] = []
+        self._handoff_seq = 0
+        self._inflight: dict[int, float] = {}   # dst -> queued pred tokens
         self.n_retries = 0
         self.n_lost = 0
         self.n_crashes = 0
+        self.n_handoffs = 0
+        self.handoff_pages = 0
         self.dispatch_counts = [0] * rc.n_replicas
         self.dispatch_log: list[tuple[int, int]] = []   # (rid, replica)
 
@@ -251,8 +298,11 @@ class Router:
         """Replica indices eligible for dispatch at time ``t``: alive,
         not excluded, and (fault mode) not inside a straggler window —
         unless every alive replica is degraded, in which case slow
-        beats nowhere."""
-        alive = [i for i in range(len(self.replicas))
+        beats nowhere. In a disaggregated topology arrivals (and
+        retries) only ever dispatch into the prefill pool."""
+        pool = (range(self.rc.prefill_replicas)
+                if self.rc.prefill_replicas else range(len(self.replicas)))
+        alive = [i for i in pool
                  if self._alive[i] and i not in exclude]
         if self.faults is None:
             return alive
@@ -318,6 +368,75 @@ class Router:
                 if self.rc.backlog_unit == "seconds"
                 else eng.backlog(truncate=r_hat))
         return (work, -eng.kv_headroom(), eng.queue_len(), i)
+
+    # -- disaggregation: prefill→decode KV handoffs -----------------------
+    def _decode_key(self, i: int, r_hat: float | None) -> tuple:
+        """Transfer-aware jspw for the decode pool: `_jspw_key` plus the
+        predicted tokens of handoffs already queued toward replica ``i``
+        but not yet imported — without them, every handoff in one drain
+        pass would pile onto the same momentarily-idle replica."""
+        eng = self.replicas[i]
+        inflight = self._inflight.get(i, 0.0)
+        if self.rc.backlog_unit == "seconds":
+            work = (eng.backlog_seconds(truncate=r_hat)
+                    + inflight / eng.cost.decode_token_rate())
+        else:
+            work = eng.backlog(truncate=r_hat) + inflight
+        return (work, -eng.kv_headroom(), eng.queue_len(), i)
+
+    def _pick_decode(self, handoff, t: float) -> int:
+        """Choose the decode replica for one handoff (alive, preferring
+        non-degraded); -1 when the decode pool is entirely down."""
+        cands = [i for i in range(self.rc.prefill_replicas,
+                                  len(self.replicas)) if self._alive[i]]
+        if self.faults is not None:
+            healthy = [i for i in cands
+                       if not self.faults.degraded(i, t)]
+            cands = healthy or cands
+        if not cands:
+            return -1
+        return min(cands, key=lambda i: self._decode_key(
+            i, handoff.pred_tokens))
+
+    def _drain_handoffs(self):
+        """Export every parked prefill-complete request and enqueue its
+        KV transfer toward a decode replica. Runs at every loop boundary
+        (before the busy scan), so a prefill replica holding only parked
+        work is drained rather than stalling the virtual-time frontier.
+        """
+        for i in range(self.rc.prefill_replicas):
+            eng = self.replicas[i]
+            if not self._alive[i]:
+                continue
+            for rid in eng.handoff_ready():
+                h = eng.export_request(rid)
+                j = self._pick_decode(h, eng.now)
+                if j < 0:
+                    # decode pool entirely down: failover (progress lost,
+                    # re-dispatches into the prefill pool after backoff)
+                    self._requeue(h.req, eng.now)
+                    continue
+                t_ready = eng.now + eng.cost.kv_transfer_time(h.nbytes)
+                work = h.pred_tokens or 0.0
+                self._inflight[j] = self._inflight.get(j, 0.0) + work
+                heapq.heappush(self._handoffq,
+                               (t_ready, self._handoff_seq, j, work, h))
+                self._handoff_seq += 1
+                self.n_handoffs += 1
+                self.handoff_pages += h.n_pages
+
+    def _deliver_handoff(self):
+        """Pop the due handoff and import it on its destination; a
+        destination that crashed while the transfer was in flight sends
+        the request through the normal failover path instead."""
+        t_r, _, j, work, h = heapq.heappop(self._handoffq)
+        self._inflight[j] = self._inflight.get(j, 0.0) - work
+        if self._alive[j]:
+            self.replicas[j].import_request(h, t=t_r)
+            self.dispatch_counts[j] += 1
+            self.dispatch_log.append((h.req.rid, j))
+        else:
+            self._requeue(h.req, t_r)
 
     def dispatch(self, req: Request, t: float | None = None) -> int:
         """Route one arrival to a replica and submit it there.
@@ -467,13 +586,22 @@ class Router:
         pending = sorted(requests, key=lambda r: r.arrival)
         q = 0
         while True:
+            if self.rc.prefill_replicas:
+                # export parked prefills first: a prefill replica whose
+                # every request is parked would otherwise pin the
+                # frontier forever (it has work but its clock is idle)
+                self._drain_handoffs()
             busy = [e for i, e in enumerate(self.replicas)
                     if self._alive[i] and e.has_work()]
-            # next arrival: original stream vs. failover retry queue
+            # next event: original arrival vs. failover retry vs. due
+            # KV handoff (delivered with priority on ties — the import
+            # must land before a same-instant routing decision observes
+            # the destination)
             t_arr = pending[q].arrival if q < len(pending) else None
             t_rty = self._retryq[0][0] if self._retryq else None
-            t_next = (t_arr if t_rty is None
-                      else t_rty if t_arr is None else min(t_arr, t_rty))
+            t_hnd = self._handoffq[0][0] if self._handoffq else None
+            t_next = min((t for t in (t_arr, t_rty, t_hnd)
+                          if t is not None), default=None)
             if t_next is not None:
                 frontier = min((e.now for e in busy), default=t_next)
                 if t_next <= frontier:
@@ -481,6 +609,9 @@ class Router:
                     # fault due by now (idle replicas included) before
                     # the routing decision observes the fleet
                     self._apply_faults(t_next)
+                    if t_hnd is not None and t_hnd <= t_next:
+                        self._deliver_handoff()
+                        continue
                     if t_rty is not None and (t_arr is None
                                               or t_rty <= t_arr):
                         _, _, req = heapq.heappop(self._retryq)
@@ -504,7 +635,13 @@ class Router:
                              n_requests=len(requests),
                              n_retries=self.n_retries,
                              n_lost=self.n_lost,
-                             n_crashes=self.n_crashes)
+                             n_crashes=self.n_crashes,
+                             n_handoffs=self.n_handoffs,
+                             handoff_pages=self.handoff_pages,
+                             leaked_pages=[
+                                 eng.blocks.used_pages()
+                                 if eng.blocks is not None else 0
+                                 for eng in self.replicas])
         for eng in self.replicas:
             stats.latencies.extend(eng.stats.latencies)
             stats.ttfts.extend(eng.stats.ttfts)
@@ -539,6 +676,7 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
                 backlog_unit: str = "tokens",
                 faults: FaultSchedule | None = None,
                 max_retries: int = 2,
+                prefill_replicas: int = 0,
                 **engine_kwargs) -> ClusterStats:
     """Serve ``requests`` on an N-replica cluster (the `run_policy` twin).
 
@@ -566,6 +704,11 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
             pre-resilience fault-free path.
         max_retries: per-request failover retry budget (see
             `RouterConfig`).
+        prefill_replicas: first ``P`` replicas become a dedicated
+            prefill pool (``prefill_only=True`` engines); the rest
+            decode. 0 (the default) is the byte-identical colocated
+            path. Requires a paged KV layout so finished prefills can
+            ship their pages.
         **engine_kwargs: forwarded to `EngineConfig` (policy, c_limit,
             max_batch, mem_budget, kv_layout, predictor, ...). A
             ``predictor`` strategy spec selects every replica's
@@ -583,7 +726,10 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
         from repro.metrics.events import EventLog
     replicas = []
     for i in range(n_replicas):
-        ecfg = EngineConfig(seed=seed + i, **engine_kwargs)
+        kw = dict(engine_kwargs)
+        if prefill_replicas and i < prefill_replicas:
+            kw["prefill_only"] = True
+        ecfg = EngineConfig(seed=seed + i, **kw)
         pred = predictor_factory(i) if predictor_factory else None
         replicas.append(Engine(cfg, ecfg, predictor=pred,
                                event_log=EventLog() if record_events
@@ -604,7 +750,8 @@ def run_cluster(cfg, requests, *, router_policy: str = "round-robin",
     router = Router(replicas, RouterConfig(n_replicas=n_replicas,
                                            policy=router_policy, seed=seed,
                                            backlog_unit=backlog_unit,
-                                           max_retries=max_retries),
+                                           max_retries=max_retries,
+                                           prefill_replicas=prefill_replicas),
                     size_predictor=size_predictor, faults=faults,
                     event_log=EventLog() if record_events else None)
     return router.run(copy.deepcopy(requests))

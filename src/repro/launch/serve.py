@@ -32,6 +32,11 @@ workload.
     PYTHONPATH=src python -m repro.launch.serve --replicas 2 --router jspw \
         --scenario bursty --chaos crash:1@30-90 --compute-bound
 
+    # prefill/decode disaggregation: 1 prefill + 3 decode replicas with
+    # paged KV-page shipping over a 25 GB/s interconnect
+    PYTHONPATH=src python -m repro.launch.serve --disagg 1:3 \
+        --scenario bursty --rate 8 --compute-bound --link-gbps 25
+
     # tail-aware scheduling: the BENCH_tail recipe (rank aging + early
     # C-limit pin + paged KV) that un-inverts completion-p99 vs FCFS
     PYTHONPATH=src python -m repro.launch.serve --trace sample \
@@ -46,6 +51,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+from dataclasses import replace as dc_replace
 
 from repro.cluster import ROUTER_POLICIES, run_cluster
 from repro.cluster.faults import parse_chaos
@@ -105,6 +111,16 @@ def main():
                     help="cluster mode: number of replica engines (sim)")
     ap.add_argument("--router", default="jspw", choices=ROUTER_POLICIES,
                     help="cluster dispatch policy")
+    ap.add_argument("--disagg", default=None, metavar="P:D",
+                    help="prefill/decode disaggregation: P dedicated "
+                         "prefill replicas + D decode replicas (implies "
+                         "cluster mode with P+D replicas and --kv-layout "
+                         "paged; finished prefills ship their KV pages "
+                         "to a decode replica over the interconnect)")
+    ap.add_argument("--link-gbps", type=float, default=None, metavar="GBPS",
+                    help="replica<->replica interconnect bandwidth in "
+                         "gigabytes/s for the KV handoff hop (default 25, "
+                         "~200 Gb/s Ethernet); requires --disagg")
     ap.add_argument("--compute-bound", action="store_true",
                     help="compute-bound hardware point (2 TFLOP/s) where "
                          "routing quality is visible; default is tpu-v5e")
@@ -210,6 +226,32 @@ def main():
         else (20.5 if args.tail else 0.0)
     deadline_slack = args.deadline_slack or 0.0
     c_limit = args.c if args.c is not None else (0.2 if args.tail else 0.8)
+    prefill_replicas = 0
+    if args.disagg:
+        try:
+            p_str, d_str = args.disagg.split(":")
+            p, d = int(p_str), int(d_str)
+        except ValueError:
+            ap.error("--disagg must be P:D with integer replica counts "
+                     "(e.g. --disagg 1:3)")
+        if p < 1 or d < 1:
+            ap.error("--disagg needs at least one prefill and one decode "
+                     "replica (P >= 1 and D >= 1)")
+        if args.replicas > 1 and args.replicas != p + d:
+            ap.error(f"--replicas {args.replicas} conflicts with "
+                     f"--disagg {args.disagg} (= {p + d} replicas); "
+                     "drop --replicas — --disagg sets the fleet size")
+        if args.kv_layout == "contig":
+            ap.error("--disagg requires a paged KV layout (pages are the "
+                     "unit of handoff); drop --kv-layout contig")
+        prefill_replicas = p
+        args.replicas = p + d
+    if args.link_gbps is not None:
+        if not args.disagg:
+            ap.error("--link-gbps only applies to --disagg (it sets the "
+                     "KV handoff interconnect bandwidth)")
+        if args.link_gbps <= 0:
+            ap.error("--link-gbps must be positive")
     faults = None
     if args.chaos:
         if args.replicas <= 1:
@@ -257,9 +299,11 @@ def main():
     hardware = (HardwareSpec(name="compute-bound-2tf", peak_flops=2e12,
                              hbm_bw=819e9, overhead_s=2e-4)
                 if args.compute_bound else HardwareSpec())
+    if args.link_gbps is not None:
+        hardware = dc_replace(hardware, link_bw=args.link_gbps * 1e9)
     mem_budget = int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62
     kv_layout = args.kv_layout or ("paged" if args.prefix_cache or args.tail
-                                   else "contig")
+                                   or args.disagg else "contig")
 
     # strategy resolution: explicit flag > scenario recommendation >
     # legacy default ("" = the engine's built-in trail probe)
@@ -289,6 +333,7 @@ def main():
             mem_budget=mem_budget, hardware=hardware, seed=args.seed,
             kv_layout=kv_layout, prefix_cache=args.prefix_cache,
             predictor=pred_spec,
+            prefill_replicas=prefill_replicas,
             faults=faults, max_retries=args.max_retries,
             deadline_s=args.deadline, ttft_deadline_s=args.ttft_deadline,
             shed_watermark=args.shed_watermark,
@@ -299,6 +344,7 @@ def main():
         print(json.dumps({"arch": cfg.name, "policy": policy,
                           "predictor": pred_spec or "trail-probe",
                           "router": args.router, "replicas": args.replicas,
+                          **({"disagg": args.disagg} if args.disagg else {}),
                           "scenario": (f"trace:{args.trace}" if args.trace
                                        else args.scenario or "poisson"),
                           "rate": rate, **stats.summary()}, indent=1))

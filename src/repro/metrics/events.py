@@ -37,6 +37,15 @@ Resilience kinds (PR 7 — the failure/overload layer):
   ``arrival`` event follows on the new replica.
 * ``replica_down`` / ``replica_up`` — a replica crashed / recovered
   (``rid`` = -1, ``value`` = replica index; emitted by the router).
+
+Disaggregation kinds (PR 9 — prefill/decode split):
+
+* ``handoff``     — the request's paged KV was exported from this
+  replica for migration to another (``value`` = pages shipped; 0 means
+  the destination re-prefills). Emitted on the source; the request's
+  later events continue on the destination replica — the merged-log
+  per-request ordering still holds because import time is never earlier
+  than export time.
 """
 
 from __future__ import annotations
@@ -47,7 +56,7 @@ from dataclasses import dataclass
 EVENT_KINDS = ("arrival", "admit", "first_token", "tokens", "finish",
                "preempt", "swap", "prefix_hit",
                "cancel", "timeout", "shed", "retry",
-               "replica_down", "replica_up")
+               "replica_down", "replica_up", "handoff")
 
 #: The cancellation-reason kinds a terminal cancel event may carry.
 CANCEL_KINDS = ("cancel", "timeout", "shed")

@@ -91,6 +91,8 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
     n_cancelled = n_timeouts = n_shed = n_retries = 0
     replica_downs = 0
     preemptions = 0
+    handoffs = 0
+    handoff_pages = 0.0
     swap_bytes = 0.0
     prefix_hit_tokens = 0.0
     total_tokens = 0.0
@@ -131,6 +133,9 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
                 n_retries += 1
             elif e.kind == "replica_down":
                 replica_downs += 1
+            elif e.kind == "handoff":
+                handoffs += 1
+                handoff_pages += e.value
         if evs:
             t_end = max(t_end, max(e.t for e in evs))
         tenant = tenants.get(rid) if tenants else None
@@ -210,7 +215,9 @@ def rollup(log: EventLog, *, service_times: dict[int, float] | None = None,
                      "timeouts": n_timeouts,
                      "shed": n_shed,
                      "retries": n_retries,
-                     "replica_downs": replica_downs},
+                     "replica_downs": replica_downs,
+                     "handoffs": handoffs,
+                     "handoff_pages": handoff_pages},
     }
     if len(slowdown):
         report["slowdown"] = slowdown.summary(percentiles)

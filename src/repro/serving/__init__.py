@@ -1,2 +1,5 @@
-"""TRAIL serving runtime: iteration-level continuous batching with
-embedding-based length prediction and SPRPT-limited-preemption scheduling."""
+"""TRAIL serving runtime: iteration-level continuous batching.
+
+Embedding-based length prediction feeding SPRPT-limited-preemption
+scheduling.
+"""

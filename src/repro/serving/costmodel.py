@@ -37,6 +37,9 @@ class HardwareSpec:
             with batch tokens (see benchmarks/cluster_curves.py).
         hbm_bw: HBM bytes/s; the memory-roofline term (params + KV).
         dma_bw: device<->host bytes/s (the KV swap path).
+        link_bw: replica<->replica interconnect bytes/s (the KV handoff
+            hop of prefill/decode disaggregation; ~200 Gb/s Ethernet by
+            default).
         overhead_s: fixed per-iteration dispatch overhead in seconds.
     """
 
@@ -44,6 +47,7 @@ class HardwareSpec:
     peak_flops: float = 197e12        # bf16
     hbm_bw: float = 819e9             # bytes/s
     dma_bw: float = 32e9              # device<->host (KV swap path)
+    link_bw: float = 25e9             # replica<->replica (KV handoff hop)
     overhead_s: float = 2.0e-4        # per-iteration dispatch overhead
 
 
@@ -69,11 +73,13 @@ class CostModel:
         return bytes_for_context(self.cfg, ctx)
 
     def resident_page_bytes(self, n_unique_pages: int) -> int:
-        """Page-accurate resident KV footprint for ``n_unique_pages``
-        distinct physical pages. With cross-request prefix caching the
+        """Page-accurate resident KV footprint for unique physical pages.
+
+        With cross-request prefix caching the
         per-request sum over ``bytes_for`` double-counts shared pages;
         the engine's memory accounting switches to this unique-page form
-        (refcounted pages counted once) whenever sharing is enabled."""
+        (refcounted pages counted once) whenever sharing is enabled.
+        """
         if not self.page_size:
             raise ValueError("resident_page_bytes requires a paged layout")
         return n_unique_pages * page_bytes(self.cfg, self.page_size)
@@ -101,10 +107,10 @@ class CostModel:
     def megastep_time(self, decode_ctxs: list[int], emitted: list[int],
                       prefill_tokens: int = 0,
                       prefill_ctx: int = 0) -> float:
-        """One decode megastep: row i starts at context ``decode_ctxs[i]``
-        and generates ``emitted[i]`` tokens without returning to the host.
+        """One decode megastep's wall-clock time under the roofline.
 
-        Per-token compute and cache streaming are unchanged (each of the k
+        Row i starts at context ``decode_ctxs[i]`` and generates
+        ``emitted[i]`` tokens without returning to the host. Per-token compute and cache streaming are unchanged (each of the k
         scanned steps still reads the weights and the growing KV), but the
         fixed dispatch/host overhead is paid ONCE per megastep instead of
         once per token — the amortization the engine's megastep loop buys.
@@ -138,6 +144,24 @@ class CostModel:
         legacy results stay byte-identical.
         """
         return flops / self.hw.peak_flops
+
+    def kv_transfer_time(self, nbytes: int) -> float:
+        """Seconds to ship ``nbytes`` of paged KV replica-to-replica.
+
+        Host-bounce path, mirroring the swap machinery: one batched
+        device->host DMA on the source, the interconnect hop, one batched
+        host->device DMA on the destination, plus a single dispatch
+        overhead for the whole batch (transfer batching: a handoff is one
+        charge, never per-page). The router charges this as *delayed
+        availability* of the migrated request on the destination's
+        virtual clock — decode megasteps keep running underneath, so the
+        transfer overlaps compute instead of stalling the batch the way
+        an in-step swap charge would.
+        """
+        if nbytes <= 0:
+            return 0.0
+        return (2.0 * nbytes / self.hw.dma_bw + nbytes / self.hw.link_bw
+                + self.hw.overhead_s)
 
     def decode_token_rate(self, ctx: int = 256) -> float:
         """Steady-state decode tokens/s of one lone row at context ``ctx``.

@@ -134,6 +134,14 @@ class EngineConfig:
             generalizing the paper's served-token C-limit to wall-clock
             urgency. 0 (the default) = off; no effect on requests
             without a deadline.
+        prefill_only: disaggregated-prefill role. The engine runs
+            chunked prefill only: a request whose prefill completes is
+            *parked* (slot released, KV pages retained — no preemption
+            is booked) instead of decoding, and surfaces in
+            ``handoff_ready()`` for the router to ``export_request()``
+            to a decode replica. Requires ``kv_layout='paged'`` on a
+            page-retention arch (the handoff ships retained pages).
+            Off by default — the engine is byte-identical without it.
     """
 
     policy: str = "trail"           # fcfs | sjf | srpt | trail | trail-bert
@@ -173,6 +181,10 @@ class EngineConfig:
     age_delay_s: float = 0.0        # rank-aging grace window (seconds)
     deadline_slack_s: float = 0.0   # deadline-slack non-preemption window
                                     # in seconds (0 = off)
+    prefill_only: bool = False      # disaggregated-prefill role: park
+                                    # finished prefills for KV handoff
+                                    # instead of decoding (paged +
+                                    # page-retention archs only)
 
 
 @dataclass
@@ -267,6 +279,42 @@ class StepResult:
         return self._backlog
 
 
+@dataclass
+class KVHandoff:
+    """One exported request's migration package (KV-page shipping).
+
+    Produced by `Engine.export_request` on the source replica and
+    consumed by `Engine.import_request` on the destination; the router
+    charges `CostModel.kv_transfer_time(nbytes)` as delayed availability
+    in between. The `Request` object travels whole, so arrival,
+    first_token_time, generated tokens and the live prediction state all
+    survive the migration.
+
+    Attributes:
+        req: the request (entry/arrival/first_token_time intact).
+        kv_tokens: materialized prefix tokens shipped; 0 means the
+            destination re-prefills from scratch.
+        n_pages: KV pages on the wire (the transfer-size unit).
+        nbytes: page bytes on the wire (``n_pages * page_bytes``).
+        payload: real mode only — the host-side page payload gathered by
+            `PagedSlotPool.export_pages` (one batched copy); None in sim
+            mode, where the descriptor is the whole transfer.
+        pred_tokens: predicted remaining decode tokens at export, or
+            None under a rank-only predictor (ordinal score — the
+            router must not read it as work).
+        src_now: source replica clock at export (the transfer starts
+            here).
+    """
+
+    req: Request
+    kv_tokens: int = 0
+    n_pages: int = 0
+    nbytes: int = 0
+    payload: object = None
+    pred_tokens: float | None = None
+    src_now: float = 0.0
+
+
 class Engine:
     """Iteration-level serving engine (one replica).
 
@@ -339,6 +387,10 @@ class Engine:
         self.pool: SlotPool | None = None
         self.blocks: BlockManager | None = None
         self._retain = self.paged and supports_page_retention(cfg)
+        if ecfg.prefill_only and not self._retain:
+            raise ValueError(
+                "prefill_only requires kv_layout='paged' on a "
+                "page-retention arch: the KV handoff ships retained pages")
         self._page_bytes = page_bytes(cfg, ecfg.page_size)
         self._swap_pending_s = 0.0
         if ecfg.oom_mode == "swap" and ecfg.mode == "real":
@@ -401,8 +453,11 @@ class Engine:
         self._reset_stream()
 
     def _reset_stream(self):
-        """(Re)initialize the incremental-loop state: empty request pool,
-        clock at zero, fresh stats. Called by ``__init__`` and ``run()``."""
+        """(Re)initialize the incremental-loop state.
+
+        Empty request pool, clock at zero, fresh stats. Called by
+        ``__init__`` and ``run()``.
+        """
         self.stats = EngineStats()
         self._pending: list[Request] = []       # sorted by arrival
         self._p_idx = 0                         # next pending to admit
@@ -413,6 +468,8 @@ class Engine:
         self._r0_cnt = 0                        # predictions (backlog prior)
         self._prefix_hint: dict[int, int] = {}  # rid -> prospective hit
         self._hint_gen: dict[int, int] = {}     # index_gen the hint saw
+        self._parked: set[int] = set()          # prefill-complete rids
+                                                # awaiting KV handoff
         self._last_mem = 0                      # bytes at last step end
         self._wall0 = time.perf_counter()
         if self.events is not None:
@@ -425,16 +482,20 @@ class Engine:
         return bytes_for_context(self.cfg, context_len)
 
     def _match_tokens(self, req) -> list[int]:
-        """Prompt tokens eligible for prefix matching: everything except
-        the final token, which decode always consumes fresh — so a full
-        hit still leaves the request one decode step of work and shared
-        pages are never written by the sharer."""
+        """Prompt tokens eligible for prefix matching.
+
+        Everything except the final token, which decode always consumes
+        fresh — so a full hit still leaves the request one decode step of
+        work and shared pages are never written by the sharer.
+        """
         return req.prompt[:max(len(req.prompt) - 1, 0)]
 
     def _sync_prefill_left(self, req, hint: int = 0):
-        """Refresh the entry's rank-visible remaining prefill work
-        (prefix-cache mode only): what is still uncached and unprefilled.
-        ``hint`` discounts a WAITING request's prospective cache hit."""
+        """Refresh the entry's rank-visible remaining prefill work.
+
+        Prefix-cache mode only: what is still uncached and unprefilled.
+        ``hint`` discounts a WAITING request's prospective cache hit.
+        """
         req.entry.prefill_left = float(max(
             req.context_len - 1 - req.entry.prefill_done - hint, 0))
 
@@ -556,18 +617,22 @@ class Engine:
         return self.backlog(truncate=truncate) / rate
 
     def cached_prefix_tokens(self, prompt) -> int:
-        """Longest prompt prefix (tokens) resident in this engine's KV
-        prefix cache — the router's ``prefix-affinity`` signal. Zero when
-        prefix caching is off. Pure lookup: no refcounts or LRU moves."""
+        """Longest prompt prefix (tokens) resident in the prefix cache.
+
+        The router's ``prefix-affinity`` signal. Zero when prefix caching
+        is off. Pure lookup: no refcounts or LRU moves.
+        """
         if not self.prefix_cache:
             return 0
         return self.blocks.match_len(prompt[:max(len(prompt) - 1, 0)])
 
     def submit(self, req: Request):
-        """Enqueue one arrival; it is admitted once the clock reaches
-        ``req.arrival``. Arrivals may be submitted in any order, but never
+        """Enqueue one arrival, admitted once the clock reaches it.
+
+        Arrivals may be submitted in any order, but never
         earlier than an already-admitted arrival (the router's virtual-time
-        frontier guarantees this)."""
+        frontier guarantees this).
+        """
         if req.deadline_s > 0 or req.ttft_deadline_s > 0:
             self._deadlines = True
         i = bisect.bisect_right(self._pending, req.arrival,
@@ -645,7 +710,21 @@ class Engine:
             self._expire_deadlines(now)
         if ecfg.shed_watermark > 0.0:
             self._shed_overload()
-        live = [r for r in pool_reqs.values() if not r.done]
+        if ecfg.prefill_only:
+            # disaggregated-prefill role: a request whose prefill is
+            # complete parks for KV handoff instead of decoding. Parking
+            # is not a preemption (no stats/events) — the request simply
+            # leaves the schedulable set with its pages retained, where
+            # it stays evictable under memory pressure until the router
+            # exports it.
+            for r in pool_reqs.values():
+                if (not r.done and r.rid not in self._parked
+                        and r.entry.prefill_done >= r.context_len - 1):
+                    if r.entry.state is ReqState.RUNNING:
+                        self._suspend(r)
+                    self._parked.add(r.rid)
+        live = [r for r in pool_reqs.values()
+                if not r.done and r.rid not in self._parked]
         if not live:
             if self._p_idx < len(self._pending):
                 # idle: jump to next arrival
@@ -665,8 +744,12 @@ class Engine:
         # (costmodel) and a smaller remaining-work rank (prefill_left) —
         # while the *memory* saving of sharing shows up in the
         # unique-page accounting (shared pages counted once).
+        sched_entries = entries
+        if self._parked:
+            sched_entries = {rid: e for rid, e in entries.items()
+                             if rid not in self._parked}
         decision = select_batch(
-            entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
+            sched_entries, policy=ecfg.policy, max_batch=ecfg.max_batch,
             mem_budget=ecfg.mem_budget,
             bytes_fn=lambda e: self._bytes_for(
                 pool_reqs[e.rid].context_len + self._k),
@@ -872,6 +955,11 @@ class Engine:
         byte-identical to the original monolithic loop. Resets any prior
         incremental state — an engine is either batch- or step-driven.
         """
+        if self.ecfg.prefill_only:
+            raise ValueError(
+                "prefill_only engines never decode, so run() cannot "
+                "drain: drive them incrementally (submit/step + "
+                "export_request), e.g. via run_cluster(prefill_replicas=N)")
         self._reset_stream()
         for req in sorted(requests, key=lambda r: r.arrival):
             self.submit(req)
@@ -948,6 +1036,7 @@ class Engine:
         req.entry.state = ReqState.CANCELLED
         req.cancel_reason = reason
         # out of scheduler state and backlog/queue accounting
+        self._parked.discard(rid)
         del self._entries[rid]
         del self._pool_reqs[rid]
         self._book_cancel(reason)
@@ -982,8 +1071,10 @@ class Engine:
                 self.cancel(rid, reason="timeout")
 
     def _shed_overload(self):
-        """Shed worst-ranked WAITING requests while the predicted
-        backlog exceeds the watermark (reason ``shed``).
+        """Shed worst-ranked WAITING requests while over the watermark.
+
+        Shedding cancels with reason ``shed`` until the predicted backlog
+        fits again.
 
         Only never-started requests are shed — dropping RUNNING or
         suspended work would discard compute already spent. The victim
@@ -1056,6 +1147,7 @@ class Engine:
         self._entries = {}
         self._prefix_hint = {}
         self._hint_gen = {}
+        self._parked = set()
         self.alive = False
         return sorted(lost, key=lambda r: r.arrival)
 
@@ -1069,6 +1161,160 @@ class Engine:
         if factor <= 0:
             raise ValueError(f"slowdown factor must be positive: {factor}")
         self._slowdown = factor
+
+    # ------------------------------------------------------------------
+    # disaggregation: KV handoff export/import (doubles as suspended-
+    # request migration between any two paged engines)
+    # ------------------------------------------------------------------
+    def _suspend(self, req: Request):
+        """Take a RUNNING request off its slot for parking/export.
+
+        The handoff/migration twin of the scheduler's preemption path,
+        minus the preemption bookkeeping (no preempt event, no ``n_preemptions``: parking a
+        finished prefill is not a scheduling decision). Page-retention
+        archs keep the KV resident; everything else discards it (the
+        destination re-prefills).
+        """
+        rid = req.rid
+        req.entry.state = ReqState.PREEMPTED
+        if self._retain:
+            cached = getattr(req, "_kv_written", 0)
+            if self.pool is not None:   # real pool is max_len-bounded
+                cached = min(cached, self.ecfg.max_len)
+            self.blocks.ensure(rid, cached)
+            self.blocks.note_cached(rid, cached)
+        else:
+            req.entry.prefill_done = 0
+            req._kv_written = 0
+            if self.blocks is not None and self.pool is None:
+                self.blocks.free_request(rid)
+        if self.pool is not None:
+            if self.paged:
+                self.pool.release(rid, retain=self._retain)
+            else:
+                self.pool.release(rid)
+        req.slot = -1
+
+    def handoff_ready(self) -> list[int]:
+        """Rids parked for export, oldest arrival first.
+
+        Parked means prefill complete on a ``prefill_only`` engine, slot
+        released, pages retained. Always empty on non-disaggregated
+        engines.
+        """
+        return sorted(self._parked,
+                      key=lambda rid: (self._entries[rid].arrival, rid))
+
+    def export_request(self, rid: int) -> KVHandoff:
+        """Detach one unfinished request for migration to another engine.
+
+        Valid in any live state (WAITING / RUNNING / PREEMPTED —
+        RUNNING requests are suspended first), so it serves both the
+        disaggregation handoff and generic suspended-request migration.
+        On a page-retention engine the materialized KV prefix ships:
+        sim mode ships the descriptor only, real mode additionally
+        gathers the page payload in one batched device->host copy.
+        The source side then releases everything through the standard
+        refcount paths — shared prefix pages stay with their other
+        owners, and a drained source ends with ``used_pages() == 0``
+        (the zero-leak invariant the disagg benchmark gates on).
+
+        Returns the `KVHandoff`; the request is gone from this engine.
+        """
+        req = self._pool_reqs.get(rid)
+        if req is None or req.done:
+            raise ValueError(f"rid {rid} is not exportable")
+        if req.entry.state is ReqState.RUNNING:
+            self._suspend(req)
+        kv_tokens = n_pages = 0
+        payload = None
+        if self.blocks is not None and self._retain:
+            # real mode ships only device-resident pages (host-swapped
+            # tails have no gatherable payload); sim descriptors cover
+            # the whole cached prefix, host pages included
+            cached = (self.blocks.resident_tokens(rid)
+                      if self.pool is not None
+                      else self.blocks.cached_tokens.get(rid, 0))
+            kv_tokens = min(cached, max(req.context_len - 1, 0))
+            if self.pool is not None and kv_tokens > 0:
+                payload = self.pool.export_pages(rid)
+            snap = self.blocks.export_request(rid)
+            if kv_tokens > 0:
+                n_pages = snap["resident_pages"] + snap["host_pages"]
+        elif self.blocks is not None:
+            self.blocks.free_request(rid)
+        req.slot = -1
+        req._swapped = False
+        self._parked.discard(rid)
+        self._prefix_hint.pop(rid, None)
+        self._hint_gen.pop(rid, None)
+        del self._entries[rid]
+        del self._pool_reqs[rid]
+        if self.events is not None:
+            self.events.emit(self._now, rid, "handoff", n_pages)
+        pred = req.entry.pred_remaining if self._magnitude else None
+        return KVHandoff(req=req, kv_tokens=kv_tokens, n_pages=n_pages,
+                         nbytes=n_pages * self._page_bytes,
+                         payload=payload, pred_tokens=pred,
+                         src_now=self._now)
+
+    def import_request(self, handoff: KVHandoff,
+                       t: float | None = None) -> int:
+        """Adopt a migrated request; returns the KV tokens resumed.
+
+        The request enters the pool directly (its arrival is in the
+        past by construction — the transfer only ever delays it), with
+        arrival, first_token_time, generated tokens and prediction
+        state preserved. Shipped KV lands as retained pages, so the
+        normal copy-on-admit resume path re-links it at the next
+        scheduling point with zero recompute; if the pool cannot hold
+        the import (or the engine cannot retain pages) the request
+        falls back to WAITING and re-prefills from scratch — correct
+        either way, since greedy decode over re-computed KV is
+        byte-identical.
+
+        Args:
+            handoff: the package from `export_request`.
+            t: availability time on this engine's clock (dispatch time
+                plus `CostModel.kv_transfer_time`); the clock advances
+                to it if behind.
+        """
+        req = handoff.req
+        rid = req.rid
+        if rid in self._pool_reqs or rid in self._entries:
+            raise ValueError(f"rid {rid} already present on this engine")
+        if t is not None:
+            self._now = max(self._now, t)
+        entry = req.entry
+        kv = 0
+        if handoff.kv_tokens > 0 and self.blocks is not None and self._retain:
+            want = min(handoff.kv_tokens, max(req.context_len - 1, 0))
+            if self.pool is not None:
+                if self.pool.import_pages(rid, min(want, self.ecfg.max_len),
+                                          handoff.payload):
+                    kv = min(want, self.ecfg.max_len)
+            elif self.blocks.import_request(rid, want):
+                kv = want
+        entry.state = ReqState.PREEMPTED if kv > 0 else ReqState.WAITING
+        entry.prefill_done = min(entry.prefill_done, kv)
+        entry.c_limit = self.ecfg.c_limit
+        entry.prefill_left = 0.0    # rank-visible only under prefix_cache
+        if self.prefix_cache:
+            self._sync_prefill_left(req)
+        req._kv_written = kv
+        req._swapped = False
+        req.slot = -1
+        if self._magnitude and handoff.pred_tokens is not None:
+            # fold the migrant's prediction into the backlog prior, as
+            # admission would have
+            self._r0_sum += entry.r0
+            self._r0_cnt += 1
+        if (entry.deadline_at > 0 or req.ttft_deadline_s > 0
+                or self.ecfg.ttft_deadline_s > 0):
+            self._deadlines = True
+        self._pool_reqs[rid] = req
+        self._entries[rid] = entry
+        return kv
 
     # ------------------------------------------------------------------
     def _apply_preemptions(self, decision: Decision, pool_reqs, stats):
@@ -1123,10 +1369,12 @@ class Engine:
 
     def _register_prompt(self, req):
         """Publish ``req``'s fully-written prompt pages to the hash index.
+
         A per-request watermark skips the (O(prompt pages) hashing) walk
         once everything registerable has been offered — the ratchet only
         moves forward, so a rare eviction of already-offered pages just
-        forgoes re-registration, never corrupts the index."""
+        forgoes re-registration, never corrupts the index.
+        """
         written = min(getattr(req, "_kv_written", 0), len(req.prompt))
         pages = written // self.ecfg.page_size
         if pages > getattr(req, "_reg_pages", 0):
@@ -1193,17 +1441,23 @@ class Engine:
                 and self.blocks.resident_pages(e.rid) > 0]
 
     def _victim_key(self, e):
-        """Eviction-victim ordering: prefer victims that can actually
+        """Eviction-victim ordering key.
+
+        Prefer victims that can actually
         yield memory (an unshared tail page — shared pages free nothing
         and would force recompute for their other owners), then the
         least-urgent prediction. Without sharing every resident victim
-        has an unshared tail, so the order is unchanged."""
+        has an unshared tail, so the order is unchanged.
+        """
         return (min(self.blocks.unshared_tail_pages(e.rid), 1),
                 e.pred_remaining, e.rid)
 
     def _reclaim_pages(self, decision: Decision, pool_reqs, entries, stats):
-        """Evict (discard) or swap out suspended pages, tail-first from the
-        least-urgent victim, until scheduled + suspended bytes fit."""
+        """Evict or swap out suspended pages until the budget fits.
+
+        Tail-first from the least-urgent victim, until scheduled +
+        suspended bytes fit.
+        """
         sched = set(decision.scheduled)
         susp = self._suspended(entries, exclude=sched)
         if self.prefix_cache:
@@ -1249,8 +1503,11 @@ class Engine:
             susp = [e for e in susp if self.blocks.resident_pages(e.rid) > 0]
 
     def _ensure_pages(self, req, tokens: int, entries):
-        """Grow a scheduled request's page list, evicting suspended pages
-        when the (real-mode) physical pool is exhausted."""
+        """Grow a scheduled request's page list to cover ``tokens``.
+
+        Evicts suspended pages when the (real-mode) physical pool is
+        exhausted.
+        """
         if self.pool is not None:
             # only the real device pool is max_len-bounded; sim-mode paged
             # accounting must track contexts as far as the contig baseline
@@ -1311,8 +1568,9 @@ class Engine:
     # real mode: batched device megasteps over the slot pool
     # ------------------------------------------------------------------
     def _device_step(self, pf_plan, decoding) -> dict[int, int]:
-        """Dispatch one prefill chunk + one decode megastep; returns the
-        tokens emitted per rid.
+        """Dispatch one prefill chunk + one decode megastep.
+
+        Returns the tokens emitted per rid.
 
         Both device calls are dispatched before any output is fetched, so
         (on an async backend) the host runs the prefill-side probe
@@ -1325,18 +1583,33 @@ class Engine:
         B = pool.n_slots
         pool.flush_resets()
         pf_out = None
-        if pf_plan:
+        # The scheduler's prefill classification runs on prefill_done, which
+        # trails _kv_written after a decode megastep (decode writes KV for
+        # the tokens it consumes but only the prefill bookkeeping advances
+        # prefill_done). Feeding those caught-up positions to the device
+        # again would append duplicate KV at cache["lengths"] and desync
+        # the device cache from the logical context — so the device call
+        # covers only the genuinely unwritten slice of each chunk, keeping
+        # lengths == _kv_written at every megastep boundary (the invariant
+        # page export/import relies on).
+        feed: list[tuple[Request, int, int]] = []
+        for r, take in pf_plan:
+            done = r.entry.prefill_done
+            skip = min(max(getattr(r, "_kv_written", 0) - done, 0), take)
+            if take > skip:
+                feed.append((r, done + skip, take - skip))
+        if feed:
             # bucketize the chunk width (powers of two) to bound recompiles
-            need = max(take for _, take in pf_plan)
+            need = max(n for _, _, n in feed)
             chunk = 8
             while chunk < need:
                 chunk *= 2
             chunk = min(chunk, self.ecfg.prefill_chunk)
             tokens = np.zeros((B, chunk), np.int32)
             valid = np.zeros((B, chunk), bool)
-            for r, take in pf_plan:
+            for r, start, n in feed:
                 full = r.prompt + r.generated
-                seg = full[r.entry.prefill_done:r.entry.prefill_done + take]
+                seg = full[start:start + n]
                 tokens[r.slot, :len(seg)] = seg
                 valid[r.slot, :len(seg)] = True
             _, pool.cache, tap_sum, n_new = self._prefill_fn(
@@ -1361,12 +1634,12 @@ class Engine:
         if pf_out is not None:
             tap_sum = np.asarray(pf_out[0])
             n_new = np.asarray(pf_out[1])
-            for r, take in pf_plan:
+            for r, start, n in feed:
                 if r.tap_sum is None:
                     r.tap_sum = np.zeros(self.cfg.d_model, np.float32)
                 r.tap_sum = r.tap_sum + tap_sum[r.slot]
                 r.tap_cnt += int(n_new[r.slot])
-                if r.entry.prefill_done + take >= r.context_len - 1:
+                if start + n >= r.context_len - 1:
                     tap_mean = r.tap_sum / max(r.tap_cnt, 1)
                     pred = self.predictor.on_prefill(r, tap_mean)
                     r.entry.pred_remaining = pred
@@ -1402,8 +1675,10 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
                admission_control=False,
                age_boost=0.0, age_delay_s=0.0,
                deadline_slack_s=0.0) -> EngineStats:
-    """One-shot convenience: build an `Engine` and run a (deep-copied)
-    request trace under the given policy, returning its `EngineStats`.
+    """One-shot convenience: build an `Engine` and run a request trace.
+
+    The requests are deep-copied and run under the given policy,
+    returning the engine's `EngineStats`.
     ``predictor`` accepts either a `PredictorBase` instance or a
     strategy spec string (``"noisy-oracle:sigma=0.5"``, see
     `repro.serving.predictors.make_predictor`); None keeps the legacy
@@ -1412,7 +1687,8 @@ def run_policy(cfg: ModelConfig, policy: str, requests, *, c_limit=0.8,
     knobs (``deadline_s`` / ``ttft_deadline_s`` / ``shed_watermark`` /
     ``admission_control``) and the tail knobs (``age_boost`` /
     ``age_delay_s`` / ``deadline_slack_s``) mirror `EngineConfig` and
-    default off."""
+    default off.
+    """
     spec = predictor if isinstance(predictor, str) else ""
     if spec:
         predictor = None

@@ -54,24 +54,30 @@ from repro.models.ssm import ssm_dims
 
 
 def _silence_cpu_donation_warning():
-    """Buffer donation lets XLA update the KV cache in place instead of
+    """Silence the CPU backend's unhonored-donation warning.
+
+    Buffer donation lets XLA update the KV cache in place instead of
     copying the whole pytree every jit call. The CPU backend (this
     container / the CI runner) can never honor donation and warns once per
     compiled function with identical semantics either way, so the warning
     is pure noise there — but ONLY there: on GPU/TPU an unexpectedly
     undonatable buffer means XLA is back to copying the cache every
     megastep, and the warning is the signal. Install the filter lazily
-    (first donating jit / pool construction) and only on CPU."""
+    (first donating jit / pool construction) and only on CPU.
+    """
     if jax.default_backend() == "cpu":
         warnings.filterwarnings(
             "ignore", message="Some donated buffers were not usable")
 
 
 def donating_jit(fn, donate: tuple[str, ...] = ("cache",), **jit_kwargs):
-    """jit with the cache pytree donated: XLA may alias the input buffers
+    """jit with the cache pytree donated.
+
+    XLA may alias the input buffers
     into the outputs (in-place KV update). Callers MUST drop every
     reference to the donated argument and use the returned cache — the
-    engine's single-owner ``pool.cache`` reassignment pattern."""
+    engine's single-owner ``pool.cache`` reassignment pattern.
+    """
     _silence_cpu_donation_warning()
     return jax.jit(fn, donate_argnames=donate, **jit_kwargs)
 
@@ -103,7 +109,8 @@ def bytes_for_context(cfg: ModelConfig, context_len: int) -> int:
 
     Memoized on the (hashable, frozen) config and length: ``select_batch``
     evaluates this per candidate per iteration, and at large request
-    counts the layer_kinds walk dominated sim-mode scheduling cost."""
+    counts the layer_kinds walk dominated sim-mode scheduling cost.
+    """
     total = 0
     for kind in cfg.layer_kinds:
         per_tok = bytes_per_token_kind(cfg, kind)
@@ -127,7 +134,9 @@ def pages_for_tokens(tokens: int, page_size: int) -> int:
 @functools.lru_cache(maxsize=4096)
 def page_bytes(cfg: ModelConfig, page_size: int) -> int:
     """KV bytes of one page across all non-SSM layers (window layers too:
-    their ring buffers are page-sized in the accounting model)."""
+
+    their ring buffers are page-sized in the accounting model).
+    """
     per_tok = sum(bytes_per_token_kind(cfg, kind) for kind in cfg.layer_kinds)
     return per_tok * page_size
 
@@ -135,11 +144,14 @@ def page_bytes(cfg: ModelConfig, page_size: int) -> int:
 @functools.lru_cache(maxsize=1 << 16)
 def paged_bytes_for_context(cfg: ModelConfig, context_len: int,
                             page_size: int) -> int:
-    """Page-granular m(age): like ``bytes_for_context`` but every token
+    """Page-granular m(age).
+
+    Like ``bytes_for_context`` but every token
     count rounds up to whole pages, exposing allocation fragmentation.
     SSM state and cross-attention caches are unpaged (fixed-size).
     Memoized like ``bytes_for_context`` (same per-entry-per-iteration
-    call pattern in the scheduler's bytes_fn)."""
+    call pattern in the scheduler's bytes_fn).
+    """
     rounded = pages_for_tokens(context_len, page_size) * page_size
     total = 0
     for kind in cfg.layer_kinds:
@@ -158,11 +170,14 @@ def paged_bytes_for_context(cfg: ModelConfig, context_len: int,
 
 
 def supports_page_retention(cfg: ModelConfig) -> bool:
-    """Retaining a preempted request's KV pages is only coherent when the
-    *whole* recurrent state lives in those pages: pure global-attention
+    """Whether this arch can keep preempted KV pages resident.
+
+    Retention is only coherent when the
+    *whole* recurrent state lives in pages: pure global-attention
     stacks (dense/MoE). SSM state, ring buffers and cross caches are
     per-slot and reset on release, so such archs fall back to
-    discard-and-recompute (still with page-accurate accounting)."""
+    discard-and-recompute (still with page-accurate accounting).
+    """
     return (all(k in (KIND_ATTN, KIND_MOE) for k in cfg.layer_kinds)
             and not cfg.cross_attention and not cfg.kv_quant)
 
@@ -208,12 +223,15 @@ class BlockManager:
     def __init__(self, num_pages: int, page_size: int, first_id: int = 1,
                  prefix_cache: bool = False, track_resets: bool = False,
                  reusable_cap: int | None = None):
-        """See the class docstring; ``reusable_cap`` bounds the reusable
+        """See the class docstring.
+
+        ``reusable_cap`` bounds the reusable
         pool (warm refcount-zero pages). A bounded pool is naturally
         capped at ``num_pages``; unbounded (sim-mode) managers must pass
         a cap or the index/LRU bookkeeping grows with every unique prompt
         ever served — and, worse, models an infinitely large always-warm
-        cache no physical pool could provide."""
+        cache no physical pool could provide.
+        """
         if page_size <= 0:
             raise ValueError("page_size must be positive")
         self.page_size = page_size
@@ -247,8 +265,11 @@ class BlockManager:
 
     # -- allocation ------------------------------------------------------
     def available_pages(self) -> int:
-        """Pages allocatable right now: free-listed plus reusable (warm
-        refcount-zero cache pages, reclaimed on demand)."""
+        """Pages allocatable right now.
+
+        Free-listed plus reusable (warm refcount-zero cache pages,
+        reclaimed on demand).
+        """
         if not self.bounded:
             return 1 << 30
         return len(self.free) + len(self._reusable)
@@ -272,15 +293,21 @@ class BlockManager:
         return pid
 
     def _take_pages(self, n: int) -> list[int] | None:
-        """Atomically allocate ``n`` pages: validates capacity first and
-        either returns all ``n`` or None, never a partial allocation."""
+        """Atomically allocate ``n`` pages.
+
+        Validates capacity first and either returns all ``n`` or None,
+        never a partial allocation.
+        """
         if self.bounded and self.available_pages() < n:
             return None
         return [self._take_page() for _ in range(n)]
 
     def _release_ref(self, pid: int) -> bool:
-        """Drop one reference. Returns True when the page left the used
-        set (refcount hit zero) — whether free-listed or parked reusable."""
+        """Drop one reference.
+
+        Returns True when the page left the used set (refcount hit zero)
+        — whether free-listed or parked reusable.
+        """
         self.refcount[pid] -= 1
         if self.refcount[pid] > 0:
             return False
@@ -311,12 +338,16 @@ class BlockManager:
 
     def used_pages(self) -> int:
         """Unique physical pages referenced by at least one request.
-        Shared pages count once — the page-accurate resident footprint."""
+
+        Shared pages count once — the page-accurate resident footprint.
+        """
         return self._used
 
     def ensure(self, rid: int, tokens: int) -> bool:
-        """Grow ``rid``'s resident page list to cover ``tokens`` prefix
-        tokens. Returns False (allocating nothing) on pool exhaustion."""
+        """Grow ``rid``'s resident page list to cover ``tokens``.
+
+        Returns False (allocating nothing) on pool exhaustion.
+        """
         have = self.pages.setdefault(rid, [])
         need = pages_for_tokens(tokens, self.page_size) - len(have)
         if need <= 0:
@@ -353,13 +384,16 @@ class BlockManager:
 
     # -- eviction / swap (tail-first) -----------------------------------
     def evict_tail(self, rid: int, n_pages: int) -> list[int]:
-        """Discard up to ``n_pages`` tail pages (their tokens must be
-        recomputed on resume). Host-swapped tail pages are dropped first —
+        """Discard up to ``n_pages`` tail pages.
+
+        The discarded tokens must be
+        recomputed on resume. Host-swapped tail pages are dropped first —
         they are beyond the resident prefix. Shared pages (refcount > 1)
         stop the walk: reclaiming them frees no memory and would force a
         recompute of tokens other requests still serve, so eviction
         prefers — and only ever takes — unshared tail pages. Returns the
-        physical ids that actually left the used set."""
+        physical ids that actually left the used set.
+        """
         dropped_host = min(self.host_pages.get(rid, 0), n_pages)
         if dropped_host:
             self.host_pages[rid] -= dropped_host
@@ -376,8 +410,10 @@ class BlockManager:
         return freed
 
     def unshared_tail_pages(self, rid: int) -> int:
-        """Contiguous run of evictable (refcount == 1) pages at the tail —
-        how much relief evicting this request can actually yield."""
+        """Contiguous run of evictable (refcount == 1) pages at the tail.
+
+        This is how much relief evicting the request can actually yield.
+        """
         n = 0
         for pid in reversed(self.pages.get(rid, [])):
             if self.refcount.get(pid, 1) > 1:
@@ -386,10 +422,13 @@ class BlockManager:
         return n
 
     def swap_out_tail(self, rid: int, n_pages: int) -> list[int]:
-        """Move up to ``n_pages`` tail pages to host memory: physical pages
+        """Move up to ``n_pages`` tail pages to host memory.
+
+        The physical pages
         are freed but their tokens stay cached (swap-in restores them).
         Shared pages stop the walk (their device copy serves other
-        requests). Returns the freed physical ids."""
+        requests). Returns the freed physical ids.
+        """
         have = self.pages.get(rid, [])
         freed = []
         for _ in range(min(n_pages, len(have))):
@@ -404,9 +443,11 @@ class BlockManager:
 
     def swap_in(self, rid: int) -> int:
         """Re-allocate physical pages for host-swapped tail pages.
+
         Returns the number of pages brought back (0 if none or if the pool
         cannot hold them — caller must evict first). Atomic: a failed
-        swap-in leaves ``pages``/``host_pages`` untouched."""
+        swap-in leaves ``pages``/``host_pages`` untouched.
+        """
         n = self.host_pages.get(rid, 0)
         if not n:
             return 0
@@ -419,21 +460,63 @@ class BlockManager:
 
     # -- lifecycle -------------------------------------------------------
     def resume(self, rid: int) -> int:
-        """Copy-on-admit: re-link the retained prefix on re-admission (a
-        block-table write, no cache copy). Returns retained token count."""
+        """Copy-on-admit: re-link the retained prefix on re-admission.
+
+        A block-table write, no cache copy. Returns retained token count.
+        """
         return self.resident_tokens(rid)
 
     def free_request(self, rid: int) -> list[int]:
-        """Drop all of ``rid``'s references and bookkeeping. Returns the
+        """Drop all of ``rid``'s references and bookkeeping.
+
+        Returns the
         physical ids that left the used set: shared pages stay with their
         other owners (and are not returned), while indexed pages are
         returned but park in the reusable pool — still warm for future
-        prefix hits, device-reset only if later reclaimed."""
+        prefix hits, device-reset only if later reclaimed.
+        """
         freed = [pid for pid in self.pages.pop(rid, [])
                  if self._release_ref(pid)]
         self.host_pages.pop(rid, None)
         self.cached_tokens.pop(rid, None)
         return freed
+
+    # -- migration export/import -----------------------------------------
+    def export_request(self, rid: int) -> dict:
+        """Detach ``rid`` for migration.
+
+        Snapshots its footprint, then drops
+        every reference exactly like :meth:`free_request` (shared pages
+        stay with their other owners; indexed pages park reusable). The
+        source side therefore ends zero-leak by construction — the caller
+        ships the snapshot plus, in real mode, the gathered page payload.
+        Returns ``{"tokens", "resident_pages", "host_pages"}``.
+        """
+        snap = {"tokens": self.cached_tokens.get(rid, 0),
+                "resident_pages": self.resident_pages(rid),
+                "host_pages": self.host_pages.get(rid, 0)}
+        self.free_request(rid)
+        return snap
+
+    def import_request(self, rid: int, tokens: int) -> bool:
+        """Adopt a migrated request.
+
+        Allocates fresh private pages covering
+        ``tokens`` prefix tokens and marks them materialized. Imported
+        pages are unshared (refcount 1) and unindexed — COW/index state
+        never crosses replicas; the destination may re-register the
+        prompt itself later. Atomic like :meth:`ensure`: returns False
+        (allocating nothing) on pool exhaustion, in which case the caller
+        falls back to re-prefilling from scratch.
+        """
+        if self.pages.get(rid) or self.host_pages.get(rid):
+            raise ValueError(f"import for rid {rid}: already owns pages")
+        if tokens <= 0:
+            return True
+        if not self.ensure(rid, tokens):
+            return False
+        self.note_cached(rid, tokens)
+        return True
 
     # -- cross-request prefix cache --------------------------------------
     def match_prefix(self, tokens) -> tuple[list[int], int]:
@@ -463,8 +546,9 @@ class BlockManager:
         return self.match_prefix(tokens)[1]
 
     def link_prefix(self, rid: int, tokens) -> int:
-        """Link the longest cached prefix of ``tokens`` into ``rid``'s
-        block table: refcount bumps and table writes, no prefill compute.
+        """Link the longest cached prefix of ``tokens`` into ``rid``.
+
+        Refcount bumps and block-table writes, no prefill compute.
         Only valid before ``rid`` owns any pages (fresh admission).
         Returns the number of prefix tokens now materialized for ``rid``.
         """
@@ -483,13 +567,15 @@ class BlockManager:
         return hit
 
     def register_prefix(self, rid: int, tokens, upto: int) -> int:
-        """Publish ``rid``'s materialized full prompt pages into the hash
-        index so later requests can link them. ``tokens`` is the prompt;
+        """Publish ``rid``'s full prompt pages into the hash index.
+
+        Later requests can then link them. ``tokens`` is the prompt;
         only pages fully covered by ``min(upto, len(tokens))`` written
         tokens are registered (partial tail pages never enter the index,
         so indexed pages are immutable by construction). Duplicate content
         chains through the existing canonical page instead of forking the
-        index. Returns how many pages were newly registered."""
+        index. Returns how many pages were newly registered.
+        """
         if not self.prefix_cache:
             return 0
         ps = self.page_size
@@ -516,14 +602,17 @@ class BlockManager:
         return registered
 
     def make_writable(self, rid: int, from_token: int) -> list[tuple[int, int]]:
-        """Copy-on-write guard: give ``rid`` private copies of any shared
+        """Copy-on-write guard before KV writes.
+
+        Gives ``rid`` private copies of any shared
         (refcount > 1) pages covering positions >= ``from_token``, so the
         upcoming KV writes never mutate a page other requests attend to.
         Returns the ``(src, dst)`` page copies performed (also queued for
         the device in the COW log). In the standard admission flow shared
         pages are always full and writes land beyond them, so this is a
         no-op backstop — but it is what makes the immutability invariant
-        enforced rather than emergent."""
+        enforced rather than emergent.
+        """
         if not self.prefix_cache:
             return []
         have = self.pages.get(rid, [])
@@ -544,11 +633,13 @@ class BlockManager:
         return ops
 
     def _deregister(self, pid: int):
-        """Remove ``pid`` from the hash index, cascading to registered
-        descendants: their chained keys name ``pid`` as parent, so once it
+        """Remove ``pid`` from the hash index, cascading to descendants.
+
+        Registered descendants' chained keys name ``pid`` as parent, so once it
         is reclaimed (and its id possibly reused for other content) they
         must not be matchable. Unreferenced descendants move from the
-        reusable pool to the free list."""
+        reusable pool to the free list.
+        """
         key = self._key_of.pop(pid, None)
         if key is None:
             return
@@ -567,8 +658,11 @@ class BlockManager:
                     self._reset_log.append(kid)
 
     def pop_resets(self) -> list[int]:
-        """Drain the device-invalidation queue (page ids whose content is
-        dead: freed outright or reclaimed from the reusable pool)."""
+        """Drain the device-invalidation queue.
+
+        Yields page ids whose content is dead: freed outright or
+        reclaimed from the reusable pool.
+        """
         out, self._reset_log = self._reset_log, []
         return out
 
@@ -626,8 +720,9 @@ class SlotPool:
 
 
 class PagedSlotPool(SlotPool):
-    """Slot pool whose global-attention KV lives in a shared device page
-    pool addressed through per-slot block tables.
+    """Slot pool whose global-attention KV lives in shared device pages.
+
+    Pages are addressed through per-slot block tables.
 
     Slots still carry the per-sequence state that cannot be paged (lengths,
     SSM state, ring buffers, cross caches); the :class:`BlockManager` owns
@@ -679,9 +774,11 @@ class PagedSlotPool(SlotPool):
 
     def release(self, rid: int, retain: bool = False) -> int:
         """Release the slot; with ``retain`` the pages stay for resumption.
+
         Device invalidation is driven by the block manager's reset log
         (drained in ``flush_resets``), so pages parked in the reusable
-        prefix pool keep their contents."""
+        prefix pool keep their contents.
+        """
         slot = self.slot_of[rid]
         if not retain:
             self.blocks.free_request(rid)
@@ -690,8 +787,11 @@ class PagedSlotPool(SlotPool):
 
     # -- pages -----------------------------------------------------------
     def ensure_pages(self, rid: int, tokens: int) -> bool:
-        """Allocate pages so ``rid`` can hold a ``tokens``-long prefix and
-        refresh its block-table row. False only on true pool exhaustion."""
+        """Allocate pages for a ``tokens``-long prefix of ``rid``.
+
+        Also refreshes the block-table row. False only on true pool
+        exhaustion.
+        """
         tokens = min(tokens, self.max_len)
         ok = self.blocks.ensure(rid, tokens)
         if ok and rid in self.slot_of:
@@ -700,8 +800,10 @@ class PagedSlotPool(SlotPool):
         return ok
 
     def evict_tail(self, rid: int, n_pages: int) -> list[int]:
-        """Tail-evict pages (device invalidation queues via the reset
-        log); returns the ids that left the used set."""
+        """Tail-evict pages, queueing device invalidation via resets.
+
+        Returns the ids that left the used set.
+        """
         freed = self.blocks.evict_tail(rid, n_pages)
         if rid in self.slot_of:
             self._write_table_row(self.slot_of[rid],
@@ -709,13 +811,77 @@ class PagedSlotPool(SlotPool):
         return freed
 
     def make_writable(self, rid: int, from_token: int) -> list:
-        """COW guard before KV writes (see `BlockManager.make_writable`);
-        refreshes the table row when pages were swapped for copies."""
+        """COW guard before KV writes (see `BlockManager.make_writable`).
+
+        Refreshes the table row when pages were swapped for copies.
+        """
         ops = self.blocks.make_writable(rid, from_token)
         if ops and rid in self.slot_of:
             self._write_table_row(self.slot_of[rid],
                                   self.blocks.block_table(rid))
         return ops
+
+    # -- migration export/import -----------------------------------------
+    def export_pages(self, rid: int):
+        """Gather ``rid``'s resident page payload for shipping.
+
+        One batched device->host copy of pk/pv/pkpos per paged
+        layer run — the host bounce of
+        a KV handoff ships the whole request at once instead of a copy
+        per page. Bookkeeping is untouched (pair with
+        ``blocks.export_request``). Returns None when nothing is
+        resident.
+        """
+        pids = self.blocks.block_table(rid)
+        if not pids:
+            return None
+        self.flush_resets()        # pending wipes/COW must land first
+        idx = jnp.asarray(pids, jnp.int32)
+        payload = {}
+        for key, run in self.cache.items():
+            if not key.startswith("run_"):
+                continue
+            payload[key] = tuple(
+                {leaf: sub[leaf][:, idx] for leaf in ("pk", "pv", "pkpos")}
+                if "pkpos" in sub else None
+                for sub in run)
+        return jax.device_get(payload)   # one transfer, whole pytree
+
+    def import_pages(self, rid: int, tokens: int, payload) -> bool:
+        """Adopt a migrated request's KV.
+
+        Allocates fresh pages covering
+        ``tokens`` (clamped to ``max_len``) and scatters the shipped
+        payload into them with one batched host->device write per layer
+        run. ``flush_resets`` runs first so a queued wipe of a recycled
+        physical page cannot land after the import and destroy the new
+        content. False on pool exhaustion (nothing allocated; the caller
+        re-prefills from scratch).
+        """
+        self.flush_resets()
+        tokens = min(tokens, self.max_len)
+        if not self.blocks.import_request(rid, tokens):
+            return False
+        pids = self.blocks.block_table(rid)
+        if payload is None or not pids:
+            return True
+        dst = jnp.asarray(pids, jnp.int32)
+        n = len(pids)            # may be < shipped pages (clamp/partial)
+        new = dict(self.cache)
+        for key, run in self.cache.items():
+            if not key.startswith("run_"):
+                continue
+            subs = []
+            for sub, pay in zip(run, payload[key]):
+                if "pkpos" in sub and pay is not None:
+                    sub = dict(sub)
+                    for leaf in ("pk", "pv", "pkpos"):
+                        sub[leaf] = sub[leaf].at[:, dst].set(
+                            jnp.asarray(pay[leaf][:, :n]))
+                subs.append(sub)
+            new[key] = tuple(subs)
+        self.cache = new
+        return True
 
     def _write_table_row(self, slot: int, pages: list[int]):
         row = np.zeros((self.pages_per_seq,), np.int32)
@@ -725,10 +891,12 @@ class PagedSlotPool(SlotPool):
 
     # -- device sync -----------------------------------------------------
     def flush_resets(self):
-        """Apply pending slot/page resets, COW page copies, and sync the
-        device block table. Resets run before copies so a page reclaimed
+        """Apply pending resets and COW copies; sync the block table.
+
+        Resets run before copies so a page reclaimed
         from the reusable pool and immediately used as a COW destination
-        ends up holding the copied content."""
+        ends up holding the copied content.
+        """
         super().flush_resets()
         self._dirty_pages.extend(self.blocks.pop_resets())
         if self._dirty_pages:
@@ -756,9 +924,11 @@ class PagedSlotPool(SlotPool):
 @functools.partial(jax.jit, donate_argnames=("cache",))
 def _reset_pages(cache, page_mask):
     """Invalidate freed pages: pkpos=-1 so stale entries never attend.
+
     The cache is donated (reset queue is donation-safe): the pool holds
     the only live reference and immediately replaces it with the result,
-    so XLA can flip pkpos in place instead of copying the page pool."""
+    so XLA can flip pkpos in place instead of copying the page pool.
+    """
     new = dict(cache)
     for key, run in cache.items():
         if not key.startswith("run_"):
@@ -776,9 +946,11 @@ def _reset_pages(cache, page_mask):
 
 @functools.partial(jax.jit, donate_argnames=("cache",))
 def _copy_pages(cache, src, dst):
-    """Copy-on-write: duplicate physical pages ``src`` into ``dst`` (K/V
-    payload and pkpos) across every paged layer run. Donated like
-    ``_reset_pages`` — the pool holds the only live cache reference."""
+    """Copy-on-write: duplicate physical pages ``src`` into ``dst``.
+
+    K/V payload and pkpos copy across every paged layer run. Donated like
+    ``_reset_pages`` — the pool holds the only live cache reference.
+    """
     new = dict(cache)
     for key, run in cache.items():
         if not key.startswith("run_"):
@@ -797,8 +969,9 @@ def _copy_pages(cache, src, dst):
 @functools.partial(jax.jit, donate_argnames=("cache",))
 def _reset_slots(cache, mask):
     """Invalidate slots: kpos=-1, lengths=0, SSM state zeroed.
-    Donates the cache like ``_reset_pages`` (see note there)."""
 
+    Donates the cache like ``_reset_pages`` (see note there).
+    """
     def reset_sub(r):
         """Wipe one layer's per-slot recurrent leaves under the mask."""
         r = dict(r)

@@ -1,5 +1,4 @@
-"""Prediction providers for the engine: the `LengthPredictor` interface
-and the pluggable strategy family behind it.
+"""Prediction providers: `LengthPredictor` and its strategy family.
 
 Every provider implements the same three-hook protocol (duck-typed; no
 ABC so sim-mode providers stay dependency-free):
@@ -72,8 +71,10 @@ PROXY_FLOPS_PER_TOKEN = 2.0 * 110e6
 
 
 class PredictorBase:
-    """Shared Bayesian-filter plumbing + the `LengthPredictor` contract
-    defaults (magnitude predictions, zero charged cost)."""
+    """Shared Bayesian-filter plumbing + `LengthPredictor` defaults.
+
+    The defaults: magnitude predictions, zero charged cost.
+    """
 
     #: predictions are remaining-length magnitudes (tokens); rank-only
     #: strategies override to False and emit ordinal scores instead
@@ -119,8 +120,11 @@ class PredictorBase:
 
 
 class OraclePredictor(PredictorBase):
-    """Sim-mode stand-in: models a trained probe's *statistics* around the
-    ground-truth remaining length (see module docstring)."""
+    """Sim-mode stand-in for a trained probe.
+
+    Models the probe's *statistics* around the ground-truth remaining
+    length (see module docstring).
+    """
 
     def __init__(self, pc: ProbeConfig, *, temp: float = 1.0,
                  bert_sigma: float = 0.9, flip_prob: float = 0.1,
@@ -292,10 +296,10 @@ class BucketedOraclePredictor(PredictorBase):
 
 
 class PromptOnlyPredictor(PredictorBase):
-    """One-shot admission-time estimate from an external prompt model
-    (the paper's BERT-baseline regime), never refined.
+    """One-shot admission-time estimate, never refined.
 
-    ``initial`` draws one multiplicative-lognormal estimate (the same
+    The paper's BERT-baseline regime: an external prompt model predicts
+    once at admission. ``initial`` draws one multiplicative-lognormal estimate (the same
     error model as `OraclePredictor.initial`, so ``sigma`` is comparable)
     and charges a BERT-base-sized forward over the prompt; both later
     hooks just age the estimate deterministically (r0 - tokens served) —
@@ -326,6 +330,7 @@ class PromptOnlyPredictor(PredictorBase):
 
 class RankOnlyPredictor(PredictorBase):
     """Learning-to-rank scheduling signal (Fu et al., arXiv:2408.15792):
+
     a total order over the queue with **no magnitudes**.
 
     Scores are a strictly monotone, scale-free transform of the (noisy)
@@ -368,6 +373,7 @@ class RankOnlyPredictor(PredictorBase):
 
 class IterativePredictor(PredictorBase):
     """ELIS-style iterative re-prediction (Choi et al., arXiv:2505.09142):
+
     a proxy estimator re-predicts the remaining length every ``period``
     probe boundaries; predictions age deterministically in between.
 

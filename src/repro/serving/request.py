@@ -50,8 +50,11 @@ class Request:
 
     @property
     def done(self) -> bool:
-        """True once the request reached a terminal state (FINISHED or
-        CANCELLED — cancelled requests never re-enter scheduling)."""
+        """True once the request reached a terminal state.
+
+        Terminal means FINISHED or CANCELLED — cancelled requests never
+        re-enter scheduling.
+        """
         return self.entry.state in (ReqState.FINISHED, ReqState.CANCELLED)
 
     def latency(self) -> float:

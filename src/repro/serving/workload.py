@@ -18,6 +18,13 @@ Arrival processes:
 * ``diurnal`` — non-homogeneous Poisson with a sinusoidal rate curve
   (thinning), mean rate ``request_rate``.
 
+Multi-tenant mixes can go beyond one shared process: when every
+`TenantSpec` carries a positive ``rate``, each tenant drives its *own*
+arrival process (its own seeded stream, optionally its own process kind
+via ``TenantSpec.arrival``) and the per-tenant streams superpose into
+the request stream — bursty code traffic over steady chat, say. The
+``tenant-arrivals`` scenario is the packaged example.
+
 Named presets combining arrivals with length mixes live in ``SCENARIOS``
 and are built with `scenario_config` — reachable from ``launch/serve.py
 --scenario`` and ``benchmarks/cluster_curves.py``. Recorded traces are a
@@ -63,6 +70,16 @@ class TenantSpec:
             tenant share the same prefix token content (drawn once from a
             dedicated RNG stream), so cross-request KV prefix caching can
             serve it after the first prefill. 0 = no shared prefix.
+        rate: per-tenant mean arrival rate (req/s). When any tenant in
+            the mix sets a positive rate, *every* tenant must: each then
+            drives its own independent arrival process (seeded from
+            ``{seed}:arrivals:{name}``) and the streams superpose —
+            ``weight`` is ignored, the rates set the mix. 0 (the
+            default) keeps the legacy single-stream draw where one
+            shared arrival process tags requests by ``weight``.
+        arrival: per-tenant arrival process (``poisson`` | ``burst`` |
+            ``mmpp`` | ``diurnal``); only read in rate-driven mode.
+            Empty = inherit the workload-level ``arrival``.
     """
 
     name: str
@@ -72,6 +89,8 @@ class TenantSpec:
     out_median: float = 48.0
     out_sigma: float = 1.0
     prefix_len: int = 0
+    rate: float = 0.0
+    arrival: str = ""
 
 
 @dataclass(frozen=True)
@@ -264,8 +283,11 @@ def _pick_tenant(rng: random.Random, wc: WorkloadConfig) -> TenantSpec | None:
 # ---------------------------------------------------------------------------
 
 def _generate_legacy(wc: WorkloadConfig, burst: bool) -> list[Request]:
-    """The original coupled-RNG path (arrivals+lengths+content share one
-    stream); kept byte-identical so old experiment JSONs reproduce."""
+    """The original coupled-RNG generation path.
+
+    Arrivals, lengths and content share one stream; kept byte-identical
+    so old experiment JSONs reproduce.
+    """
     rng = random.Random(wc.seed)
     t = 0.0
     reqs = []
@@ -289,7 +311,10 @@ def generate(wc: WorkloadConfig) -> list[Request]:
     revisions). Every other combination uses four independent streams
     derived from ``wc.seed`` — ``arrivals``, ``lengths``, ``tenants`` and
     ``content`` — so the job-size sequence is invariant under
-    ``request_rate`` (and arrival-process) changes.
+    ``request_rate`` (and arrival-process) changes. Tenant mixes whose
+    specs carry positive ``rate`` values switch to rate-driven
+    superposition (`_generate_per_tenant`): per-tenant arrival processes
+    on per-tenant streams.
     """
     if wc.trace:
         return _generate_from_trace(wc)
@@ -304,6 +329,8 @@ def generate(wc: WorkloadConfig) -> list[Request]:
         if has_prefix:
             raise ValueError("shared prefixes require split_streams=True")
         return _generate_legacy(wc, burst=arrival == "burst")
+    if any(s.rate > 0 for s in wc.tenants):
+        return _generate_per_tenant(wc, arrival)
 
     # string seeding is deterministic across processes (hashed via sha512
     # by random.seed, not PYTHONHASHSEED)
@@ -351,11 +378,84 @@ def generate(wc: WorkloadConfig) -> list[Request]:
     return reqs
 
 
-def _generate_from_trace(wc: WorkloadConfig) -> list[Request]:
-    """Trace-backed generation: load + replay-materialize (lazy import so
-    the workload module stays importable without the traces package).
+def _generate_per_tenant(wc: WorkloadConfig,
+                         default_arrival: str) -> list[Request]:
+    """Rate-driven multi-tenant generation: superposed arrival processes.
 
-    The trace is parsed exactly once; a ``trace_target_rate`` converts
+    Every tenant drives its own arrival process on its own RNG stream
+    (``{seed}:arrivals:{name}``) at its own ``rate``; the per-tenant
+    streams merge in time order (name-tiebroken) and truncate to
+    ``n_requests``. Lengths, token content, and prefix-hit draws also
+    come from per-tenant streams, so changing one tenant's rate or
+    arrival process cannot reshuffle any other tenant's requests — the
+    per-tenant extension of the ``split_streams`` invariance.
+    """
+    if not wc.split_streams:
+        raise ValueError("tenant mixes require split_streams=True")
+    bad = [s.name for s in wc.tenants if s.rate <= 0]
+    if bad:
+        raise ValueError("per-tenant arrival mode needs a positive rate "
+                         f"for every tenant; missing: {bad} (either give "
+                         "all tenants rates or none)")
+    merged: list[tuple[float, str, TenantSpec]] = []
+    for spec in wc.tenants:
+        proc = spec.arrival or default_arrival
+        if proc == "burst":
+            arrivals = [0.0] * wc.n_requests
+        elif proc in _ARRIVALS:
+            rng = random.Random(f"{wc.seed}:arrivals:{spec.name}")
+            arrivals = _ARRIVALS[proc](rng, replace(wc,
+                                                    request_rate=spec.rate))
+        else:
+            raise ValueError(f"unknown arrival process {proc!r} "
+                             f"for tenant {spec.name!r}")
+        merged.extend((t, spec.name, spec) for t in arrivals)
+    # superposition: each tenant over-generates n_requests arrivals; the
+    # merge keeps the earliest n_requests overall. Within one tenant the
+    # merged order equals its arrival order, so the i-th surviving
+    # request of a tenant always consumes that tenant's i-th
+    # length/content draw no matter how the streams interleave.
+    merged.sort(key=lambda x: (x[0], x[1]))
+    merged = merged[:wc.n_requests]
+
+    len_rngs = {s.name: random.Random(f"{wc.seed}:lengths:{s.name}")
+                for s in wc.tenants}
+    tok_rngs = {s.name: random.Random(f"{wc.seed}:content:{s.name}")
+                for s in wc.tenants}
+    hit_rngs = {s.name: random.Random(f"{wc.seed}:prefixhit:{s.name}")
+                for s in wc.tenants}
+    prefixes: dict[str, list[int]] = {}
+
+    def _shared_prefix(name: str, plen: int) -> list[int]:
+        if name not in prefixes:
+            rng = random.Random(f"{wc.seed}:prefix:{name}")
+            prefixes[name] = [rng.randrange(1, wc.vocab)
+                              for _ in range(plen)]
+        return prefixes[name]
+
+    reqs = []
+    for rid, (t, name, spec) in enumerate(merged):
+        plen = sample_prompt_length(len_rngs[name], wc, spec)
+        olen = sample_output_length(len_rngs[name], wc, spec)
+        prompt = [tok_rngs[name].randrange(1, wc.vocab)
+                  for _ in range(plen)]
+        if spec.prefix_len > 0:
+            if hit_rngs[name].random() < wc.prefix_hit:
+                prompt = _shared_prefix(name, spec.prefix_len) + prompt
+            else:       # miss: same footprint, unshareable content
+                prompt = [tok_rngs[name].randrange(1, wc.vocab)
+                          for _ in range(spec.prefix_len)] + prompt
+        reqs.append(Request(rid=rid, arrival=t, prompt=prompt,
+                            true_out_len=olen, max_new_tokens=wc.max_out,
+                            tenant=name))
+    return reqs
+
+
+def _generate_from_trace(wc: WorkloadConfig) -> list[Request]:
+    """Trace-backed generation: load + replay-materialize.
+
+    The traces package is imported lazily so the workload module stays
+    importable without it. The trace is parsed exactly once; a ``trace_target_rate`` converts
     into a rate-scale against the loaded trace's native mean rate here,
     unless an explicit non-default ``trace_rate_scale`` was given.
     """
@@ -401,6 +501,21 @@ SCENARIOS: dict[str, dict] = {
     # memory and chunked prefill rather than decode
     "long-context": dict(arrival="poisson", prompt_mean=400.0,
                          prompt_sigma=0.8, out_median=96.0),
+    # rate-driven multi-tenant mix: each tenant owns an independent
+    # arrival process (steady chat, bursty code spikes, diurnal batch
+    # summarization) and the streams superpose. Rates below are
+    # *relative* shares — scenario_config rescales them so their sum
+    # equals the requested aggregate request_rate.
+    "tenant-arrivals": dict(arrival="poisson", tenants=(
+        TenantSpec("chat", 0.6, prompt_mean=44.0, out_median=48.0,
+                   rate=6.0, arrival="poisson"),
+        TenantSpec("code", 0.3, prompt_mean=120.0, prompt_sigma=0.5,
+                   out_median=128.0, out_sigma=0.8,
+                   rate=3.0, arrival="mmpp"),
+        TenantSpec("summarize", 0.1, prompt_mean=400.0, prompt_sigma=0.4,
+                   out_median=24.0, out_sigma=0.5,
+                   rate=1.0, arrival="diurnal"),
+    )),
     # multi-tenant mix where every tenant carries a fixed system prompt
     # (RAG preamble / tool schema / style guide): the cross-request
     # prefix-cache scenario. Prefix lengths are page-aligned (multiples
@@ -458,4 +573,15 @@ def scenario_config(name: str, *, n_requests: int, request_rate: float,
     wc = WorkloadConfig(n_requests=n_requests, request_rate=request_rate,
                         seed=seed, vocab=vocab, split_streams=True,
                         **SCENARIOS[name])
-    return replace(wc, **overrides) if overrides else wc
+    if overrides:
+        wc = replace(wc, **overrides)
+    # rate-driven tenant mixes carry *relative* rates in the preset;
+    # rescale so the superposed aggregate equals request_rate (an
+    # explicit tenants= override passes through untouched)
+    if ("tenants" not in overrides and request_rate > 0
+            and any(s.rate > 0 for s in wc.tenants)):
+        total = sum(s.rate for s in wc.tenants)
+        wc = replace(wc, tenants=tuple(
+            replace(s, rate=s.rate * request_rate / total)
+            for s in wc.tenants))
+    return wc

@@ -1,0 +1,411 @@
+"""Prefill/decode disaggregation tests: engine export/import primitives,
+router pool dispatch, page conservation under adversarial interleavings
+(hypothesis), per-tenant arrival streams, and real-mode token parity
+across a mid-decode migration."""
+
+import copy
+
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro.cluster import Router, RouterConfig, run_cluster
+from repro.config import get_config, get_smoke_config
+from repro.metrics import EventLog, check_invariants
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.workload import (TenantSpec, WorkloadConfig, generate,
+                                    scenario_config)
+
+CFG = get_config("granite-3-8b")
+HW = HardwareSpec(name="compute-bound-2tf", peak_flops=2e12, hbm_bw=819e9,
+                  overhead_s=2e-4)
+
+
+def workload(n=30, rate=4.0, seed=0, scenario="poisson"):
+    wc = scenario_config(scenario, n_requests=n, request_rate=rate,
+                         seed=seed, vocab=CFG.vocab_size)
+    return generate(wc)
+
+
+def _paged_engine(seed=0, prefill_only=False, **kw):
+    return Engine(CFG, EngineConfig(policy="trail", kv_layout="paged",
+                                    hardware=HW, seed=seed,
+                                    prefill_only=prefill_only, **kw))
+
+
+def _check_partition(bm):
+    """The refcount-partition invariant: every physical page is exactly
+    one of free-listed, reusable, or owned with refcount == #owners."""
+    counts = {}
+    for ps in bm.pages.values():
+        for p in ps:
+            counts[p] = counts.get(p, 0) + 1
+    for p, c in counts.items():
+        assert bm.refcount[p] == c, f"page {p}: refcount != owners"
+    free, reusable, used = set(bm.free), set(bm._reusable), set(counts)
+    assert len(bm.free) == len(free)
+    assert not (free & reusable) and not (free & used)
+    assert not (reusable & used)
+    assert len(free) + len(reusable) + len(used) == bm.num_pages
+
+
+# ---------------------------------------------------------------------------
+# engine primitives: export / import / parking
+# ---------------------------------------------------------------------------
+
+def test_prefill_only_requires_page_retention():
+    with pytest.raises(ValueError):
+        Engine(CFG, EngineConffig := EngineConfig(kv_layout="contig",
+                                                  prefill_only=True))
+    del EngineConffig
+
+
+def test_prefill_only_parks_and_exports():
+    """A prefill-only engine finishes prefills, parks them (no decode
+    tokens), and export hands back a KVHandoff that empties the source."""
+    eng = _paged_engine(prefill_only=True)
+    reqs = workload(n=4, rate=100.0)
+    for r in copy.deepcopy(reqs):
+        eng.submit(r)
+    for _ in range(200):
+        if len(eng.handoff_ready()) == len(reqs):
+            break
+        eng.step()
+    ready = eng.handoff_ready()
+    assert len(ready) == len(reqs)
+    # parked in arrival order, no generated tokens, prefill complete
+    assert ready == sorted(ready)
+    for rid in list(ready):
+        h = eng.export_request(rid)
+        assert h.req.rid == rid
+        assert h.kv_tokens > 0 and h.n_pages > 0 and h.nbytes > 0
+        assert not h.req.generated
+    assert eng.blocks.used_pages() == 0      # zero-leak on the source
+    assert not eng.has_work()
+
+
+def test_prefill_only_run_is_refused():
+    eng = _paged_engine(prefill_only=True)
+    with pytest.raises(ValueError):
+        eng.run([])
+
+
+def test_export_import_roundtrip_preserves_progress():
+    """Import resumes from the shipped KV: arrival and prefill progress
+    survive, and the destination serves the request to completion
+    without re-prefilling the shipped tokens."""
+    src = _paged_engine(seed=0, prefill_only=True)
+    dst = _paged_engine(seed=1)
+    reqs = workload(n=3, rate=50.0)
+    for r in copy.deepcopy(reqs):
+        src.submit(r)
+    while len(src.handoff_ready()) < len(reqs):
+        src.step()
+    prefilled_src = src.stats.prefilled_tokens
+    assert prefilled_src > 0
+    for rid in list(src.handoff_ready()):
+        h = src.export_request(rid)
+        got = dst.import_request(h, t=src.now)
+        assert got == h.kv_tokens
+    done = []
+    while dst.has_work():
+        done.extend(dst.step().completed)
+    assert sorted(r.rid for r in done) == sorted(r.rid for r in reqs)
+    # the destination decoded from the shipped KV: its own prefill work
+    # is at most the final prompt token per request, not the prompts
+    assert dst.stats.prefilled_tokens <= len(reqs)
+    assert src.blocks.used_pages() == 0
+    assert dst.blocks.used_pages() == 0
+
+
+def test_import_rejects_duplicate_rid():
+    src = _paged_engine(prefill_only=True)
+    dst = _paged_engine(seed=1)
+    reqs = workload(n=2, rate=50.0)
+    for r in copy.deepcopy(reqs):
+        src.submit(r)
+    while not src.handoff_ready():
+        src.step()
+    rid = src.handoff_ready()[0]
+    h = src.export_request(rid)
+    dst.import_request(h)
+    with pytest.raises(ValueError):
+        dst.import_request(h)
+
+
+def test_export_mid_decode_from_regular_engine():
+    """export_request doubles as suspended-request migration: a regular
+    (non-prefill-only) engine can export a request mid-decode."""
+    src = _paged_engine(seed=0)
+    dst = _paged_engine(seed=1)
+    reqs = workload(n=3, rate=100.0)
+    for r in copy.deepcopy(reqs):
+        src.submit(r)
+    # step until someone has decoded a few tokens but nobody finished
+    target = None
+    for _ in range(500):
+        src.step()
+        live = [r for r in src._pool_reqs.values()
+                if not r.done and r.generated]
+        if live:
+            target = max(live, key=lambda r: len(r.generated))
+            break
+    assert target is not None
+    h = src.export_request(target.rid)
+    assert h.kv_tokens > 0
+    dst.import_request(h, t=src.now)
+    while src.has_work():
+        src.step()
+    done = []
+    while dst.has_work():
+        done.extend(dst.step().completed)
+    assert [r.rid for r in done] == [target.rid]
+    assert src.blocks.used_pages() == 0 and dst.blocks.used_pages() == 0
+
+
+# ---------------------------------------------------------------------------
+# router: disagg topology and dispatch
+# ---------------------------------------------------------------------------
+
+def _replicas(p, n):
+    out = []
+    for i in range(n):
+        out.append(_paged_engine(seed=i, prefill_only=i < p))
+    return out
+
+
+def test_router_validates_disagg_topology():
+    with pytest.raises(ValueError):        # P >= n_replicas
+        Router(_replicas(2, 2), RouterConfig(n_replicas=2, policy="jspw",
+                                             prefill_replicas=2))
+    with pytest.raises(ValueError):        # pool/flag mismatch
+        Router(_replicas(0, 2), RouterConfig(n_replicas=2, policy="jspw",
+                                             prefill_replicas=1))
+
+
+def test_disagg_cluster_end_to_end():
+    """Every request prefills on the P-pool, migrates exactly once, and
+    finishes on the D-pool; both pools drain to zero pages and the merged
+    event log keeps its lifecycle invariants."""
+    reqs = workload(n=30, rate=4.0, scenario="bursty")
+    stats = run_cluster(CFG, reqs, router_policy="jspw", n_replicas=3,
+                        policy="trail", kv_layout="paged", hardware=HW,
+                        seed=0, prefill_replicas=1, record_events=True)
+    assert len(stats.latencies) == len(reqs)
+    assert stats.n_handoffs == len(reqs)
+    assert stats.handoff_pages > 0
+    assert stats.leaked_pages == [0, 0, 0]
+    check_invariants(stats.event_log)
+    # prefill replicas never emit tokens; decode replicas never prefill
+    # more than the per-request final prompt token
+    per = stats.replica_summaries
+    assert per[0]["prefilled_tokens"] > 0
+    kinds = {}
+    for e in stats.event_log.events:
+        kinds.setdefault(e.kind, 0)
+        kinds[e.kind] += 1
+    assert kinds.get("handoff", 0) == len(reqs)
+    assert kinds["finish"] == len(reqs)
+
+
+def test_disagg_zero_prefill_replicas_is_colocated():
+    """prefill_replicas=0 must be the exact colocated code path."""
+    reqs = workload(n=20, rate=4.0)
+    a = run_cluster(CFG, reqs, router_policy="jspw", n_replicas=2,
+                    policy="trail", kv_layout="paged", hardware=HW, seed=0)
+    b = run_cluster(CFG, reqs, router_policy="jspw", n_replicas=2,
+                    policy="trail", kv_layout="paged", hardware=HW, seed=0,
+                    prefill_replicas=0)
+    assert a.latencies == b.latencies and a.ttfts == b.ttfts
+    assert b.n_handoffs == 0
+
+
+def test_disagg_ttft_counts_prefill_replica_first_token():
+    """TTFT must be measured at the *decode* replica's first emitted
+    token, after the transfer delay — never reset by migration. The
+    merged log orders arrival <= handoff <= first_token per request."""
+    reqs = workload(n=10, rate=2.0)
+    stats = run_cluster(CFG, reqs, router_policy="jspw", n_replicas=2,
+                        policy="trail", kv_layout="paged", hardware=HW,
+                        seed=0, prefill_replicas=1, record_events=True)
+    for rid, evs in stats.event_log.per_request().items():
+        first = {}
+        for e in evs:
+            first.setdefault(e.kind, e.t)
+        assert first["arrival"] <= first["handoff"] <= first["first_token"]
+
+
+# ---------------------------------------------------------------------------
+# page conservation under adversarial interleavings (hypothesis)
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 9)),
+                min_size=1, max_size=60))
+@settings(max_examples=25, deadline=None)
+def test_handoff_any_interleaving_conserves_pages(ops):
+    """Any interleaving of source steps, destination steps, exports,
+    imports, cancels (on either side), and a source crash keeps the
+    refcount partition intact on both engines, and draining both ends
+    with zero resident pages everywhere."""
+    reqs = workload(n=8, rate=50.0, seed=3)
+    src = _paged_engine(seed=0, prefill_only=True, max_batch=4)
+    dst = _paged_engine(seed=1, max_batch=4)
+    for r in copy.deepcopy(reqs):
+        src.submit(r)
+    rids = [r.rid for r in reqs]
+    for op, k in ops:
+        if op == 0:
+            src.step()
+        elif op == 1:
+            dst.step()
+        elif op == 2:                       # export->import next ready
+            ready = src.handoff_ready()
+            if ready:
+                h = src.export_request(ready[0])
+                dst.import_request(h, t=max(src.now, dst.now))
+        elif op == 3:                       # cancel wherever it lives
+            rid = rids[k % len(rids)]
+            src.cancel(rid) or dst.cancel(rid)
+        else:                               # crash the source mid-flight
+            src.crash()
+        _check_partition(src.blocks)
+        _check_partition(dst.blocks)
+    # drain: migrate everything still parked, finish the decode side
+    while src.has_work():
+        src.step()
+        for rid in list(src.handoff_ready()):
+            h = src.export_request(rid)
+            dst.import_request(h, t=max(src.now, dst.now))
+    while dst.has_work():
+        dst.step()
+    _check_partition(src.blocks)
+    _check_partition(dst.blocks)
+    assert src.blocks.used_pages() == 0
+    assert dst.blocks.used_pages() == 0
+
+
+# ---------------------------------------------------------------------------
+# per-tenant arrival processes (workload synthesis)
+# ---------------------------------------------------------------------------
+
+def test_tenant_arrivals_scenario_superposes():
+    wc = scenario_config("tenant-arrivals", n_requests=150,
+                         request_rate=10.0, seed=2, vocab=500)
+    assert sum(s.rate for s in wc.tenants) == pytest.approx(10.0)
+    reqs = generate(wc)
+    assert len(reqs) == 150
+    names = {r.tenant for r in reqs}
+    assert names == {"chat", "code", "summarize"}
+    assert all(a.arrival <= b.arrival for a, b in zip(reqs, reqs[1:]))
+    assert [r.rid for r in reqs] == list(range(150))
+
+
+def test_per_tenant_streams_are_independent():
+    """Changing one tenant's rate must not reshuffle another tenant's
+    length/content draws — the per-tenant split-stream invariance."""
+    base = scenario_config("tenant-arrivals", n_requests=120,
+                           request_rate=8.0, seed=5, vocab=500)
+    from dataclasses import replace
+    bumped = replace(base, tenants=tuple(
+        replace(s, rate=s.rate * 4) if s.name == "chat" else s
+        for s in base.tenants))
+
+    def sig(reqs, name):
+        return [(len(r.prompt), r.true_out_len, tuple(r.prompt[:4]))
+                for r in reqs if r.tenant == name]
+
+    a, b = generate(base), generate(bumped)
+    for name in ("code", "summarize"):
+        sa, sb = sig(a, name), sig(b, name)
+        n = min(len(sa), len(sb))
+        assert sa[:n] == sb[:n]
+
+
+def test_per_tenant_burst_and_validation():
+    tenants = (TenantSpec("a", 1.0, rate=5.0, arrival="burst"),
+               TenantSpec("b", 1.0, rate=5.0))
+    wc = WorkloadConfig(n_requests=40, request_rate=10.0, seed=1,
+                        split_streams=True, tenants=tenants, vocab=300)
+    reqs = generate(wc)
+    assert len(reqs) == 40
+    # the burst tenant fills the head of the merged stream at t=0
+    assert all(r.tenant == "a" and r.arrival == 0.0 for r in reqs[:5])
+    # mixed rate-driven and weight-driven tenants is an error
+    bad = (TenantSpec("a", 1.0, rate=5.0), TenantSpec("b", 1.0))
+    with pytest.raises(ValueError, match="positive rate"):
+        generate(WorkloadConfig(n_requests=10, split_streams=True,
+                                tenants=bad, vocab=300))
+    # unknown per-tenant process is an error
+    ugly = (TenantSpec("a", 1.0, rate=5.0, arrival="nope"),)
+    with pytest.raises(ValueError, match="unknown arrival"):
+        generate(WorkloadConfig(n_requests=10, split_streams=True,
+                                tenants=ugly, vocab=300))
+
+
+# ---------------------------------------------------------------------------
+# real mode: migrated pages reproduce the unmigrated token stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.real
+def test_real_mode_migration_token_parity():
+    """Greedy decode resumed from shipped KV pages must emit exactly the
+    tokens the unmigrated run emits — the device-level proof that
+    export/import moves byte-equivalent KV."""
+    import jax
+
+    from repro.models.model import Model
+    from repro.serving.predictors import ProbePredictor
+
+    cfg = get_smoke_config("trail-llama")
+    m = Model(cfg)
+    params = m.init(jax.random.key(0))
+    wc = WorkloadConfig(n_requests=4, request_rate=50.0, seed=2,
+                        vocab=cfg.vocab_size, prompt_mean=6.0,
+                        out_median=8.0, max_out=12, split_streams=True)
+    reqs = generate(wc)
+
+    def make(seed):
+        pred = ProbePredictor(cfg.probe, probe_params=params["probe"],
+                              embed_table=params["embed"])
+        ecfg = EngineConfig(policy="trail", max_batch=3, mode="real",
+                            kv_layout="paged", page_size=8, max_len=64,
+                            seed=seed)
+        return Engine(cfg, ecfg, predictor=pred, model=m, params=params)
+
+    # baseline: no migration
+    base = make(0)
+    for r in sorted(copy.deepcopy(reqs), key=lambda r: r.arrival):
+        base.submit(r)
+    done = []
+    while base.has_work():
+        done.extend(base.step().completed)
+    want = {r.rid: list(r.generated) for r in done}
+
+    # migrated: decode a few tokens on A, ship mid-decode to B
+    a, b = make(0), make(1)
+    for r in sorted(copy.deepcopy(reqs), key=lambda r: r.arrival):
+        a.submit(r)
+    target = None
+    for _ in range(200):
+        a.step()
+        live = [r for r in a._pool_reqs.values()
+                if not r.done and r.generated]
+        if live:
+            target = max(live, key=lambda r: len(r.generated))
+            break
+    assert target is not None and not target.done
+    pre = len(target.generated)
+    h = a.export_request(target.rid)
+    assert h.payload is not None            # real mode ships page data
+    b.import_request(h, t=a.now)
+    got = dict()
+    while a.has_work():
+        for r in a.step().completed:
+            got[r.rid] = list(r.generated)
+    while b.has_work():
+        for r in b.step().completed:
+            got[r.rid] = list(r.generated)
+    assert set(got) == set(want)
+    assert got[target.rid] == want[target.rid]
+    assert len(want[target.rid]) > pre      # genuinely resumed mid-stream
+    assert a.blocks.used_pages() == 0 and b.blocks.used_pages() == 0
