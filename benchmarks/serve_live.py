@@ -1,0 +1,252 @@
+"""Closed-loop serving benchmark: trail vs fcfs under rising concurrency.
+
+The front-door counterpart of ``trace_replay.py``: instead of replaying
+a fixed open-loop arrival tape, pools of think-time users
+(`repro.clients`) drive a single engine closed-loop — each user waits
+for their stream to finish before thinking up the next request — so the
+offered load self-throttles with latency, the regime an online server
+actually lives in. Policy x concurrency cells report user-perceived
+completion / TTFT / TBT percentiles and goodput; admission-watermark
+cells add the 429/shed backpressure path with client retries.
+
+What it shows: closed loops *compress* the policy gap at low
+concurrency (users can't pile up work they are still waiting on) and
+reopen it as the pool grows — at the headline concurrency TRAIL's
+predicted-SRPT ordering beats FCFS on mean completion while FCFS keeps
+its no-preemption p99 edge, the same inversion the open-loop trace
+shows.
+
+In-script gates (any failure refuses to write artifacts):
+
+1. **off-is-free** — the committed ``BENCH_trace_replay.json`` headline
+   cells must be byte-identical when re-run on this engine, and a run
+   with a no-op ``on_token`` subscriber on every request must match a
+   subscriber-free run byte-for-byte (the new streaming hooks cost
+   nothing when unused and change nothing when used).
+2. **determinism** — the headline closed-loop cell runs twice and must
+   produce byte-identical summaries (the virtual-time path is exact).
+3. **termination** — every issued logical request ends in exactly one
+   terminal outcome (``finish`` xor ``lost``), counts reconcile, and
+   the event log passes ``check_invariants``.
+4. **policy gate** — trail strictly beats fcfs on mean completion at
+   the headline concurrency.
+5. **watermark gate** — shed events appear only above the admission
+   watermark: zero at the low-concurrency admission cell (and in every
+   watermark-free cell), nonzero at the headline admission cell.
+
+Writes ``experiments/results/serve_live.json`` and the headline
+``BENCH_serve_live.json``.
+
+    PYTHONPATH=src python -m benchmarks.serve_live --quick
+    PYTHONPATH=src python -m benchmarks.serve_live --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.common import emit, save_json
+from benchmarks.trace_replay import (HEADLINE_SCALE, HW, SEED, _cell_summary,
+                                     _make_cfg, _run_cell)
+from repro.clients import ClientPoolConfig, run_closed_loop
+from repro.metrics import EventLog, check_invariants
+from repro.serving.engine import Engine, EngineConfig
+from repro.traces import load_trace
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+POLICIES = ("trail", "fcfs")
+#: Pool sizes bracketing the knee: 8 users barely queue, 96 saturate
+#: the decode batch on this hardware (tpu-v5e, granite-3-8b).
+CONCURRENCIES = (8, 32, 96)
+HEADLINE_CLIENTS = 96
+#: Predicted-token admission watermark for the backpressure cells —
+#: far above the 8-user backlog, far below the 96-user peak.
+WATERMARK = 3000.0
+THINK_S = 2.0
+REQUESTS_PER_CLIENT = 4
+
+
+def _pool_cfg(n_clients: int, rpc: int, **kw) -> ClientPoolConfig:
+    """The benchmark's pool shape at ``n_clients`` users."""
+    return ClientPoolConfig(n_clients=n_clients, requests_per_client=rpc,
+                            think_time_s=THINK_S, seed=SEED, **kw)
+
+
+def _run_pool_cell(cfg, policy: str, pool: ClientPoolConfig,
+                   watermark: float = 0.0) -> tuple[dict, object]:
+    """One closed-loop cell; returns (summary dict, engine stats)."""
+    log = EventLog()
+    eng = Engine(cfg, EngineConfig(policy=policy, hardware=HW, seed=SEED,
+                                   shed_watermark=watermark,
+                                   admission_control=watermark > 0),
+                 event_log=log)
+    stats = run_closed_loop(eng, pool)
+    check_invariants(log)
+    summary = stats.summary()
+    # gate 3: termination — exactly one terminal outcome per request
+    expected = pool.n_clients * pool.requests_per_client
+    bad = [r for r in stats.records if r.outcome not in ("finish", "lost")]
+    if bad or summary["issued"] != expected:
+        raise SystemExit(
+            f"termination violated at {policy}/{pool.n_clients}: "
+            f"{len(bad)} unterminated, issued {summary['issued']} != "
+            f"{expected}")
+    if summary["finished"] + summary["lost"] != summary["issued"]:
+        raise SystemExit("outcome counts do not reconcile")
+    summary["shed_events"] = eng.stats.n_shed
+    if watermark == 0.0 and eng.stats.n_shed:
+        raise SystemExit("shed events without an admission watermark")
+    return summary, eng.stats
+
+
+def _identity_gate(cfg, trace, cells, limit, committed) -> None:
+    """Gate 1: streaming hooks leave trace-replay cells byte-identical.
+
+    Each cell runs twice through the trace-replay pipeline: once plain,
+    once with a no-op ``on_token`` subscriber attached to every
+    submitted request (so the ``_notify`` dispatch actually runs). Both
+    must match each other — and the committed artifact, when present —
+    byte-for-byte.
+    """
+    from repro.metrics import ideal_service_times, rollup
+    from repro.serving.costmodel import CostModel
+    from repro.traces import ReplayConfig, replay, requests_from_trace
+    for scale, pol in cells:
+        base, _ = _run_cell(cfg, trace, pol, scale, limit=limit)
+        log = EventLog()
+        eng = Engine(cfg, EngineConfig(policy=pol, hardware=HW, seed=SEED),
+                     event_log=log)
+        submit = eng.submit
+
+        def subscribe_submit(req, _s=submit, _e=eng):
+            _s(req)
+            _e.on_token(req.rid, lambda t, k, v: None)
+
+        eng.submit = subscribe_submit
+        rcfg = ReplayConfig(rate_scale=scale, seed=SEED,
+                            vocab=cfg.vocab_size, limit=limit)
+        reqs = requests_from_trace(trace, rcfg)
+        replay(eng, reqs)
+        check_invariants(log)
+        service = ideal_service_times(CostModel(cfg, HW), reqs)
+        sub_cell = _cell_summary(rollup(log, service_times=service))
+        base_cell = _cell_summary(base)
+        fresh = (json.dumps(base_cell, sort_keys=True)
+                 == json.dumps(sub_cell, sort_keys=True))
+        vs_committed = True
+        if committed is not None:
+            vs_committed = (json.dumps(committed[f"scale={scale}.{pol}"],
+                                       sort_keys=True)
+                            == json.dumps(base_cell, sort_keys=True))
+        emit(f"serve_live.identity.scale={scale}.{pol}", 0.0,
+             f"fresh={fresh};committed={vs_committed}")
+        if not (fresh and vs_committed):
+            raise SystemExit(
+                "off-is-free violated: on_token hooks changed a "
+                f"trace-replay cell (scale={scale}, {pol}, "
+                f"fresh={fresh}, committed={vs_committed})")
+
+
+def run(quick: bool = True, smoke: bool = False):
+    """Run the gated closed-loop sweep; returns the artifact payload."""
+    cfg = _make_cfg()
+    trace = load_trace("sample")
+    results: dict = {}
+
+    # -- gate 1: off-is-free ------------------------------------------
+    if smoke:
+        identity_cells, limit, committed = [(16.0, "trail")], 60, None
+    else:
+        identity_cells = [(HEADLINE_SCALE, "trail"),
+                          (HEADLINE_SCALE, "fcfs")]
+        limit = None
+        bench_path = os.path.join(ROOT, "BENCH_trace_replay.json")
+        committed = None
+        if os.path.exists(bench_path):
+            with open(bench_path) as f:
+                committed = json.load(f)["grid"]
+    _identity_gate(cfg, trace, identity_cells, limit, committed)
+
+    # -- closed-loop policy x concurrency grid -------------------------
+    concs = (8,) if smoke else CONCURRENCIES
+    rpc = 2 if smoke else REQUESTS_PER_CLIENT
+    headline_n = concs[-1]
+    for n in concs:
+        for pol in POLICIES:
+            summary, _ = _run_pool_cell(cfg, pol, _pool_cfg(n, rpc))
+            key = f"clients={n}.{pol}"
+            results[key] = summary
+            emit(f"serve_live.{key}", summary["completion_s"]["mean"] * 1e6,
+                 f"goodput={summary['goodput_rps']};"
+                 f"p99={summary['completion_s']['p99']}")
+
+    # -- gate 2: virtual-time determinism ------------------------------
+    again, _ = _run_pool_cell(cfg, "trail", _pool_cfg(headline_n, rpc))
+    if (json.dumps(again, sort_keys=True)
+            != json.dumps(results[f"clients={headline_n}.trail"],
+                          sort_keys=True)):
+        raise SystemExit("closed-loop headline cell is nondeterministic")
+
+    # -- gate 4: trail beats fcfs at the headline concurrency ----------
+    t_mean = results[f"clients={headline_n}.trail"]["completion_s"]["mean"]
+    f_mean = results[f"clients={headline_n}.fcfs"]["completion_s"]["mean"]
+    if not smoke and not t_mean < f_mean:
+        raise SystemExit(f"policy gate violated: trail mean {t_mean} !< "
+                         f"fcfs mean {f_mean} at {headline_n} clients")
+
+    # -- gate 5: shed only above the watermark -------------------------
+    admission = {}
+    for n in (concs[0], headline_n) if not smoke else (concs[0],):
+        summary, _ = _run_pool_cell(
+            cfg, "trail", _pool_cfg(n, rpc, max_retries=2), WATERMARK)
+        admission[f"clients={n}"] = summary
+        emit(f"serve_live.admission.clients={n}", 0.0,
+             f"shed={summary['shed_events']};lost={summary['lost']}")
+    low = admission[f"clients={concs[0]}"]
+    if low["shed_events"] != 0:
+        raise SystemExit(f"watermark gate violated: {low['shed_events']} "
+                         f"shed events below the watermark")
+    if not smoke:
+        high = admission[f"clients={headline_n}"]
+        if high["shed_events"] == 0:
+            raise SystemExit("watermark gate violated: overloaded "
+                             "admission cell never shed")
+    results["admission"] = admission
+
+    headline = {
+        "clients": headline_n,
+        "trail_mean_completion_s": t_mean,
+        "fcfs_mean_completion_s": f_mean,
+        "speedup": round(f_mean / t_mean, 3) if t_mean else 0.0,
+        "trail_goodput_rps":
+            results[f"clients={headline_n}.trail"]["goodput_rps"],
+    }
+    payload = {
+        "meta": {"model": "granite-3-8b", "hardware": "tpu-v5e",
+                 "seed": SEED, "think_time_s": THINK_S,
+                 "requests_per_client": rpc, "watermark": WATERMARK,
+                 "concurrencies": list(concs)},
+        "headline": headline,
+        "grid": results,
+    }
+    if not smoke:
+        save_json("serve_live", results)
+        if quick:
+            with open(os.path.join(ROOT, "BENCH_serve_live.json"),
+                      "w") as f:
+                json.dump(payload, f, indent=1)
+    return payload
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="the checked-in artifact grid (the default)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal CI smoke (no artifact rewrite)")
+    args = ap.parse_args()
+    out = run(quick=not args.smoke, smoke=args.smoke)
+    print(json.dumps(out["headline"], indent=1))

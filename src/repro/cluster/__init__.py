@@ -1,7 +1,7 @@
-"""Multi-replica cluster serving: a router dispatching a shared arrival
-stream across N independent `Engine` replicas in virtual time.
+"""Multi-replica cluster serving: a router over N engines.
 
-The paper evaluates SPRPT-LP on a single instance; its companion work
+A `Router` dispatches a shared arrival stream across N independent
+`Engine` replicas in virtual time. The paper evaluates SPRPT-LP on a single instance; its companion work
 (Mitzenmacher & Shahout, arXiv:2503.07545) frames prediction-based
 scheduling as a multi-server queueing problem. This package supplies the
 multi-server half: `Router` (dispatch policies, including

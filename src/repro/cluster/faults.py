@@ -57,9 +57,11 @@ class ReplicaCrash:
 
 @dataclass(frozen=True)
 class SlowdownWindow:
-    """A straggler window: ``replica`` runs ``factor`` x slower in
-    ``[start, end)`` (megastep times dilate; the router also excludes
-    it from dispatch while degraded)."""
+    """A straggler window: ``replica`` runs ``factor`` x slower.
+
+    In ``[start, end)`` megastep times dilate; the router also excludes
+    the replica from dispatch while degraded.
+    """
 
     replica: int
     start: float
@@ -77,9 +79,12 @@ class SlowdownWindow:
 
 @dataclass(frozen=True)
 class FlakySubmit:
-    """Transient submit failures: a dispatch to ``replica`` during
-    ``[start, end)`` fails with probability ``fail_rate`` (seeded draw);
-    the router retries the arrival elsewhere."""
+    """Transient submit failures on one replica.
+
+    A dispatch to ``replica`` during ``[start, end)`` fails with
+    probability ``fail_rate`` (seeded draw); the router retries the
+    arrival elsewhere.
+    """
 
     replica: int
     start: float
@@ -131,8 +136,10 @@ class FaultSchedule:
         return None
 
     def slow_factor(self, replica: int, t: float) -> float:
-        """The combined slowdown factor for ``replica`` at time ``t``
-        (1.0 = healthy; overlapping windows multiply)."""
+        """Combined slowdown for ``replica`` at ``t`` (1.0 = healthy).
+
+        Overlapping windows multiply.
+        """
         f = 1.0
         for w in self.slowdowns:
             if w.replica == replica and w.start <= t < w.end:
@@ -140,13 +147,17 @@ class FaultSchedule:
         return f
 
     def degraded(self, replica: int, t: float) -> bool:
-        """True while ``replica`` is inside any slowdown window — the
-        router excludes degraded replicas from dispatch."""
+        """True while ``replica`` is inside any slowdown window.
+
+        The router excludes degraded replicas from dispatch.
+        """
         return self.slow_factor(replica, t) != 1.0
 
     def flaky_rate(self, replica: int, t: float) -> float:
-        """Submit-failure probability for ``replica`` at time ``t``
-        (independent windows compose: fail if any window fails)."""
+        """Submit-failure probability for ``replica`` at time ``t``.
+
+        Independent windows compose: fail if any window fails.
+        """
         ok = 1.0
         for w in self.flaky:
             if w.replica == replica and w.start <= t < w.end:

@@ -295,11 +295,13 @@ class Router:
         return (self.replicas[i].queue_len(), i)
 
     def _candidates(self, t: float, exclude=()) -> list[int]:
-        """Replica indices eligible for dispatch at time ``t``: alive,
-        not excluded, and (fault mode) not inside a straggler window —
-        unless every alive replica is degraded, in which case slow
-        beats nowhere. In a disaggregated topology arrivals (and
-        retries) only ever dispatch into the prefill pool."""
+        """Replica indices eligible for dispatch at time ``t``.
+
+        Alive, not excluded, and (fault mode) not inside a straggler
+        window — unless every alive replica is degraded, in which case
+        slow beats nowhere. In a disaggregated topology arrivals (and
+        retries) only ever dispatch into the prefill pool.
+        """
         pool = (range(self.rc.prefill_replicas)
                 if self.rc.prefill_replicas else range(len(self.replicas)))
         alive = [i for i in pool
@@ -358,11 +360,13 @@ class Router:
         return min(cands, key=lambda i: self._jspw_key(i, r_hat))
 
     def _jspw_key(self, i: int, r_hat: float | None) -> tuple:
-        """The jspw ordering for one replica: predicted interfering work
-        (in ``rc.backlog_unit`` units — estimated seconds divide tokens
-        by the replica's own service rate, the heterogeneous-hardware
-        form), then (on ties) most KV headroom, shortest queue, lowest
-        index."""
+        """The jspw ordering for one replica.
+
+        Predicted interfering work (in ``rc.backlog_unit`` units —
+        estimated seconds divide tokens by the replica's own service
+        rate, the heterogeneous-hardware form), then (on ties) most KV
+        headroom, shortest queue, lowest index.
+        """
         eng = self.replicas[i]
         work = (eng.backlog_seconds(truncate=r_hat)
                 if self.rc.backlog_unit == "seconds"
@@ -371,10 +375,13 @@ class Router:
 
     # -- disaggregation: prefill→decode KV handoffs -----------------------
     def _decode_key(self, i: int, r_hat: float | None) -> tuple:
-        """Transfer-aware jspw for the decode pool: `_jspw_key` plus the
-        predicted tokens of handoffs already queued toward replica ``i``
-        but not yet imported — without them, every handoff in one drain
-        pass would pile onto the same momentarily-idle replica."""
+        """Transfer-aware jspw for the decode pool.
+
+        `_jspw_key` plus the predicted tokens of handoffs already queued
+        toward replica ``i`` but not yet imported — without them, every
+        handoff in one drain pass would pile onto the same
+        momentarily-idle replica.
+        """
         eng = self.replicas[i]
         inflight = self._inflight.get(i, 0.0)
         if self.rc.backlog_unit == "seconds":
@@ -385,8 +392,11 @@ class Router:
         return (work, -eng.kv_headroom(), eng.queue_len(), i)
 
     def _pick_decode(self, handoff, t: float) -> int:
-        """Choose the decode replica for one handoff (alive, preferring
-        non-degraded); -1 when the decode pool is entirely down."""
+        """Choose the decode replica for one handoff.
+
+        Alive, preferring non-degraded; -1 when the decode pool is
+        entirely down.
+        """
         cands = [i for i in range(self.rc.prefill_replicas,
                                   len(self.replicas)) if self._alive[i]]
         if self.faults is not None:
@@ -399,10 +409,11 @@ class Router:
             i, handoff.pred_tokens))
 
     def _drain_handoffs(self):
-        """Export every parked prefill-complete request and enqueue its
-        KV transfer toward a decode replica. Runs at every loop boundary
-        (before the busy scan), so a prefill replica holding only parked
-        work is drained rather than stalling the virtual-time frontier.
+        """Export parked prefill-complete requests toward decode.
+
+        Runs at every loop boundary (before the busy scan), so a prefill
+        replica holding only parked work is drained rather than stalling
+        the virtual-time frontier.
         """
         for i in range(self.rc.prefill_replicas):
             eng = self.replicas[i]
@@ -426,9 +437,11 @@ class Router:
                 self.handoff_pages += h.n_pages
 
     def _deliver_handoff(self):
-        """Pop the due handoff and import it on its destination; a
-        destination that crashed while the transfer was in flight sends
-        the request through the normal failover path instead."""
+        """Pop the due handoff and import it on its destination.
+
+        A destination that crashed while the transfer was in flight
+        sends the request through the normal failover path instead.
+        """
         t_r, _, j, work, h = heapq.heappop(self._handoffq)
         self._inflight[j] = self._inflight.get(j, 0.0) - work
         if self._alive[j]:
@@ -474,11 +487,13 @@ class Router:
 
     # -- fault machinery --------------------------------------------------
     def _apply_faults(self, t_ref: float):
-        """Step-level health check at cluster time ``t_ref``: apply due
-        crashes (drain + requeue the dead replica's requests) and due
-        recoveries. A busy replica crashes at its first megastep
-        boundary at/after the scheduled time; an idle one when the
-        cluster frontier passes it."""
+        """Step-level health check at cluster time ``t_ref``.
+
+        Applies due crashes (drain + requeue the dead replica's
+        requests) and due recoveries. A busy replica crashes at its
+        first megastep boundary at/after the scheduled time; an idle
+        one when the cluster frontier passes it.
+        """
         if self.faults is None:
             return
         for i, eng in enumerate(self.replicas):
@@ -504,8 +519,11 @@ class Router:
                     self.events.emit(c.recover_at, -1, "replica_up", i)
 
     def _charge_retry(self, req: Request, t_fail: float) -> bool:
-        """Spend one retry; False when the budget is exhausted (the
-        request is dropped and counted lost)."""
+        """Spend one retry.
+
+        False when the budget is exhausted (the request is dropped and
+        counted lost).
+        """
         if req.retries >= self.rc.max_retries:
             self.n_lost += 1
             if self.events is not None:
@@ -524,9 +542,11 @@ class Router:
         return True
 
     def _requeue(self, req: Request, t_fail: float):
-        """Failover path: reset a drained request's progress and requeue
-        it with capped exponential backoff (original arrival preserved —
-        completion latency stays user-perceived)."""
+        """Failover path: reset progress and requeue with backoff.
+
+        Capped exponential backoff; the original arrival is preserved,
+        so completion latency stays user-perceived.
+        """
         if not self._charge_retry(req, t_fail):
             return
         backoff = min(self.rc.retry_backoff_s * 2 ** (req.retries - 1),
@@ -538,10 +558,13 @@ class Router:
 
     @staticmethod
     def _reset_for_retry(req: Request):
-        """Wipe engine-side progress so the survivor re-prefills from
-        scratch (its prefix cache makes that cheap for warm prompts).
-        The original ``arrival`` and any already-streamed first-token
-        time are kept — metrics stay user-perceived."""
+        """Wipe engine-side progress for a clean re-prefill.
+
+        The survivor re-prefills from scratch (its prefix cache makes
+        that cheap for warm prompts). The original ``arrival`` and any
+        already-streamed first-token time are kept — metrics stay
+        user-perceived.
+        """
         req.generated = []
         req.entry = SchedEntry(rid=req.rid, arrival=req.arrival,
                                prompt_len=len(req.prompt))
@@ -552,9 +575,11 @@ class Router:
         req.finish_time = -1.0
 
     def _defer_or_drop(self, req: Request, t: float):
-        """No eligible replica: wait for the next scheduled recovery
-        when one exists (not charged as a retry), else the request is
-        lost."""
+        """Handle an arrival with no eligible replica.
+
+        Waits for the next scheduled recovery when one exists (not
+        charged as a retry), else the request is lost.
+        """
         recoveries = []
         if self.faults is not None:
             for i in range(len(self.replicas)):

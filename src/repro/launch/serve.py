@@ -44,6 +44,20 @@ workload.
     PYTHONPATH=src python -m repro.launch.serve --scenario bursty \
         --rate 40 --age-boost 256 --age-delay 5 --deadline 120 \
         --deadline-slack 20
+
+    # online front door: HTTP/SSE server with continuous admission
+    # (curl -N ... POST /v1/generate streams token events back)
+    PYTHONPATH=src python -m repro.launch.serve --serve --port 8100 \
+        --shed-watermark 3000 --admission-control
+
+    # live closed loop: 8 socket clients against the in-process server,
+    # 20x time warp
+    PYTHONPATH=src python -m repro.launch.serve --serve --clients 8 \
+        --think-time 1.0 --time-scale 20
+
+    # deterministic in-process closed loop (virtual clock, no sockets)
+    PYTHONPATH=src python -m repro.launch.serve --clients 64 \
+        --policy trail --think-time 2.0
 """
 
 from __future__ import annotations
@@ -177,6 +191,31 @@ def main():
     ap.add_argument("--max-retries", type=int, default=2,
                     help="cluster failover: per-request retry budget "
                          "before a request is declared lost")
+    ap.add_argument("--serve", action="store_true",
+                    help="run the online front door: an asyncio HTTP/SSE "
+                         "server that admits requests continuously into "
+                         "the engine and streams tokens back (sim mode, "
+                         "single engine; POST /v1/generate, GET /healthz, "
+                         "GET /metrics)")
+    ap.add_argument("--port", type=int, default=None,
+                    help="front-door TCP port (default 8100; 0 = "
+                         "OS-assigned; requires --serve)")
+    ap.add_argument("--time-scale", type=float, default=None, metavar="X",
+                    help="virtual seconds the engine clock advances per "
+                         "wall second behind the front door (default 1.0 "
+                         "= real time; requires --serve)")
+    ap.add_argument("--clients", type=int, default=None, metavar="N",
+                    help="closed-loop pool of N think-time users; with "
+                         "--serve they drive the live server over "
+                         "sockets, alone they drive the engine in-process "
+                         "on its virtual clock (deterministic)")
+    ap.add_argument("--think-time", type=float, default=None, metavar="S",
+                    help="mean exponential think time between a user's "
+                         "requests (default 2.0; requires --clients)")
+    ap.add_argument("--requests-per-client", type=int, default=None,
+                    metavar="K",
+                    help="logical requests each user issues (default 4; "
+                         "requires --clients)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--real", action="store_true",
                     help="actually run the model (CPU-sized configs)")
@@ -261,6 +300,64 @@ def main():
             faults = parse_chaos(args.chaos, seed=args.seed)
         except ValueError as e:
             ap.error(str(e))
+    serve_mode = args.serve or args.clients is not None
+    if args.port is not None:
+        if not args.serve:
+            ap.error("--port requires --serve (it binds the front-door "
+                     "listener)")
+        if not 0 <= args.port <= 65535:
+            ap.error("--port must be in [0, 65535] (0 = OS-assigned)")
+    if args.time_scale is not None:
+        if not args.serve:
+            ap.error("--time-scale requires --serve (the in-process "
+                     "closed loop already runs on the virtual clock)")
+        if args.time_scale <= 0:
+            ap.error("--time-scale must be positive")
+    if args.clients is not None and args.clients <= 0:
+        ap.error("--clients must be a positive user count")
+    if args.think_time is not None:
+        if args.clients is None:
+            ap.error("--think-time requires --clients (it is the pool's "
+                     "mean think time)")
+        if args.think_time < 0:
+            ap.error("--think-time must be >= 0")
+    if args.requests_per_client is not None:
+        if args.clients is None:
+            ap.error("--requests-per-client requires --clients")
+        if args.requests_per_client <= 0:
+            ap.error("--requests-per-client must be positive")
+    if serve_mode:
+        mode_flags = "--serve/--clients"
+        for flag, bad in (("--trace", args.trace),
+                          ("--scenario", args.scenario),
+                          ("--burst", args.burst),
+                          ("--disagg", args.disagg),
+                          ("--chaos", args.chaos),
+                          ("--real", args.real),
+                          ("--metrics-out", args.metrics_out)):
+            if bad:
+                ap.error(f"{mode_flags} run a live closed loop over one "
+                         f"sim engine and conflict with {flag} (the "
+                         "clients are the workload; GET /metrics serves "
+                         "the live rollup)")
+        if args.replicas > 1:
+            ap.error(f"{mode_flags} drive a single engine; the cluster "
+                     "router is not behind the front door yet (drop "
+                     "--replicas)")
+        policy = args.policy
+        pred_spec = args.predictor or ""
+        if pred_spec:
+            name = parse_spec(pred_spec)[0]
+            if name not in STRATEGIES:
+                ap.error(f"unknown predictor strategy {name!r}; "
+                         f"choose from {STRATEGIES}")
+            if name == "rank-only" and policy == "trail":
+                policy = "rank"
+        _run_front_door(args, cfg, policy=policy, pred_spec=pred_spec,
+                        c_limit=c_limit, age_boost=age_boost,
+                        age_delay_s=age_delay,
+                        deadline_slack_s=deadline_slack)
+        return
     if args.trace:
         if args.real:
             ap.error("--trace replay is sim-only (trace lengths "
@@ -394,6 +491,84 @@ def main():
     if args.metrics_out:
         _write_metrics(args.metrics_out, event_log, cfg, hardware, reqs,
                        kv_layout=kv_layout)
+
+
+def _run_front_door(args, cfg, *, policy, pred_spec, c_limit, age_boost,
+                    age_delay_s, deadline_slack_s):
+    """Run the online front door / closed-loop client modes.
+
+    Three shapes, all over one sim engine built from the shared CLI
+    knobs: ``--serve`` alone binds the HTTP/SSE server and serves until
+    interrupted; ``--serve --clients N`` additionally drives it with a
+    live socket pool and prints the closed-loop summary; ``--clients N``
+    alone runs the deterministic in-process closed loop on the engine's
+    virtual clock.
+    """
+    from repro.clients import (ClientPoolConfig, run_closed_loop,
+                               run_live_pool)
+    from repro.metrics import EventLog
+    from repro.serving.engine import Engine, EngineConfig
+    hardware = (HardwareSpec(name="compute-bound-2tf", peak_flops=2e12,
+                             hbm_bw=819e9, overhead_s=2e-4)
+                if args.compute_bound else HardwareSpec())
+    mem_budget = int(args.mem_gb * 1e9) if args.mem_gb else 1 << 62
+    kv_layout = args.kv_layout or ("paged" if args.prefix_cache or args.tail
+                                   else "contig")
+    engine = Engine(cfg, EngineConfig(
+        policy=policy, c_limit=c_limit, max_batch=args.max_batch,
+        mem_budget=mem_budget, kv_layout=kv_layout,
+        prefix_cache=args.prefix_cache, predictor=pred_spec,
+        hardware=hardware, seed=args.seed, deadline_s=args.deadline,
+        ttft_deadline_s=args.ttft_deadline,
+        shed_watermark=args.shed_watermark,
+        admission_control=args.admission_control, age_boost=age_boost,
+        age_delay_s=age_delay_s, deadline_slack_s=deadline_slack_s),
+        event_log=EventLog())
+    pool = ClientPoolConfig(
+        n_clients=args.clients or 0,
+        requests_per_client=args.requests_per_client or 4,
+        think_time_s=(2.0 if args.think_time is None else args.think_time),
+        timeout_s=args.deadline, max_retries=args.max_retries,
+        seed=args.seed)
+    meta = {"arch": cfg.name, "policy": policy,
+            "predictor": pred_spec or "trail-probe"}
+    if not args.serve:
+        stats = run_closed_loop(engine, pool)
+        print(json.dumps({**meta, "mode": "closed-loop",
+                          "clients": pool.n_clients,
+                          **stats.summary()}, indent=1))
+        return
+
+    import asyncio
+
+    from repro.server import EngineServer, ServerConfig
+    scfg = ServerConfig(port=8100 if args.port is None else args.port,
+                        time_scale=args.time_scale or 1.0,
+                        vocab=cfg.vocab_size, seed=args.seed)
+
+    async def _amain():
+        server = EngineServer(engine, scfg)
+        await server.start()
+        if args.clients:
+            try:
+                return await run_live_pool(scfg.host, server.port, pool,
+                                           time_scale=scfg.time_scale)
+            finally:
+                await server.close()
+        print(json.dumps({**meta, "mode": "serve",
+                          "url": f"http://{scfg.host}:{server.port}",
+                          "time_scale": scfg.time_scale}), flush=True)
+        await server.serve_forever()
+
+    try:
+        stats = asyncio.run(_amain())
+    except KeyboardInterrupt:
+        return
+    if stats is not None:
+        print(json.dumps({**meta, "mode": "live",
+                          "clients": pool.n_clients,
+                          "time_scale": scfg.time_scale,
+                          **stats.summary()}, indent=1))
 
 
 def _write_metrics(path: str, event_log, cfg, hardware, reqs,

@@ -461,6 +461,7 @@ class Engine:
         self.stats = EngineStats()
         self._pending: list[Request] = []       # sorted by arrival
         self._p_idx = 0                         # next pending to admit
+        self._subs: dict[int, object] = {}      # rid -> on_token callback
         self._pool_reqs: dict[int, Request] = {}
         self._entries: dict[int, SchedEntry] = {}
         self._now = 0.0
@@ -639,6 +640,41 @@ class Engine:
                                 lo=self._p_idx, key=lambda r: r.arrival)
         self._pending.insert(i, req)
 
+    def on_token(self, rid: int, cb) -> None:
+        """Subscribe a per-request streaming callback.
+
+        ``cb(t, kind, value)`` fires synchronously from inside ``step()``
+        (or ``cancel()``) whenever request ``rid`` emits ``first_token``,
+        ``tokens`` (value = tokens this megastep), ``finish``, or a
+        terminal cancel kind (``cancel`` / ``timeout`` / ``shed``), in
+        emission order. This is the O(1) hook the serving front door uses
+        instead of re-scanning ``StepResult.events`` every megastep. One
+        callback per rid — a second call replaces the first — and the
+        subscription is dropped automatically after a terminal kind
+        (detach earlier with :meth:`off_token`). Works with or without an
+        attached EventLog; engines with no subscribers skip the dispatch
+        entirely, so default runs are unchanged.
+        """
+        self._subs[rid] = cb
+
+    def off_token(self, rid: int) -> None:
+        """Drop the :meth:`on_token` callback for ``rid`` (idempotent)."""
+        self._subs.pop(rid, None)
+
+    def _notify(self, t: float, rid: int, kind: str, value: float = 0.0):
+        """Dispatch one stream event to the rid's subscriber, if any.
+
+        Terminal kinds (``finish`` and the cancel kinds) auto-unsubscribe
+        before the callback runs, so a raising callback cannot leak its
+        subscription and a terminal event is delivered at most once.
+        """
+        cb = self._subs.get(rid)
+        if cb is None:
+            return
+        if kind in ("finish", "cancel", "timeout", "shed"):
+            del self._subs[rid]
+        cb(t, kind, value)
+
     def _admit_arrivals(self, t: float):
         ecfg = self.ecfg
         gate = ecfg.admission_control and ecfg.shed_watermark > 0.0
@@ -658,6 +694,8 @@ class Engine:
                 if self.events is not None:
                     self.events.emit(req.arrival, req.rid, "arrival")
                     self.events.emit(max(t, req.arrival), req.rid, "shed")
+                if self._subs:
+                    self._notify(max(t, req.arrival), req.rid, "shed")
                 continue
             r0 = self.predictor.initial(req)
             req.entry.r0 = r0
@@ -872,8 +910,12 @@ class Engine:
                 r.first_token_time = now_next
                 if ev is not None:
                     ev.emit(now_next, r.rid, "first_token")
+                if self._subs:
+                    self._notify(now_next, r.rid, "first_token")
             if ev is not None and n > 0:
                 ev.emit(now_next, r.rid, "tokens", n)
+            if self._subs and n > 0:
+                self._notify(now_next, r.rid, "tokens", float(n))
             if (len(r.generated) >= r.true_out_len
                     or len(r.generated) >= r.max_new_tokens):
                 r.entry.state = ReqState.FINISHED
@@ -883,6 +925,8 @@ class Engine:
                 completed.append(r)
                 if ev is not None:
                     ev.emit(now_next, r.rid, "finish")
+                if self._subs:
+                    self._notify(now_next, r.rid, "finish")
                 if self.prefix_cache:
                     # publish the finished request's prompt pages before
                     # release parks them in the reusable pool
@@ -1011,6 +1055,8 @@ class Engine:
                     self.events.emit(req.arrival, rid, "arrival")
                     self.events.emit(max(self._now, req.arrival), rid,
                                      reason)
+                if self._subs:
+                    self._notify(max(self._now, req.arrival), rid, reason)
                 return True
         req = self._pool_reqs.get(rid)
         if req is None or req.done:
@@ -1042,6 +1088,8 @@ class Engine:
         self._book_cancel(reason)
         if self.events is not None:
             self.events.emit(self._now, rid, reason)
+        if self._subs:
+            self._notify(self._now, rid, reason)
         return True
 
     def _book_cancel(self, reason: str):

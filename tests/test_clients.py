@@ -1,0 +1,125 @@
+"""Closed-loop client-pool tests: determinism, think/session semantics,
+retry exhaustion, and a live-socket smoke run against the front door."""
+
+import asyncio
+import json
+from collections import defaultdict
+
+from repro.clients import ClientPoolConfig, run_closed_loop, run_live_pool
+from repro.config import get_config
+from repro.metrics import EventLog, check_invariants
+from repro.server import EngineServer, ServerConfig
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig
+
+CFG = get_config("granite-3-8b")
+
+
+def _engine(**kw):
+    return Engine(CFG, EngineConfig(policy="trail", hardware=HardwareSpec(),
+                                    seed=0, **kw), event_log=EventLog())
+
+
+def _by_client(stats):
+    turns = defaultdict(list)
+    for r in stats.records:
+        turns[r.client].append(r)
+    for recs in turns.values():
+        recs.sort(key=lambda r: r.turn)
+    return turns
+
+
+def test_closed_loop_determinism_under_fixed_seed():
+    """Two runs with the same seed are byte-identical: same summaries,
+    same per-record times (the virtual-time loop has no wall clock)."""
+    cfg = ClientPoolConfig(n_clients=6, requests_per_client=3,
+                           think_time_s=1.0, seed=42)
+    outs = []
+    for _ in range(2):
+        eng = _engine()
+        stats = run_closed_loop(eng, cfg)
+        check_invariants(eng.events)
+        outs.append((json.dumps(stats.summary(), sort_keys=True),
+                     [(r.client, r.turn, r.t_issue, r.t_done, r.tokens)
+                      for r in stats.records]))
+    assert outs[0] == outs[1]
+    summary = json.loads(outs[0][0])
+    assert summary["issued"] == 18
+    assert summary["finished"] == 18 and summary["lost"] == 0
+
+
+def test_closed_loop_think_time_semantics():
+    """A user never overlaps their own requests: each turn is issued at
+    (previous finish + think draw), immediately when think time is 0."""
+    for think in (0.0, 5.0):
+        stats = run_closed_loop(
+            _engine(), ClientPoolConfig(n_clients=3, requests_per_client=3,
+                                        think_time_s=think, seed=1))
+        for recs in _by_client(stats).values():
+            for prev, cur in zip(recs, recs[1:]):
+                assert prev.outcome == "finish"
+                if think == 0.0:
+                    assert cur.t_first_issue == prev.t_done
+                else:
+                    assert cur.t_first_issue > prev.t_done
+
+
+def test_session_boundaries_use_the_session_gap():
+    """With session_len=2 and a much larger session gap, the think gaps
+    at session boundaries dominate the within-session gaps."""
+    stats = run_closed_loop(
+        _engine(), ClientPoolConfig(n_clients=4, requests_per_client=6,
+                                    think_time_s=0.05, session_len=2,
+                                    session_gap_s=60.0, seed=7))
+    boundary, within = [], []
+    for recs in _by_client(stats).values():
+        for prev, cur in zip(recs, recs[1:]):
+            gap = cur.t_first_issue - prev.t_done
+            (boundary if cur.turn % 2 == 0 else within).append(gap)
+    assert boundary and within
+    assert min(boundary) > max(within)
+
+
+def test_retry_budget_exhaustion_counted_as_lost():
+    """Against an overloaded admission-controlled engine, shed requests
+    burn their retries and are recorded as lost with the fail kind."""
+    cfg = ClientPoolConfig(n_clients=6, requests_per_client=2,
+                           think_time_s=0.0, max_retries=1,
+                           retry_backoff_s=0.5, seed=3)
+    eng = _engine(shed_watermark=600.0, admission_control=True)
+    stats = run_closed_loop(eng, cfg)
+    check_invariants(eng.events)
+    summary = stats.summary()
+    assert summary["issued"] == 12
+    assert summary["finished"] + summary["lost"] == summary["issued"]
+    lost = [r for r in stats.records if r.outcome == "lost"]
+    assert lost and summary["failures"].get("shed", 0) > 0
+    for r in lost:
+        assert r.fail_kind == "shed"
+        assert r.retries == cfg.max_retries
+    # every shed event was either retried into a finish or counted lost
+    assert all(r.outcome in ("finish", "lost") for r in stats.records)
+
+
+def test_live_socket_smoke():
+    """8 socket users against a real server on localhost: every stream
+    terminates, every logical request ends finish-or-lost."""
+    async def main():
+        eng = _engine()
+        server = EngineServer(eng, ServerConfig(port=0, time_scale=50.0))
+        await server.start()
+        try:
+            cfg = ClientPoolConfig(n_clients=8, requests_per_client=2,
+                                   think_time_s=1.0, seed=0)
+            return await run_live_pool("127.0.0.1", server.port, cfg,
+                                       time_scale=50.0), eng
+        finally:
+            await server.close()
+
+    stats, eng = asyncio.run(main())
+    summary = stats.summary()
+    assert summary["issued"] == 16
+    assert all(r.outcome in ("finish", "lost") for r in stats.records)
+    assert summary["finished"] == 16 and summary["lost"] == 0
+    assert not eng.has_work()
+    check_invariants(eng.events)

@@ -1,0 +1,318 @@
+"""Front-door tests: on_token hooks, HTTP parsing, and the live server."""
+
+import asyncio
+import json
+
+import pytest
+
+from repro.config import get_config
+from repro.metrics import EventLog
+from repro.server import EngineServer, ServerConfig
+from repro.server import http as fdhttp
+from repro.serving.costmodel import HardwareSpec
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.request import Request
+from repro.serving.workload import WorkloadConfig, generate
+
+CFG = get_config("granite-3-8b")
+
+
+def _engine(**kw):
+    return Engine(CFG, EngineConfig(policy="trail", hardware=HardwareSpec(),
+                                    seed=0, **kw), event_log=EventLog())
+
+
+# ---------------------------------------------------------------------------
+# Engine.on_token: per-request ordering, terminals, auto-unsubscribe
+# ---------------------------------------------------------------------------
+
+def test_on_token_per_request_event_ordering():
+    """Each subscribed rid sees first_token -> tokens* -> finish, in
+    order, with token counts summing to the generated length."""
+    eng = _engine()
+    wc = WorkloadConfig(n_requests=6, request_rate=30.0, seed=3,
+                        vocab=CFG.vocab_size)
+    reqs = generate(wc)
+    seen = {r.rid: [] for r in reqs}
+    for r in reqs:
+        eng.submit(r)
+        eng.on_token(r.rid, lambda t, k, v, rid=r.rid:
+                     seen[rid].append((t, k, v)))
+    while eng.has_work():
+        eng.step()
+    for r in reqs:
+        kinds = [k for _, k, _ in seen[r.rid]]
+        assert kinds[0] == "first_token"
+        assert kinds[-1] == "finish"
+        assert set(kinds[1:-1]) == {"tokens"}
+        assert sum(int(v) for _, k, v in seen[r.rid] if k == "tokens") \
+            == len(r.generated)
+        times = [t for t, _, _ in seen[r.rid]]
+        assert times == sorted(times)
+    # terminal events auto-unsubscribe: the registry drains itself
+    assert eng._subs == {}
+
+
+def test_on_token_matches_event_log_order():
+    """The callback stream is exactly the event log's per-request slice
+    (for the streamed kinds) — same kinds, same order, same times."""
+    eng = _engine()
+    wc = WorkloadConfig(n_requests=5, request_rate=20.0, seed=7,
+                        vocab=CFG.vocab_size)
+    reqs = generate(wc)
+    seen = {r.rid: [] for r in reqs}
+    for r in reqs:
+        eng.submit(r)
+        eng.on_token(r.rid, lambda t, k, v, rid=r.rid:
+                     seen[rid].append((t, k)))
+    while eng.has_work():
+        eng.step()
+    per_req = eng.events.per_request()
+    streamed = ("first_token", "tokens", "finish", "cancel", "timeout",
+                "shed")
+    for r in reqs:
+        logged = [(e.t, e.kind) for e in per_req[r.rid]
+                  if e.kind in streamed]
+        assert seen[r.rid] == logged
+
+
+def test_on_token_terminal_cancel_and_timeout():
+    """Cancel kinds are delivered as the terminal callback event, for
+    both pool-resident and still-pending requests."""
+    eng = _engine()
+    events = []
+    eng.submit(Request(0, 0.0, [1] * 16, true_out_len=400))
+    eng.submit(Request(1, 500.0, [1] * 16, true_out_len=8))
+    eng.on_token(0, lambda t, k, v: events.append((0, k)))
+    eng.on_token(1, lambda t, k, v: events.append((1, k)))
+    eng.step()
+    assert eng.cancel(0, "timeout")          # admitted, running
+    assert eng.cancel(1, "shed")             # still pending
+    assert (0, "timeout") in events and (1, "shed") in events
+    assert eng._subs == {}
+    eng.off_token(0)                         # idempotent after terminal
+
+
+def test_on_token_unused_is_invisible():
+    """A run with no subscribers leaves the event stream byte-identical
+    to one that never heard of on_token (the off-is-free property)."""
+    wc = WorkloadConfig(n_requests=8, request_rate=25.0, seed=11,
+                        vocab=CFG.vocab_size)
+    logs = []
+    for subscribe in (False, True):
+        eng = _engine()
+        for r in generate(wc):
+            eng.submit(r)
+            if subscribe:
+                eng.on_token(r.rid, lambda t, k, v: None)
+        while eng.has_work():
+            eng.step()
+        logs.append([(e.t, e.rid, e.kind, e.value)
+                     for e in eng.events.events])
+    assert logs[0] == logs[1]
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer
+# ---------------------------------------------------------------------------
+
+def _feed(data: bytes):
+    reader = asyncio.StreamReader()
+    reader.feed_data(data)
+    reader.feed_eof()
+    return reader
+
+
+def test_http_parses_request():
+    async def main():
+        reader = _feed(b"POST /v1/generate?x=1 HTTP/1.1\r\n"
+                       b"Host: h\r\nContent-Length: 2\r\n\r\n{}")
+        return await fdhttp.read_request(reader)
+
+    method, path, headers, body = asyncio.run(main())
+    assert (method, path, body) == ("POST", "/v1/generate", b"{}")
+    assert headers["host"] == "h"
+
+
+def test_http_clean_eof_is_none_and_garbage_is_400():
+    async def parse(data):
+        return await fdhttp.read_request(_feed(data))
+
+    assert asyncio.run(parse(b"")) is None
+    with pytest.raises(fdhttp.HttpError) as e:
+        asyncio.run(parse(b"NOT-HTTP\r\n\r\n"))
+    assert e.value.status == 400
+    with pytest.raises(fdhttp.HttpError) as e:
+        asyncio.run(parse(b"GET / HTTP/1.1\r\nContent-Length: no\r\n\r\n"))
+    assert e.value.status == 400
+
+
+def test_http_oversized_body_is_413():
+    async def parse():
+        big = fdhttp.MAX_BODY_BYTES + 1
+        head = f"POST / HTTP/1.1\r\nContent-Length: {big}\r\n\r\n"
+        return await fdhttp.read_request(_feed(head.encode()))
+
+    with pytest.raises(fdhttp.HttpError) as e:
+        asyncio.run(parse())
+    assert e.value.status == 413
+
+
+# ---------------------------------------------------------------------------
+# Live server integration (in-process asyncio, OS-assigned port)
+# ---------------------------------------------------------------------------
+
+async def _request(port, method, path, body=b""):
+    """One plain (non-streaming) request; returns (status, json dict,
+    headers)."""
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    writer.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(body)}\r\n"
+                  f"Connection: close\r\n\r\n").encode() + body)
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    lines = head.decode().split("\r\n")
+    status = int(lines[0].split(" ")[1])
+    headers = {}
+    for line in lines[1:]:
+        name, sep, value = line.partition(":")
+        if sep:
+            headers[name.strip().lower()] = value.strip()
+    payload = json.loads(await reader.read())
+    writer.close()
+    return status, payload, headers
+
+
+async def _sse_events(reader):
+    """Collect SSE events until the terminal one (or EOF)."""
+    events = []
+    while True:
+        line = await reader.readline()
+        if not line:
+            return events
+        line = line.strip()
+        if not line.startswith(b"data: "):
+            continue
+        event = json.loads(line[6:])
+        events.append(event)
+        if event["event"] in ("finish", "cancel", "timeout", "shed"):
+            return events
+
+
+async def _generate_stream(port, payload):
+    reader, writer = await asyncio.open_connection("127.0.0.1", port)
+    body = json.dumps(payload).encode()
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                  f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    assert b"200" in head.split(b"\r\n")[0]
+    events = await _sse_events(reader)
+    writer.close()
+    return events
+
+
+def _serve(coro_fn, skw=None, **ekw):
+    """Run one test body against a started server, then tear down."""
+    async def main():
+        eng = _engine(**ekw)
+        server = EngineServer(
+            eng, ServerConfig(**{"port": 0, "time_scale": 200.0,
+                                 **(skw or {})}))
+        await server.start()
+        try:
+            return await coro_fn(server, eng)
+        finally:
+            await server.close()
+
+    return asyncio.run(main())
+
+
+def test_server_healthz_404_and_bad_json():
+    async def body(server, eng):
+        status, payload, _ = await _request(server.port, "GET", "/healthz")
+        assert status == 200 and payload["accepted"] == 0
+        status, payload, _ = await _request(server.port, "GET", "/nope")
+        assert status == 404
+        status, payload, _ = await _request(server.port, "POST",
+                                            "/v1/generate", b"{not json")
+        assert status == 400 and "error" in payload
+
+    _serve(body)
+
+
+def test_server_streams_tokens_to_finish():
+    async def body(server, eng):
+        events = await _generate_stream(
+            server.port, {"prompt_tokens": 16, "out_tokens": 6})
+        kinds = [e["event"] for e in events]
+        assert kinds[0] == "accepted"
+        assert kinds[1] == "first_token"
+        assert kinds[-1] == "finish"
+        assert sum(e.get("n", 0) for e in events
+                   if e["event"] == "tokens") == 6
+        status, payload, _ = await _request(server.port, "GET", "/metrics")
+        assert status == 200 and payload["requests"]["finished"] == 1
+
+    _serve(body)
+
+
+def test_server_deadline_maps_to_timeout_event():
+    async def body(server, eng):
+        events = await _generate_stream(
+            server.port,
+            {"prompt_tokens": 16, "out_tokens": 500, "timeout_s": 2.0})
+        assert events[-1]["event"] == "timeout"
+        assert eng.stats.n_timeouts == 1
+
+    _serve(body)
+
+
+def test_server_backpressure_429_with_retry_after():
+    async def body(server, eng):
+        # park one long request: its predicted backlog (~450 tokens)
+        # sits above the door's admit watermark for the whole decode,
+        # so the next knock is rejected while the stream keeps running
+        reader, writer = await asyncio.open_connection(
+            "127.0.0.1", server.port)
+        body1 = json.dumps({"prompt_tokens": 64, "out_tokens": 500}).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(body1)}\r\n\r\n").encode()
+                     + body1)
+        await writer.drain()
+        await reader.readuntil(b"\r\n\r\n")     # wait until accepted
+        await reader.readline()
+        status, payload, headers = await _request(
+            server.port, "POST", "/v1/generate",
+            json.dumps({"prompt_tokens": 8}).encode())
+        assert status == 429
+        assert "retry-after" in headers
+        assert int(headers["retry-after"]) >= 1
+        assert payload["error"] == "overloaded"
+        assert server.n_rejected == 1
+        writer.close()
+
+    _serve(body, skw={"admit_watermark": 250.0, "time_scale": 20.0})
+
+
+def test_server_client_disconnect_cancels_request():
+    async def body(server, eng):
+        reader, writer = await asyncio.open_connection(
+            "127.0.0.1", server.port)
+        payload = json.dumps({"prompt_tokens": 16,
+                              "out_tokens": 500}).encode()
+        writer.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                      f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                     + payload)
+        await writer.drain()
+        await reader.readuntil(b"\r\n\r\n")
+        await reader.readline()                 # at least the accept event
+        writer.close()                          # user walks away
+        for _ in range(200):
+            if eng.stats.n_cancelled:
+                break
+            await asyncio.sleep(0.02)
+        assert eng.stats.n_cancelled == 1
+        assert not eng.has_work()
+
+    _serve(body)

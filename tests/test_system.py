@@ -121,6 +121,18 @@ def test_serve_cli_invalid_flags_exit_2():
         ["--admission-control"],                     # needs watermark
         ["--age-boost", "-1"],                       # negative knob
         ["--deadline-slack", "5"],                   # needs --deadline
+        ["--port", "8100"],                          # needs --serve
+        ["--serve", "--port", "99999"],              # port out of range
+        ["--time-scale", "20"],                      # needs --serve
+        ["--serve", "--time-scale", "0"],            # must be positive
+        ["--clients", "0"],                          # must be positive
+        ["--think-time", "1.0"],                     # needs --clients
+        ["--clients", "4", "--think-time", "-1"],    # negative think time
+        ["--requests-per-client", "2"],              # needs --clients
+        ["--serve", "--trace", "sample"],            # serve is closed-loop
+        ["--clients", "4", "--disagg", "1:3"],       # no disagg front door
+        ["--serve", "--replicas", "2"],              # single engine only
+        ["--serve", "--metrics-out", "m.json"],      # GET /metrics instead
     ]
     for argv in cases:
         out = subprocess.run(
